@@ -1,0 +1,127 @@
+"""Microbenchmarks for the paper's §3 programming constructs (Tier J).
+
+The paper has no numeric tables — its claims are the constructs themselves
+— so the benchmark suite is one benchmark per construct, reporting
+us_per_call and a derived throughput (elements/s), plus the Tier D (real
+disk) twins where streaming I/O is the point.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import array as RA
+from repro.core import constructs as C
+from repro.core import hashtable as HT
+from repro.core import rlist as RL
+
+
+def timeit(fn: Callable, reps: int = 5) -> float:
+    fn()                                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def bench_constructs(n: int = 1 << 15) -> List[Tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    data2 = jax.random.randint(key, (n, 2), 0, n // 4).astype(jnp.uint32)
+    rl = RL.from_rows(data2, capacity=2 * n)
+
+    # map (vectorized user fn over every element)
+    f_map = jax.jit(lambda l: RL.map_rows(l, lambda r: r[0] ^ r[1]))
+    us = timeit(lambda: f_map(rl).block_until_ready())
+    rows.append(("construct_map", us, f"{n/us*1e6:.3g} elt/s"))
+
+    # reduce (sum of squares — the paper's example)
+    f_red = jax.jit(lambda l: RL.reduce(
+        l, lambda r: (r[0] * r[0]).astype(jnp.uint32),
+        lambda a, b: a + b, jnp.uint32(0)))
+    us = timeit(lambda: f_red(rl).block_until_ready())
+    rows.append(("construct_reduce", us, f"{n/us*1e6:.3g} elt/s"))
+
+    # removeDupes
+    f_dup = jax.jit(RL.remove_dupes)
+    us = timeit(lambda: f_dup(rl).count.block_until_ready())
+    rows.append(("construct_removeDupes", us, f"{n/us*1e6:.3g} elt/s"))
+
+    # set ops (union via addAll+removeDupes)
+    other = RL.from_rows(
+        jax.random.randint(jax.random.PRNGKey(1), (n, 2), 0,
+                           n // 4).astype(jnp.uint32), capacity=2 * n)
+    f_union = jax.jit(C.set_union)
+    us = timeit(lambda: f_union(rl, other).count.block_until_ready())
+    rows.append(("construct_set_union", us, f"{2*n/us*1e6:.3g} elt/s"))
+
+    f_diff = jax.jit(C.set_difference)
+    us = timeit(lambda: f_diff(rl, other).count.block_until_ready())
+    rows.append(("construct_set_difference", us, f"{2*n/us*1e6:.3g} elt/s"))
+
+    # native RoomySet (paper's planned primitive) vs the 3-temporary recipe
+    from repro.core import rset as RS
+    sa = RS.from_list(rl)
+    sb = RS.from_list(other)
+    f_int_recipe = jax.jit(C.set_intersection)
+    us = timeit(lambda: f_int_recipe(rl, other).count.block_until_ready())
+    rows.append(("set_intersection_recipe_3temp", us, f"{2*n/us*1e6:.3g} elt/s"))
+    f_int_native = jax.jit(RS.intersection)
+    us = timeit(lambda: f_int_native(sa, sb).count.block_until_ready())
+    rows.append(("set_intersection_native_RoomySet", us,
+                 f"{2*n/us*1e6:.3g} elt/s"))
+
+    # chain reduction (delayed update + sync scatter-gather)
+    a = jnp.arange(n, dtype=jnp.int32)
+    ra = RA.make(a, queue_capacity=n, payload_dtype=jnp.int32)
+    f_chain = jax.jit(lambda r: C.chain_reduce(r, lambda o, p: o + p))
+    us = timeit(lambda: f_chain(ra).data.block_until_ready())
+    rows.append(("construct_chain_reduction", us, f"{n/us*1e6:.3g} elt/s"))
+
+    # parallel prefix (log-rounds of chain reduction)
+    f_pp = jax.jit(lambda r: C.parallel_prefix(r, lambda o, p: o + p))
+    us = timeit(lambda: f_pp(ra).data.block_until_ready())
+    rows.append(("construct_parallel_prefix", us, f"{n/us*1e6:.3g} elt/s"))
+
+    # pair reduction (blocked streaming over N² pairs; smaller N)
+    m = 1 << 10
+    rb = RA.make(jnp.arange(m, dtype=jnp.int32), queue_capacity=1)
+    f_pair = jax.jit(lambda r: C.pair_reduce(
+        r, lambda x, y: (x * y).astype(jnp.int32), lambda p, q: p + q,
+        jnp.int32(0), block=128))
+    us = timeit(lambda: f_pair(rb).block_until_ready())
+    rows.append(("construct_pair_reduction", us,
+                 f"{m*m/us*1e6:.3g} pair/s"))
+
+    # hashtable sync (delayed inserts → sorted-merge batch)
+    ht = HT.make(capacity=2 * n, key_width=1, queue_capacity=n,
+                 val_dtype=jnp.int32)
+    keys = jax.random.randint(key, (n, 1), 0, n).astype(jnp.uint32)
+    vals = jnp.arange(n, dtype=jnp.int32)
+
+    def ht_roundtrip():
+        h, _ = HT.insert(ht, keys, vals)
+        h, _ = HT.sync(h, combine=lambda a, b: a + b,
+                       apply=lambda o, g, p: jnp.where(p, o + g, g))
+        return h.count
+
+    f_ht = jax.jit(ht_roundtrip)
+    us = timeit(lambda: f_ht().block_until_ready())
+    rows.append(("hashtable_insert_sync", us, f"{n/us*1e6:.3g} op/s"))
+
+    # RoomyArray delayed-update sync (the bucket_scatter pattern)
+    idx = jax.random.randint(key, (n,), 0, n).astype(jnp.int32)
+    pay = jnp.ones((n,), jnp.int32)
+
+    def ra_roundtrip():
+        r, _ = RA.update(RA.make(a, n, payload_dtype=jnp.int32), idx, pay)
+        return RA.sync(r, lambda p, q: p + q, lambda o, g: o + g).data
+
+    f_ra = jax.jit(ra_roundtrip)
+    us = timeit(lambda: f_ra().block_until_ready())
+    rows.append(("array_update_sync", us, f"{n/us*1e6:.3g} op/s"))
+    return rows

@@ -1,0 +1,65 @@
+"""Host-scale LM step benchmarks: train-step and decode-step wall time for
+each family's smoke config (throughput sanity + regression tracking; the
+production numbers are the dry-run roofline, not these)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, init_params, loss_fn, make_cache
+
+FAMILIES = ["minicpm-2b", "phi3.5-moe-42b-a6.6b", "falcon-mamba-7b",
+            "zamba2-1.2b", "gemma2-2b"]
+
+
+def bench_lm_steps(b: int = 4, s: int = 64) -> List[Tuple[str, float, str]]:
+    rows = []
+    for arch in FAMILIES:
+        cfg = get_config(arch, smoke=True).replace(kernels="ref")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)),
+                           jnp.int32)
+        pos = jnp.tile(jnp.arange(s)[None], (b, 1))
+        if cfg.mrope:
+            pos = jnp.tile(pos[:, :, None], (1, 1, 3))
+        inputs = {"positions": pos}
+        if cfg.frontend_stub:
+            inputs["embeds"] = jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+        else:
+            inputs["tokens"] = toks[:, :s]
+        batch = {"inputs": inputs, "labels": toks[:, 1:]}
+
+        step = jax.jit(jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg)))
+        step(params)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            step(params)[0].block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"train_step_{arch}", us,
+                     f"{b*s/us*1e6:.3g} tok/s (smoke cfg)"))
+
+        caches = make_cache(cfg, b, max_len=s + 8)
+        dec_in = {"positions": pos[:, :1]}
+        if cfg.frontend_stub:
+            dec_in["embeds"] = inputs["embeds"][:, :1]
+        else:
+            dec_in["tokens"] = toks[:, :1]
+        dec = jax.jit(lambda p, i, c: decode_step(p, i, c, cfg))
+        lg, caches2 = dec(params, dec_in, caches)
+        lg.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            lg, _ = dec(params, dec_in, caches)
+            lg.block_until_ready()
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"decode_step_{arch}", us,
+                     f"{b/us*1e6:.3g} tok/s (smoke cfg)"))
+    return rows

@@ -1,0 +1,46 @@
+"""Benchmark harness — one family per paper construct/claim.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract). Sections:
+  constructs   paper §3 programming constructs on Tier J
+  pancake      the paper's flagship BFS app, tier J vs real-disk vs oracle
+  disk         Tier-D streaming primitives (external sort, merge, reduce)
+  moe          Roomy dispatch vs einsum baseline (8 fake devices)
+  lm           per-family train/decode step wall times (smoke configs)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=("constructs", "pancake", "disk",
+                                       "moe", "lm"))
+    ap.add_argument("--pancake-n", type=int, default=7)
+    args = ap.parse_args()
+
+    from . import constructs, disk_tier, lm_step, moe_dispatch, pancake
+
+    sections = {
+        "constructs": lambda: constructs.bench_constructs(),
+        "pancake": lambda: pancake.bench_pancake(args.pancake_n),
+        "disk": lambda: disk_tier.bench_disk(),
+        "moe": lambda: moe_dispatch.bench_moe_dispatch(),
+        "lm": lambda: lm_step.bench_lm_steps(),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                sys.stdout.flush()
+        except Exception as e:                # a failed section must not
+            print(f"{name}_FAILED,0,{e!r}")   # hide the others
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Quickstart: the Roomy programming model in 5 minutes.
+
+Walks the paper's API on both tiers:
+  Tier J (device arrays)  — repro.core
+  Tier D (real disk)      — repro.core.disk
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import array as RA
+from repro.core import constructs as C
+from repro.core import hashtable as HT
+from repro.core import rlist as RL
+from repro.core.disk import DiskList
+
+
+def tier_j_tour():
+    print("== Tier J (device) ==")
+    # RoomyList: multiset with streaming dedup / difference
+    rl = RL.from_rows(jnp.array([[3], [1], [3], [7], [1]], jnp.uint32),
+                      capacity=16)
+    print("size:", int(rl.count))
+    rl = RL.remove_dupes(rl)
+    print("after removeDupes:", sorted(RL.to_numpy(rl)[:, 0].tolist()))
+
+    # paper's reduce example: sum of squares
+    s = RL.reduce(rl, lambda r: (r[0] * r[0]).astype(jnp.uint32),
+                  lambda a, b: a + b, jnp.uint32(0))
+    print("sum of squares:", int(s))
+
+    # RoomyArray: delayed updates + sync (scatter-gather)
+    ra = RA.make(jnp.zeros(8, jnp.int32), queue_capacity=16,
+                 payload_dtype=jnp.int32)
+    ra, _ = RA.update(ra, jnp.array([2, 2, 5], jnp.int32),
+                      jnp.array([10, 20, 7], jnp.int32))
+    ra = RA.sync(ra, combine=lambda a, b: a + b,
+                 apply=lambda old, agg: old + agg)
+    print("array after sync:", np.asarray(ra.data).tolist())
+
+    # chain reduction (paper §3): a[i] += a[i-1], old values throughout
+    ra2 = RA.make(jnp.arange(6, dtype=jnp.int32), queue_capacity=8,
+                  payload_dtype=jnp.int32)
+    ra2 = C.chain_reduce(ra2, lambda old, prev: old + prev)
+    print("chain reduction:", np.asarray(ra2.data).tolist())
+
+    # RoomyHashTable: delayed inserts merged at sync
+    ht = HT.make(capacity=16, key_width=1, queue_capacity=8,
+                 val_dtype=jnp.int32)
+    ht, _ = HT.insert(ht, jnp.array([[5], [9], [5]], jnp.uint32),
+                      jnp.array([1, 2, 3], jnp.int32))
+    ht, _ = HT.sync(ht, combine=lambda a, b: a + b,
+                    apply=lambda o, g, p: jnp.where(p, o + g, g))
+    vals, found = HT.lookup(ht, jnp.array([[5], [9], [0]], jnp.uint32))
+    print("hashtable lookups:", np.asarray(vals).tolist(),
+          np.asarray(found).tolist())
+
+
+def tier_d_tour():
+    print("\n== Tier D (real disk, streaming) ==")
+    with tempfile.TemporaryDirectory() as wd:
+        dl = DiskList(wd, width=1, chunk_rows=1024)   # tiny chunks
+        rng = np.random.default_rng(0)
+        dl.add(rng.integers(0, 5000, (20_000, 1)).astype(np.uint32))
+        print("disk list size:", dl.size())
+        dl.remove_dupes(run_rows=2048)                # external merge sort
+        print("unique elements:", dl.size())
+        total = dl.reduce(lambda c: int(c[:, 0].astype(np.int64).sum()),
+                          lambda a, b: a + b, 0)
+        print("streaming reduce (sum):", total)
+        dl.destroy()
+
+
+if __name__ == "__main__":
+    tier_j_tour()
+    tier_d_tour()

@@ -1,0 +1,50 @@
+"""Batched serving demo: continuous batching over Roomy paged KV caches.
+
+Eight requests with staggered lengths stream through a 4-slot server; the
+scheduler admits waiting requests as slots free up. Works for any
+token-input arch:
+
+  PYTHONPATH=src python examples/serve_lm.py --arch minicpm-2b
+  PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime import Request, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True).replace(kernels="ref")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    server = Server(cfg, params, max_batch=args.max_batch, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        4 + i % 5).tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    outs = server.run(reqs)
+    dt = time.perf_counter() - t0
+    for rid in sorted(outs):
+        print(f"req {rid}: {outs[rid][:10]}{'...' if args.max_new > 10 else ''}")
+    total = sum(len(v) for v in outs.values())
+    print(f"\n{total} tokens in {dt:.2f}s = {total/dt:.1f} tok/s | "
+          f"stats {server.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — Roomy-JAX: space-limited computation as a first-class feature
+of a multi-pod JAX training/serving framework. See DESIGN.md."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+"""Atomic sharded checkpointing with async writes and elastic restore."""
+from .manager import AsyncCheckpointer, latest_step, restore, save
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,6 @@
+"""Per-architecture configs (one module per assigned arch) + registry."""
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, ShapeSpec, shape_applicable
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "all_configs", "get_config",
+           "shape_applicable"]

@@ -1,0 +1,79 @@
+"""Input stand-ins per (arch × shape): ShapeDtypeStructs for the dry-run
+and concrete arrays for smoke tests — weak-type-correct, shardable, no
+device allocation on the specs path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+from .shapes import ShapeSpec
+
+
+def _pos_shape(cfg: ModelConfig, b: int, s: int) -> Tuple[int, ...]:
+    return (b, s, 3) if cfg.mrope else (b, s)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct tree for the step inputs of this cell.
+
+    train   → {"inputs": …, "labels": …}            (feeds train_step)
+    prefill → {"inputs": …}                          (feeds prefill)
+    decode  → {"inputs": one-token, "caches": …}     (feeds decode_step)
+    """
+    sds = jax.ShapeDtypeStruct
+    b = shape.global_batch
+    dtype = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        s = shape.seq_len
+        inputs = {"positions": sds(_pos_shape(cfg, b, s), jnp.int32)}
+        if cfg.frontend_stub:
+            inputs["embeds"] = sds((b, s, cfg.d_model), dtype)
+        else:
+            inputs["tokens"] = sds((b, s), jnp.int32)
+        if shape.kind == "train":
+            return {"inputs": inputs, "labels": sds((b, s), jnp.int32)}
+        return {"inputs": inputs}
+
+    # decode: one new token against a seq_len-deep cache
+    inputs = {"positions": sds(_pos_shape(cfg, b, 1), jnp.int32)}
+    if cfg.frontend_stub:
+        inputs["embeds"] = sds((b, 1, cfg.d_model), dtype)
+    else:
+        inputs["tokens"] = sds((b, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: lm.make_cache(cfg, b, max_len=shape.seq_len))
+    return {"inputs": inputs, "caches": caches}
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> Dict:
+    """Concrete (host numpy) inputs matching input_specs — smoke scale only."""
+    rng = np.random.default_rng(seed)
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+
+    def pos(b_, s_):
+        p = np.tile(np.arange(s_, dtype=np.int32)[None], (b_, 1))
+        return np.tile(p[:, :, None], (1, 1, 3)) if cfg.mrope else p
+
+    inputs = {"positions": pos(b, s)}
+    if cfg.frontend_stub:
+        inputs["embeds"] = rng.standard_normal(
+            (b, s, cfg.d_model)).astype(np.float32) * 0.02
+    else:
+        inputs["tokens"] = rng.integers(
+            0, cfg.vocab_size, (b, s)).astype(np.int32)
+    if shape.kind == "train":
+        return {"inputs": inputs,
+                "labels": rng.integers(0, cfg.vocab_size,
+                                       (b, s)).astype(np.int32)}
+    if shape.kind == "prefill":
+        return {"inputs": inputs}
+    return {"inputs": inputs,
+            "caches": lm.make_cache(cfg, b, max_len=shape.seq_len)}

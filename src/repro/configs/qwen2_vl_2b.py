@@ -1,0 +1,22 @@
+"""qwen2-vl-2b [vlm] — M-RoPE backbone; vision frontend stubbed.
+
+[arXiv:2409.12191; hf] 28L d1536 12H (kv=2, head_dim 128) d_ff 8960,
+vocab 151936. M-RoPE: head_dim/2 = 64 rotary pairs split (16, 24, 24)
+across (temporal, height, width) position streams; input_specs() provides
+patch embeddings + 3-row positions (frontend stub per assignment).
+"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, head_dim=128,
+    d_ff=8960, vocab_size=151936,
+    mrope=True, mrope_sections=(16, 24, 24),
+    mlp_act="silu", mlp_gated=True, tie_embeddings=True,
+    frontend_stub=True,
+)
+
+SMOKE = FULL.replace(
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=173, mrope_sections=(2, 3, 3), dtype="float32",
+)

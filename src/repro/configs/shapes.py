@@ -1,0 +1,33 @@
+"""Assigned input-shape set (same four shapes for every LM arch).
+
+``train_4k``/``prefill_32k`` lower ``train_step``/``prefill``;
+``decode_32k``/``long_500k`` lower ``serve_step`` (one new token against a
+KV cache of seq_len). ``long_500k`` requires sub-quadratic attention → it
+only runs for the ssm/hybrid archs (DESIGN.md §6 skip table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(shape: ShapeSpec, family: str) -> bool:
+    """long_500k needs sub-quadratic attention: ssm/hybrid only."""
+    if shape.name == "long_500k":
+        return family in ("ssm", "hybrid")
+    return True

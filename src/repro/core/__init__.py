@@ -1,0 +1,22 @@
+"""repro.core — the Roomy programming model in JAX (Tier J).
+
+See DESIGN.md. Submodules:
+
+  types       element codecs, sentinels, sort/segment helpers
+  rlist       RoomyList        (unordered multiset)
+  rset        RoomySet         (native sorted-unique set — paper's §3 roadmap)
+  array       RoomyArray       (delayed access/update + sync)
+  hashtable   RoomyHashTable   (delayed insert/remove/update + sync)
+  delayed     BucketExchange — delayed-op engine over a mesh axis
+  constructs  map/reduce/set-ops/chain/prefix/pair/BFS (paper §3)
+  sharding    owner maps + mesh placement helpers
+  paged       Roomy paged-KV store for long-context decode
+  disk        Tier D — the paper-faithful out-of-core implementation
+"""
+from . import (array, constructs, delayed, hashtable, paged, rlist, rset,
+               sharding, types)
+
+__all__ = [
+    "array", "constructs", "delayed", "hashtable", "paged", "rlist",
+    "rset", "sharding", "types",
+]

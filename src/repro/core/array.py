@@ -1,0 +1,150 @@
+"""RoomyArray — fixed-size indexed array with *delayed* access/update ops.
+
+This is the paper's workhorse structure: random-access ``update(i, payload,
+fn)`` / ``access(i, ctx, fn)`` operations are queued, and ``sync`` executes
+the whole batch as one streaming pass:
+
+    sort queue by index  →  segment-combine payloads per index
+                         →  apply(old, aggregate) at each touched index.
+
+That sort+segment+scatter pipeline is exactly Roomy's scatter-gather; on the
+sharded path the sort is replaced by the bucket exchange in ``delayed.py``
+and the apply phase is the ``bucket_scatter`` Pallas kernel.
+
+Unlike RoomyList, elements here can be any dtype/shape (the LM framework
+stores embedding rows and KV pages in RoomyArrays).
+
+Determinism note (paper §3 "chain reduction"): sync applies updates against
+the *old* array state only — queued updates never observe each other's
+writes, so constructs like chain reduction are deterministic.  Multiple
+updates hitting one index are merged with ``combine``, which therefore must
+be associative+commutative (the paper's reduce-style contract).
+
+``predicateCount`` is maintained *incrementally* during sync (the paper
+stresses it needs no separate scan): sync adjusts the count by
+Σ pred(new) − Σ pred(old) over touched slots.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+class RoomyArray(NamedTuple):
+    data: jax.Array      # (n, *elt_shape)
+    q_idx: jax.Array     # (qcap,) int32 — target index, ==n for empty slots
+    q_pay: jax.Array     # (qcap, *pay_shape)
+    q_n: jax.Array       # () int32
+    pcount: jax.Array    # () int32 — live predicate count (0 if unused)
+
+    @property
+    def size(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def queue_capacity(self) -> int:
+        return self.q_idx.shape[0]
+
+
+def make(
+    data: jax.Array,
+    queue_capacity: int,
+    payload_shape: tuple = (),
+    payload_dtype=jnp.uint32,
+    pred: Optional[Callable] = None,
+) -> RoomyArray:
+    n = data.shape[0]
+    q_idx = jnp.full((queue_capacity,), n, jnp.int32)
+    q_pay = jnp.zeros((queue_capacity,) + payload_shape, payload_dtype)
+    if pred is not None:
+        pcount = jnp.sum(jax.vmap(pred)(data).astype(jnp.int32))
+    else:
+        pcount = jnp.zeros((), jnp.int32)
+    return RoomyArray(data, q_idx, q_pay, jnp.zeros((), jnp.int32), pcount)
+
+
+def update(ra: RoomyArray, idx: jax.Array, payload: jax.Array,
+           valid: jax.Array | None = None):
+    """Queue a batch of delayed updates. Returns (array, overflow)."""
+    if valid is None:
+        valid = jnp.ones(idx.shape, bool)
+    qcap = ra.queue_capacity
+    dest = ra.q_n + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid, dest, qcap)
+    q_idx = ra.q_idx.at[dest].set(idx.astype(jnp.int32), mode="drop")
+    q_pay = ra.q_pay.at[dest].set(payload.astype(ra.q_pay.dtype), mode="drop")
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    overflow = ra.q_n + nvalid > qcap
+    q_n = jnp.minimum(ra.q_n + nvalid, qcap)
+    return ra._replace(q_idx=q_idx, q_pay=q_pay, q_n=q_n), overflow
+
+
+def access(ra: RoomyArray, idx: jax.Array) -> jax.Array:
+    """Batched random read (the resolved form of delayed access ops)."""
+    return ra.data[idx]
+
+
+def sync(
+    ra: RoomyArray,
+    combine: Callable,
+    apply: Callable,
+    pred: Optional[Callable] = None,
+) -> RoomyArray:
+    """Execute all queued updates in one streaming batch.
+
+    combine(p1, p2): associative+commutative merge of two payloads aimed at
+        the same index (both vectorized over a leading axis).
+    apply(old_elt, agg_payload) -> new_elt: applied once per touched index.
+    pred: if given, the live predicate count is maintained incrementally.
+    """
+    n = ra.size
+    qcap = ra.queue_capacity
+    in_q = jnp.arange(qcap) < ra.q_n
+    idx = jnp.where(in_q, ra.q_idx, n)            # park empties at n
+    order = jnp.argsort(idx, stable=True)
+    idx_s = idx[order]
+    pay_s = ra.q_pay[order]
+    starts = jnp.concatenate(
+        [jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]]
+    )
+    agg = T.segmented_reduce_last(pay_s, starts, combine)
+    # Segment totals live at the *last* slot of each segment.
+    last = jnp.concatenate([idx_s[1:] != idx_s[:-1], jnp.ones((1,), bool)])
+    target = jnp.where(last & (idx_s < n), idx_s, n)
+    old = ra.data[jnp.minimum(target, n - 1)]
+    new = apply(old, agg)
+    data = ra.data.at[target].set(new.astype(ra.data.dtype), mode="drop")
+    pcount = ra.pcount
+    if pred is not None:
+        touched = target < n
+        po = jax.vmap(pred)(old) & touched
+        pn = jax.vmap(pred)(new) & touched
+        pcount = pcount + jnp.sum(pn.astype(jnp.int32)) - jnp.sum(po.astype(jnp.int32))
+    q_idx = jnp.full((qcap,), n, jnp.int32)
+    q_pay = jnp.zeros_like(ra.q_pay)
+    return RoomyArray(data, q_idx, q_pay, jnp.zeros((), jnp.int32), pcount)
+
+
+def map_elements(ra: RoomyArray, fn: Callable) -> jax.Array:
+    """Paper's map: fn(index, element) vectorized over the whole array."""
+    return jax.vmap(fn)(jnp.arange(ra.size), ra.data)
+
+
+def map_update(ra: RoomyArray, fn: Callable) -> RoomyArray:
+    """In-place streaming transform: data[i] = fn(i, data[i])."""
+    new = jax.vmap(fn)(jnp.arange(ra.size), ra.data)
+    return ra._replace(data=new.astype(ra.data.dtype))
+
+
+def reduce(ra: RoomyArray, elt_fn: Callable, merge_fn: Callable, identity):
+    vals = jax.vmap(elt_fn)(jnp.arange(ra.size), ra.data)
+    return T.tree_reduce(vals, merge_fn, identity)
+
+
+def predicate_count(ra: RoomyArray) -> jax.Array:
+    """The incrementally-maintained count (see module docstring)."""
+    return ra.pcount

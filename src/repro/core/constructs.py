@@ -1,0 +1,206 @@
+"""The paper's §3 programming constructs, built on the Roomy primitives.
+
+map / reduce are primitives (rlist.py, array.py); here we provide:
+
+  set operations    union / difference / intersection (paper's recipes,
+                    including the 3-temporary intersection)
+  chain reduction   a[i] = f(a[i], a[i-1]) via delayed updates — reads all
+                    old values before any write (deterministic, §3)
+  parallel prefix   log-round chain reductions with stride doubling
+  pair reduction    blocked streaming over all N² pairs
+  BFS               level-synchronous frontier expansion with the paper's
+                    exact dedup loop, plus Python-level capacity growth
+                    (the static-shape adaptation of "dynamically sized")
+
+Everything below is jit-compatible except the BFS driver loop, which is a
+Python loop over levels (level count is data-dependent) — the same
+structure as the paper's ``while (RoomyList_size(cur))``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import array as RA
+from . import rlist as RL
+from . import types as T
+
+
+# ---------------------------------------------------------------- set ops
+
+def set_union(a: RL.RoomyList, b: RL.RoomyList) -> RL.RoomyList:
+    """A = A ∪ B   (paper: addAll + removeDupes)."""
+    out, _ = RL.add_all(a, b)
+    return RL.remove_dupes(out)
+
+
+def set_difference(a: RL.RoomyList, b: RL.RoomyList) -> RL.RoomyList:
+    """A = A − B   (paper: removeAll; assumes a, b are sets)."""
+    return RL.remove_all(a, b)
+
+
+def set_intersection(a: RL.RoomyList, b: RL.RoomyList,
+                     capacity: int | None = None) -> RL.RoomyList:
+    """C = A ∩ B via the paper's recipe: (A+B) − (A−B) − (B−A)."""
+    cap = capacity or (a.capacity + b.capacity)
+    a_and_b = RL.make(cap, a.width)
+    a_and_b, _ = RL.add_all(a_and_b, a)
+    a_and_b, _ = RL.add_all(a_and_b, b)
+    a_and_b = RL.remove_dupes(a_and_b)
+    a_minus_b = RL.remove_all(a, b)
+    b_minus_a = RL.remove_all(b, a)
+    c = RL.make(cap, a.width)
+    c, _ = RL.add_all(c, a_and_b)
+    c = RL.remove_all(c, a_minus_b)
+    c = RL.remove_all(c, b_minus_a)
+    return c
+
+
+# ------------------------------------------------------- chain reduction
+
+def chain_reduce(ra: RA.RoomyArray, combine: Callable) -> RA.RoomyArray:
+    """a[i] = combine(a[i], a[i-1]) for i in 1..N-1, old values throughout.
+
+    Paper §3: map over the array issues update(i+1, val_i); sync applies
+    them against the old state (scatter-gather).
+    """
+    n = ra.size
+    idx = jnp.arange(n, dtype=jnp.int32) + 1          # i-1 → i
+    valid = idx < n
+    ra, _ = RA.update(ra, idx, ra.data, valid)
+    return RA.sync(ra, combine=lambda p, q: p, apply=lambda old, pay: combine(old, pay))
+
+
+def parallel_prefix(ra: RA.RoomyArray, combine: Callable) -> RA.RoomyArray:
+    """Inclusive scan via log₂N chain reductions with stride doubling."""
+    n = ra.size
+    k = 1
+    while k < n:
+        idx = jnp.arange(n, dtype=jnp.int32) + k
+        valid = idx < n
+        ra, _ = RA.update(ra, idx, ra.data, valid)
+        ra = RA.sync(ra, combine=lambda p, q: p,
+                     apply=lambda old, pay: combine(old, pay))
+        k *= 2
+    return ra
+
+
+# -------------------------------------------------------- pair reduction
+
+def pair_reduce(ra: RA.RoomyArray, pair_fn: Callable, merge_fn: Callable,
+                identity, block: int = 256):
+    """Fold pair_fn(a[i], a[j]) over all N² ordered pairs.
+
+    Streaming block×block evaluation — the batched form of the paper's
+    map-issuing-accesses pattern (each outer block's delayed accesses to the
+    whole array are served one inner block at a time).
+    """
+    n = ra.size
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    data = jnp.concatenate([ra.data, jnp.zeros((pad,) + ra.data.shape[1:],
+                                               ra.data.dtype)], axis=0)
+    valid = jnp.arange(nblocks * block) < n
+    data_b = data.reshape((nblocks, block) + ra.data.shape[1:])
+    valid_b = valid.reshape(nblocks, block)
+
+    def outer(acc, ob):
+        o_dat, o_val = ob
+
+        def inner(acc2, ib):
+            i_dat, i_val = ib
+            vals = jax.vmap(lambda x: jax.vmap(lambda y: pair_fn(x, y))(i_dat))(o_dat)
+            mask = (o_val[:, None] & i_val[None, :])
+            mask = mask.reshape(mask.shape + (1,) * (vals.ndim - 2))
+            vals = jnp.where(mask, vals, jnp.asarray(identity, vals.dtype))
+            flat = vals.reshape((-1,) + vals.shape[2:])
+            return merge_fn(acc2, T.tree_reduce(flat, merge_fn, identity)), None
+
+        acc, _ = jax.lax.scan(inner, acc, (data_b, valid_b))
+        return acc, None
+
+    init = jnp.asarray(identity)
+    acc, _ = jax.lax.scan(outer, init, (data_b, valid_b))
+    return acc
+
+
+# ------------------------------------------------------------------- BFS
+
+class BFSResult:
+    def __init__(self):
+        self.level_sizes: List[int] = []
+        self.all: RL.RoomyList | None = None
+        self.levels_run: int = 0
+
+
+def _bfs_level(cur: RL.RoomyList, all_lst: RL.RoomyList, gen_next: Callable,
+               fanout: int, next_cap: int):
+    """One level: expand cur, dedup within level, dedup against all, fold in.
+
+    gen_next(row) -> (rows (fanout, w), valid (fanout,)). Jitted per shape.
+    """
+    nbr_rows, nbr_valid = jax.vmap(gen_next)(cur.data)
+    nbr_valid = nbr_valid & RL.valid_mask(cur)[:, None]
+    nxt = RL.make(next_cap, cur.width)
+    nxt, overflow = RL.add(nxt, nbr_rows.reshape(-1, cur.width),
+                           nbr_valid.reshape(-1))
+    nxt = RL.remove_dupes(nxt)                 # dedup within level
+    nxt = RL.remove_all(nxt, all_lst)          # dedup against previous levels
+    all2, ov2 = RL.add_all(all_lst, nxt)       # record new elements
+    return nxt, all2, overflow | ov2
+
+
+def breadth_first_search(
+    start_rows,
+    gen_next: Callable,
+    fanout: int,
+    width: int,
+    all_capacity: int,
+    level_capacity: int,
+    max_levels: int = 1_000,
+) -> BFSResult:
+    """Paper §3 BFS over an implicit graph, with capacity growth on overflow.
+
+    The per-level step is jitted; capacities double (Python level) whenever
+    a level overflows — the static-shape equivalent of Roomy's dynamically
+    sized lists.
+    """
+    start_rows = jnp.asarray(start_rows, jnp.uint32).reshape(-1, width)
+    all_lst = RL.make(all_capacity, width)
+    all_lst, _ = RL.add(all_lst, start_rows)
+    cur = RL.make(level_capacity, width)
+    cur, _ = RL.add(cur, start_rows)
+
+    step = jax.jit(functools.partial(_bfs_level, gen_next=gen_next,
+                                     fanout=fanout),
+                   static_argnames=("next_cap",))
+
+    res = BFSResult()
+    res.level_sizes.append(int(cur.count))
+    for _ in range(max_levels):
+        if int(cur.count) == 0:
+            res.level_sizes.pop()              # last level was empty
+            break
+        next_cap = max(level_capacity, int(cur.count) * fanout)
+        nxt, all2, overflow = step(cur, all_lst, next_cap=next_cap)
+        if bool(overflow):
+            # Grow the 'all' list and redo this level (pure functional state
+            # means the failed attempt had no side effects).
+            all_capacity *= 2
+            grown = RL.make(all_capacity, width)
+            grown, _ = RL.add_all(grown, all_lst)
+            all_lst = grown
+            nxt, all2, overflow = step(cur, all_lst, next_cap=next_cap)
+            if bool(overflow):
+                raise MemoryError("BFS capacity growth failed twice")
+        cur, all_lst = nxt, all2
+        res.levels_run += 1
+        res.level_sizes.append(int(cur.count))
+        if int(cur.count) == 0:
+            res.level_sizes.pop()
+            break
+    res.all = all_lst
+    return res

@@ -1,0 +1,143 @@
+"""BucketExchange — the Roomy delayed-op engine on a device mesh.
+
+This module is the paper's central mechanism, adapted to TPU (DESIGN.md §2):
+random-access operations are *delayed*, binned by the shard that owns their
+target, exchanged in fixed-capacity buckets with ONE ``all_to_all`` per
+direction, then applied as a streaming batch on the owner. Latency-bound
+random access becomes two bandwidth-bound collectives — exactly Roomy's
+disk-seek → streaming conversion, with ICI links playing the role of disk
+spindles.
+
+Layout convention: everything here operates on *per-shard local* arrays,
+i.e. it is meant to be called INSIDE ``jax.shard_map``.  ``S`` is the size
+of the exchange axis, ``C`` the per-(src,dst) bucket capacity (the same
+fixed-size-bucket scheme Roomy uses for its disk files; overflowing items
+are dropped and counted, like MoE token dropping — callers size C for their
+tolerance, and the returned ``dropped`` count feeds tests/monitoring).
+
+The three phases:
+
+  bin_by_dest   local sort-by-owner + scatter into (S, C, ·) buckets
+  exchange      jax.lax.all_to_all over the named axis
+  unbin         route per-item results back to their issue order
+
+``bucket_sync_update`` / ``bucket_sync_access`` compose them into the two
+delayed-op flavours of the paper (update: fire-and-forget scatter; access:
+full round trip).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Binned(NamedTuple):
+    payload: jax.Array   # (S, C, *d) bucketed payloads
+    valid: jax.Array     # (S, C) bool
+    src_idx: jax.Array   # (S, C) int32 — originating local item index (or m)
+    dropped: jax.Array   # () int32 — items that overflowed their bucket
+
+
+def bin_by_dest(dest: jax.Array, payload: jax.Array, valid: jax.Array,
+                nbuckets: int, capacity: int) -> Binned:
+    """Bin m local items into per-destination buckets of fixed capacity.
+
+    dest: (m,) int32 in [0, nbuckets); payload: (m, *d); valid: (m,).
+    """
+    m = dest.shape[0]
+    d_eff = jnp.where(valid, dest, nbuckets).astype(jnp.int32)
+    order = jnp.argsort(d_eff, stable=True)
+    d_s = d_eff[order]
+    pay_s = payload[order]
+    pos = jnp.arange(m, dtype=jnp.int32)
+    starts = jnp.concatenate([jnp.ones((1,), bool), d_s[1:] != d_s[:-1]])
+    run_start = jax.lax.cummax(jnp.where(starts, pos, 0))
+    rank = pos - run_start
+    ok = (rank < capacity) & (d_s < nbuckets)
+    flat = jnp.where(ok, d_s * capacity + rank, nbuckets * capacity)
+
+    buf = jnp.zeros((nbuckets * capacity,) + payload.shape[1:], payload.dtype)
+    buf = buf.at[flat].set(pay_s, mode="drop")
+    vbuf = jnp.zeros((nbuckets * capacity,), bool).at[flat].set(ok, mode="drop")
+    sbuf = jnp.full((nbuckets * capacity,), m, jnp.int32).at[flat].set(
+        order.astype(jnp.int32), mode="drop")
+
+    nvalid = jnp.sum((d_s < nbuckets).astype(jnp.int32))
+    dropped = nvalid - jnp.sum(ok.astype(jnp.int32))
+    return Binned(
+        payload=buf.reshape((nbuckets, capacity) + payload.shape[1:]),
+        valid=vbuf.reshape(nbuckets, capacity),
+        src_idx=sbuf.reshape(nbuckets, capacity),
+        dropped=dropped,
+    )
+
+
+def exchange(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-to-all the leading (destination) axis. x: (S, C, *d) per shard.
+
+    After the call, row j holds what shard j sent to this shard.
+    """
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def unbin(results: jax.Array, src_idx: jax.Array, m: int) -> jax.Array:
+    """Scatter per-bucket results back to issue order. results: (S, C, *e)."""
+    flat_res = results.reshape((-1,) + results.shape[2:])
+    flat_idx = src_idx.reshape(-1)
+    out = jnp.zeros((m,) + results.shape[2:], results.dtype)
+    return out.at[flat_idx].set(flat_res, mode="drop")
+
+
+def bucket_sync_update(
+    dest: jax.Array,
+    payload: jax.Array,
+    valid: jax.Array,
+    axis_name: str,
+    nshards: int,
+    capacity: int,
+    owner_apply: Callable,
+    owner_state,
+):
+    """Delayed *update* sync: route payloads to owners, apply, no reply.
+
+    owner_apply(state, payload (S*C, *d), valid (S*C,)) -> new state.
+    Returns (new_state, dropped). Call inside shard_map.
+    """
+    binned = bin_by_dest(dest, payload, valid, nshards, capacity)
+    recv = exchange(binned.payload, axis_name)
+    recv_valid = exchange(binned.valid, axis_name)
+    flat = recv.reshape((-1,) + recv.shape[2:])
+    flat_valid = recv_valid.reshape(-1)
+    new_state = owner_apply(owner_state, flat, flat_valid)
+    dropped = jax.lax.psum(binned.dropped, axis_name)
+    return new_state, dropped
+
+
+def bucket_sync_access(
+    dest: jax.Array,
+    payload: jax.Array,
+    valid: jax.Array,
+    axis_name: str,
+    nshards: int,
+    capacity: int,
+    owner_fn: Callable,
+):
+    """Delayed *access* sync: route to owners, compute, route replies back.
+
+    owner_fn(payload (S, C, *d), valid (S, C)) -> results (S, C, *e).
+    Returns (results_in_issue_order (m, *e), valid_out (m,), dropped).
+    Call inside shard_map.
+    """
+    m = dest.shape[0]
+    binned = bin_by_dest(dest, payload, valid, nshards, capacity)
+    recv = exchange(binned.payload, axis_name)
+    recv_valid = exchange(binned.valid, axis_name)
+    results = owner_fn(recv, recv_valid)
+    back = exchange(results, axis_name)
+    out = unbin(back, binned.src_idx, m)
+    ok = unbin(binned.valid.astype(jnp.int32), binned.src_idx, m) > 0
+    dropped = jax.lax.psum(binned.dropped, axis_name)
+    return out, ok, dropped

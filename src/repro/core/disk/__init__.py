@@ -1,0 +1,17 @@
+"""Tier D — the paper-faithful out-of-core Roomy implementation.
+
+Real chunked disk files, streaming passes, external merge sort; see
+DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
+"""
+from .bfs import breadth_first_search
+from .darray import DiskArray
+from .dhash import DiskHashTable
+from .dlist import DiskList
+from .extsort import external_sort, merge_difference, row_keys, sort_rows
+from .store import ChunkStore
+
+__all__ = [
+    "ChunkStore", "DiskArray", "DiskHashTable", "DiskList",
+    "breadth_first_search", "external_sort", "merge_difference",
+    "row_keys", "sort_rows",
+]

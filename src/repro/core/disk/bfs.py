@@ -1,0 +1,52 @@
+"""Out-of-core breadth-first search (Tier D) — the paper's flagship loop.
+
+Identical structure to the paper's §3 listing: expand the current level
+into ``next`` via a user generator, removeDupes within the level, removeAll
+against ``all``, addAll into ``all``, rotate. Every phase is a streaming
+disk pass; RAM stays O(chunk) regardless of frontier size.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+import numpy as np
+
+from .dlist import DiskList
+
+
+def breadth_first_search(
+    workdir: str,
+    start_rows: np.ndarray,
+    gen_next: Callable[[np.ndarray], np.ndarray],
+    width: int,
+    chunk_rows: int = 1 << 16,
+    max_levels: int = 10_000,
+):
+    """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
+
+    Returns (level_sizes, all_list).
+    """
+    start_rows = np.asarray(start_rows, np.uint32).reshape(-1, width)
+    all_lst = DiskList(workdir, width, chunk_rows, name="bfs_all")
+    cur = DiskList(workdir, width, chunk_rows, name="bfs_lev0")
+    all_lst.add(start_rows)
+    cur.add(start_rows)
+
+    level_sizes: List[int] = [cur.size()]
+    for lev in range(1, max_levels + 1):
+        if cur.size() == 0:
+            level_sizes.pop()
+            break
+        nxt = DiskList(workdir, width, chunk_rows, name=f"bfs_lev{lev}")
+        cur.map_chunks(lambda chunk: nxt.add(gen_next(chunk)))
+        nxt.remove_dupes()
+        nxt.remove_all(all_lst)
+        all_lst.add_all(nxt)
+        cur.destroy()
+        cur = nxt
+        level_sizes.append(cur.size())
+        if cur.size() == 0:
+            level_sizes.pop()
+            break
+    cur.destroy()
+    return level_sizes, all_lst

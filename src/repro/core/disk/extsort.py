@@ -1,0 +1,175 @@
+"""External merge sort for chunked row stores (Tier D workhorse).
+
+Roomy's removeDupes/removeAll are "dominated by the time to sort the list"
+(paper §2); this module is that sort: chunk-sized in-RAM runs followed by a
+blocked k-way merge whose unit of work is a numpy slice, never a Python row
+loop over the whole data.
+
+Rows are compared lexicographically. For streaming comparisons we view each
+row as a big-endian byte string (``void`` scalar): bytewise order of
+big-endian unsigned words == numeric lexicographic order, so np.searchsorted
+on the void keys gives us merge boundaries for free.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, Optional
+
+import numpy as np
+
+from .store import ChunkStore
+
+
+def row_keys(rows: np.ndarray) -> np.ndarray:
+    """(n,) fixed-length byte keys whose order == lexicographic row order.
+
+    Big-endian unsigned words compared bytewise == numeric lexicographic
+    order; numpy's 'S' dtype is ordered and searchsorted/isin-compatible.
+    """
+    w = rows.shape[1]
+    be = np.ascontiguousarray(rows, dtype=">u4")
+    return be.view(np.dtype(("S", 4 * w))).reshape(-1)
+
+
+def sort_rows(rows: np.ndarray) -> np.ndarray:
+    return rows[np.argsort(row_keys(rows), kind="stable")]
+
+
+class _RunCursor:
+    """Streaming cursor over the chunks of one sorted run."""
+
+    def __init__(self, store: ChunkStore):
+        self._it = store.iter_chunks()
+        self.block: Optional[np.ndarray] = None
+        self.keys: Optional[np.ndarray] = None
+        self.pos = 0
+        self._advance_block()
+
+    def _advance_block(self) -> None:
+        for blk in self._it:
+            if blk.shape[0]:
+                self.block = np.asarray(blk)
+                self.keys = row_keys(self.block)
+                self.pos = 0
+                return
+        self.block = None
+
+    @property
+    def alive(self) -> bool:
+        return self.block is not None
+
+    @property
+    def head(self):
+        return self.keys[self.pos]
+
+    def take_until(self, bound) -> np.ndarray:
+        """Pop and return rows with key <= bound (at least one row)."""
+        j = int(np.searchsorted(self.keys[self.pos:], bound, side="right"))
+        j = max(j, 1)                       # guarantee progress
+        out = self.block[self.pos:self.pos + j]
+        self.pos += j
+        if self.pos >= self.block.shape[0]:
+            self._advance_block()
+        return out
+
+
+def make_runs(src: ChunkStore, tmp_dir: str, run_rows: int) -> List[ChunkStore]:
+    """Phase 1: cut src into sorted runs of ≤ run_rows rows each."""
+    runs: List[ChunkStore] = []
+    buf: List[np.ndarray] = []
+    nbuf = 0
+
+    def emit():
+        nonlocal buf, nbuf
+        if not nbuf:
+            return
+        rows = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+        run = ChunkStore(f"{tmp_dir}/run{len(runs):04d}", src.width,
+                         src.dtype, src.chunk_rows, fresh=True)
+        run.append(sort_rows(np.asarray(rows)))
+        run.flush()
+        runs.append(run)
+        buf, nbuf = [], 0
+
+    for chunk in src.iter_chunks():
+        start = 0
+        while start < chunk.shape[0]:
+            take = min(run_rows - nbuf, chunk.shape[0] - start)
+            buf.append(np.asarray(chunk[start:start + take]))
+            nbuf += take
+            start += take
+            if nbuf >= run_rows:
+                emit()
+    emit()
+    return runs
+
+
+def merge_runs(runs: List[ChunkStore], out: ChunkStore,
+               dedupe: bool = False) -> None:
+    """Phase 2: blocked k-way merge of sorted runs into ``out``.
+
+    With dedupe=True, equal rows collapse to one (needs a carry of the last
+    emitted key across block boundaries).
+    """
+    cursors = [_RunCursor(r) for r in runs]
+    last_key = None
+    while True:
+        alive = [c for c in cursors if c.alive]
+        if not alive:
+            break
+        i = int(np.argmin([c.head for c in alive])) if len(alive) > 1 else 0
+        src = alive[i]
+        others = [c.head for j, c in enumerate(alive) if j != i]
+        bound = min(others) if others else src.keys[-1]
+        block = src.take_until(bound)
+        if dedupe:
+            keys = row_keys(block)
+            keep = np.ones(block.shape[0], bool)
+            keep[1:] = keys[1:] != keys[:-1]
+            if last_key is not None and block.shape[0]:
+                keep[0] &= keys[0] != last_key
+            if block.shape[0]:
+                last_key = keys[-1]
+            block = block[keep]
+        out.append(block)
+    out.flush()
+
+
+def external_sort(src: ChunkStore, out: ChunkStore, tmp_dir: str,
+                  run_rows: int = 1 << 18, dedupe: bool = False) -> None:
+    runs = make_runs(src, tmp_dir, run_rows)
+    try:
+        merge_runs(runs, out, dedupe=dedupe)
+    finally:
+        for r in runs:
+            r.destroy()
+
+
+def merge_difference(a_sorted: ChunkStore, b_sorted: ChunkStore,
+                     out: ChunkStore) -> None:
+    """out = rows of a not present in b (multiset removeAll; inputs sorted).
+
+    Blocked merge-join: for each a-block, membership against the b-stream is
+    decided with two searchsorted calls per overlapping b-block.
+    """
+    b_cur = _RunCursor(b_sorted)
+    b_tail_keys: Optional[np.ndarray] = None
+
+    for a_block in a_sorted.iter_chunks():
+        a_block = np.asarray(a_block)
+        if not a_block.shape[0]:
+            continue
+        a_keys = row_keys(a_block)
+        member = np.zeros(a_block.shape[0], bool)
+        # Pull b blocks while they can still overlap this a block.
+        while True:
+            if b_tail_keys is not None:
+                member |= np.isin(a_keys, b_tail_keys)
+                if b_tail_keys.size and b_tail_keys[-1] >= a_keys[-1]:
+                    break
+                b_tail_keys = None
+            if not b_cur.alive:
+                break
+            blk = b_cur.take_until(b_cur.keys[-1])   # whole current block
+            b_tail_keys = row_keys(np.asarray(blk))
+        out.append(a_block[~member])
+    out.flush()

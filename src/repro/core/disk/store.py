@@ -1,0 +1,100 @@
+"""Chunked on-disk row store — Tier D's backing file format.
+
+A store is a directory of fixed-size ``.npy`` chunks plus a small JSON
+manifest. Appends are RAM-buffered up to one chunk (Roomy's write buffer);
+reads are streaming, chunk at a time. Rows are (width,) unsigned words,
+matching Tier J's element codec, but any numpy dtype works.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Iterator, List
+
+import numpy as np
+
+
+class ChunkStore:
+    def __init__(self, path: str, width: int, dtype="uint32",
+                 chunk_rows: int = 1 << 16, fresh: bool = False):
+        self.path = path
+        self.width = width
+        self.dtype = np.dtype(dtype)
+        self.chunk_rows = int(chunk_rows)
+        if fresh and os.path.isdir(path):
+            shutil.rmtree(path)
+        os.makedirs(path, exist_ok=True)
+        self._meta_path = os.path.join(path, "meta.json")
+        if os.path.exists(self._meta_path):
+            with open(self._meta_path) as f:
+                meta = json.load(f)
+            assert meta["width"] == width, "store width mismatch"
+            self.n_chunks = meta["n_chunks"]
+            self.total_rows = meta["total_rows"]
+            self.chunk_rows = meta["chunk_rows"]
+        else:
+            self.n_chunks = 0
+            self.total_rows = 0
+            self._write_meta()
+        self._buf: List[np.ndarray] = []
+        self._buf_rows = 0
+
+    # ------------------------------------------------------------- write
+    def append(self, rows: np.ndarray) -> None:
+        rows = np.ascontiguousarray(rows, dtype=self.dtype).reshape(-1, self.width)
+        self._buf.append(rows)
+        self._buf_rows += rows.shape[0]
+        while self._buf_rows >= self.chunk_rows:
+            self._flush_chunk(self.chunk_rows)
+
+    def flush(self) -> None:
+        while self._buf_rows > 0:
+            self._flush_chunk(min(self._buf_rows, self.chunk_rows))
+        self._write_meta()
+
+    def _flush_chunk(self, nrows: int) -> None:
+        buf = np.concatenate(self._buf, axis=0) if len(self._buf) > 1 else self._buf[0]
+        chunk, rest = buf[:nrows], buf[nrows:]
+        np.save(self._chunk_path(self.n_chunks), chunk)
+        self.n_chunks += 1
+        self.total_rows += chunk.shape[0]
+        self._buf = [rest] if rest.shape[0] else []
+        self._buf_rows = rest.shape[0]
+        self._write_meta()
+
+    def _write_meta(self) -> None:
+        tmp = self._meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"width": self.width, "dtype": self.dtype.name,
+                       "chunk_rows": self.chunk_rows,
+                       "n_chunks": self.n_chunks,
+                       "total_rows": self.total_rows}, f)
+        os.replace(tmp, self._meta_path)       # atomic
+
+    # -------------------------------------------------------------- read
+    def _chunk_path(self, i: int) -> str:
+        return os.path.join(self.path, f"c{i:06d}.npy")
+
+    def iter_chunks(self) -> Iterator[np.ndarray]:
+        """Stream chunks (memory-mapped — only touched pages load)."""
+        for i in range(self.n_chunks):
+            yield np.load(self._chunk_path(i), mmap_mode="r")
+        if self._buf_rows:
+            yield (np.concatenate(self._buf, axis=0)
+                   if len(self._buf) > 1 else self._buf[0])
+
+    def read_all(self) -> np.ndarray:
+        """Materialize everything (tests/small data only)."""
+        parts = list(self.iter_chunks())
+        if not parts:
+            return np.zeros((0, self.width), self.dtype)
+        return np.concatenate([np.asarray(p) for p in parts], axis=0)
+
+    @property
+    def size(self) -> int:
+        return self.total_rows + self._buf_rows
+
+    def destroy(self) -> None:
+        self._buf, self._buf_rows = [], 0
+        shutil.rmtree(self.path, ignore_errors=True)

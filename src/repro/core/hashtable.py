@@ -1,0 +1,239 @@
+"""RoomyHashTable — capacity-bounded key→value map with delayed ops.
+
+The paper's RoomyHashTable buckets (key, value) pairs by key hash so that a
+sync never needs a global sort.  Functionally we keep the table as rows
+sorted by (hash(key), key): a sync is then a sorted merge of the queued
+batch against the table — a pure streaming pass, and precisely the per-
+bucket merge Roomy performs on disk (the Tier-D twin in disk/dhash.py
+executes the same merge per bucket file).
+
+Operations (Table 1):
+  insert/update  delayed   -> queued, executed by ``sync``
+  remove         delayed   -> queued with a tombstone flag
+  access         delayed   -> ``lookup`` (batched sorted-merge probe)
+  sync/size/map/reduce/predicateCount -> immediate
+
+Keys are (key_width,) uint32 rows; values any dtype/shape. The all-ones key
+is reserved (sentinel), as in types.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+class RoomyHashTable(NamedTuple):
+    keys: jax.Array    # (cap, kw) uint32 — sorted by (hash, key); sentinel-padded
+    vals: jax.Array    # (cap, *vshape)
+    count: jax.Array   # () int32
+    q_keys: jax.Array  # (qcap, kw) uint32
+    q_vals: jax.Array  # (qcap, *vshape)
+    q_del: jax.Array   # (qcap,) bool — tombstone flags
+    q_n: jax.Array     # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def key_width(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def queue_capacity(self) -> int:
+        return self.q_keys.shape[0]
+
+
+def _sort_key(keys: jax.Array) -> jax.Array:
+    """Lexsort permutation by (hash(key), key words...)."""
+    h = T.hash_rows(keys)
+    # Sentinel keys must sort last: force their hash to max.
+    h = jnp.where(T.is_sentinel(keys), T.UINT32_MAX, h)
+    cols = [keys[:, j] for j in range(keys.shape[1] - 1, -1, -1)] + [h]
+    return jnp.lexsort(tuple(cols))
+
+
+def make(capacity: int, key_width: int, queue_capacity: int,
+         val_shape: tuple = (), val_dtype=jnp.uint32) -> RoomyHashTable:
+    return RoomyHashTable(
+        keys=T.sentinel_rows(capacity, key_width),
+        vals=jnp.zeros((capacity,) + val_shape, val_dtype),
+        count=jnp.zeros((), jnp.int32),
+        q_keys=T.sentinel_rows(queue_capacity, key_width),
+        q_vals=jnp.zeros((queue_capacity,) + val_shape, val_dtype),
+        q_del=jnp.zeros((queue_capacity,), bool),
+        q_n=jnp.zeros((), jnp.int32),
+    )
+
+
+def _queue(ht: RoomyHashTable, keys, vals, deletes, valid):
+    qcap = ht.queue_capacity
+    dest = ht.q_n + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid, dest, qcap)
+    q_keys = ht.q_keys.at[dest].set(keys.astype(jnp.uint32), mode="drop")
+    q_vals = ht.q_vals.at[dest].set(vals.astype(ht.q_vals.dtype), mode="drop")
+    q_del = ht.q_del.at[dest].set(deletes, mode="drop")
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    overflow = ht.q_n + nvalid > qcap
+    q_n = jnp.minimum(ht.q_n + nvalid, qcap)
+    return ht._replace(q_keys=q_keys, q_vals=q_vals, q_del=q_del, q_n=q_n), overflow
+
+
+def insert(ht: RoomyHashTable, keys: jax.Array, vals: jax.Array,
+           valid: jax.Array | None = None):
+    """Queue delayed inserts/updates for a batch of (key, value) pairs."""
+    if valid is None:
+        valid = jnp.ones((keys.shape[0],), bool)
+    valid = valid & ~T.is_sentinel(keys)
+    return _queue(ht, keys, vals, jnp.zeros((keys.shape[0],), bool), valid)
+
+
+def remove(ht: RoomyHashTable, keys: jax.Array, valid: jax.Array | None = None):
+    """Queue delayed removals."""
+    if valid is None:
+        valid = jnp.ones((keys.shape[0],), bool)
+    valid = valid & ~T.is_sentinel(keys)
+    vals = jnp.zeros((keys.shape[0],) + ht.q_vals.shape[1:], ht.q_vals.dtype)
+    return _queue(ht, keys, vals, jnp.ones((keys.shape[0],), bool), valid)
+
+
+def sync(
+    ht: RoomyHashTable,
+    combine: Callable = None,
+    apply: Callable = None,
+) -> RoomyHashTable:
+    """Execute all queued ops as one sorted merge (streaming pass).
+
+    combine(v1, v2): merges two queued payloads for the same key
+        (default: last-wins is NOT available — order is undefined, so the
+        default combine keeps either; pass an associative fn for real use).
+    apply(old_val, agg, present): vectorized; present is a bool mask saying
+        whether the key already existed. Default: insert/overwrite with agg.
+    Tombstones win over inserts merged in the same sync (documented).
+    """
+    if combine is None:
+        combine = lambda a, b: b
+    if apply is None:
+        apply = lambda old, agg, present: agg
+
+    cap, qcap = ht.capacity, ht.queue_capacity
+    in_q = jnp.arange(qcap) < ht.q_n
+    qk = jnp.where(in_q[:, None], ht.q_keys, T.UINT32_MAX)
+
+    all_keys = jnp.concatenate([ht.keys, qk], axis=0)
+    all_vals = jnp.concatenate([ht.vals, ht.q_vals], axis=0)
+    from_tab = jnp.concatenate([jnp.arange(cap) < ht.count,
+                                jnp.zeros((qcap,), bool)])
+    is_del = jnp.concatenate([jnp.zeros((cap,), bool), ht.q_del & in_q])
+
+    perm = _sort_key(all_keys)
+    k_s, v_s = all_keys[perm], all_vals[perm]
+    tab_s, del_s = from_tab[perm], is_del[perm]
+    valid_s = ~T.is_sentinel(k_s)
+
+    rid = T.run_ids(k_s)
+    nseg = cap + qcap
+    starts = T.first_of_run(k_s)
+    # Combine queued payloads within each run. Table rows must act as the
+    # identity for ``combine``; we handle that by segmenting on
+    # (run start OR table row): table rows sort before queue rows of the
+    # same key? Not guaranteed — so instead mask table rows out of the
+    # combine by restarting the segment at each table row and at each
+    # queue-row-that-follows-a-table-row.
+    seg_starts = starts | tab_s | jnp.roll(tab_s, 1).at[0].set(False)
+    agg = T.segmented_reduce_last(v_s, seg_starts, combine)
+    qrow = valid_s & ~tab_s
+    last_q = qrow & jnp.concatenate([~qrow[1:] | (rid[1:] != rid[:-1]),
+                                     jnp.ones((1,), bool)])
+
+    run_has_tab = jax.ops.segment_max(tab_s.astype(jnp.int32), rid, num_segments=nseg)
+    run_has_del = jax.ops.segment_max((del_s & qrow).astype(jnp.int32), rid,
+                                      num_segments=nseg)
+    run_has_live_q = jax.ops.segment_max((qrow & ~del_s).astype(jnp.int32), rid,
+                                         num_segments=nseg)
+    # Sorted position of the table row within each run (or -1): stable sort
+    # puts the (unique) table row first in its run.
+    run_tab_idx = jax.ops.segment_max(
+        jnp.where(tab_s, jnp.arange(nseg), -1), rid, num_segments=nseg
+    )
+
+    present = run_has_tab[rid] == 1
+    deleted = run_has_del[rid] == 1
+    old = v_s[jnp.maximum(run_tab_idx[rid], 0)]
+    new_val = apply(old, agg, present)
+
+    # Survivors: one row per run — prefer the last queue row (it carries the
+    # merged payload); pure-table runs keep their table row.
+    keep_tab_row = tab_s & (run_has_live_q[rid] == 0) & ~deleted
+    keep_q_row = last_q & ~deleted & ~del_s
+    keep = (keep_tab_row | keep_q_row) & valid_s
+
+    qmask = keep_q_row.reshape((-1,) + (1,) * (new_val.ndim - 1))
+    out_val = jnp.where(qmask, new_val, v_s)
+
+    # Compact survivors (stable: preserves (hash, key) sort order).
+    cperm = jnp.argsort(~keep, stable=True)
+    k_c, v_c = k_s[cperm], out_val[cperm]
+    kept = keep[cperm]
+    k_c = jnp.where(kept[:, None], k_c, T.UINT32_MAX)
+    count = jnp.sum(keep.astype(jnp.int32))
+    overflow = count > cap
+
+    new_ht = RoomyHashTable(
+        keys=k_c[:cap],
+        vals=v_c[:cap],
+        count=jnp.minimum(count, cap),
+        q_keys=T.sentinel_rows(qcap, ht.key_width),
+        q_vals=jnp.zeros_like(ht.q_vals),
+        q_del=jnp.zeros((qcap,), bool),
+        q_n=jnp.zeros((), jnp.int32),
+    )
+    return new_ht, overflow
+
+
+def lookup(ht: RoomyHashTable, queries: jax.Array):
+    """Batched access: returns (vals, found). Streaming sorted-merge probe."""
+    m = queries.shape[0]
+    cap = ht.capacity
+    all_keys = jnp.concatenate([ht.keys, queries.astype(jnp.uint32)], axis=0)
+    from_tab = jnp.concatenate([jnp.arange(cap) < ht.count, jnp.zeros((m,), bool)])
+    perm = _sort_key(all_keys)
+    k_s, tab_s = all_keys[perm], from_tab[perm]
+    rid = T.run_ids(k_s)
+    nseg = cap + m
+    run_tab_idx = jax.ops.segment_max(
+        jnp.where(tab_s, perm, -1), rid, num_segments=nseg
+    )
+    hit_idx_s = run_tab_idx[rid]                      # original table index or -1
+    hit_idx = jnp.full((nseg,), -1, jnp.int32).at[perm].set(hit_idx_s)
+    hit_idx_q = hit_idx[cap:]
+    found = (hit_idx_q >= 0) & ~T.is_sentinel(queries)
+    vals = ht.vals[jnp.maximum(hit_idx_q, 0)]
+    return vals, found
+
+
+def size(ht: RoomyHashTable) -> jax.Array:
+    return ht.count
+
+
+def map_items(ht: RoomyHashTable, fn: Callable):
+    """fn(key_row, val) vectorized over the table (invalid slots included —
+    mask with arange<count on the caller side)."""
+    return jax.vmap(fn)(ht.keys, ht.vals)
+
+
+def reduce(ht: RoomyHashTable, elt_fn: Callable, merge_fn: Callable, identity):
+    vals = jax.vmap(elt_fn)(ht.keys, ht.vals)
+    mask = (jnp.arange(ht.capacity) < ht.count)
+    mask = mask.reshape((-1,) + (1,) * (vals.ndim - 1))
+    vals = jnp.where(mask, vals, jnp.asarray(identity, vals.dtype))
+    return T.tree_reduce(vals, merge_fn, identity)
+
+
+def predicate_count(ht: RoomyHashTable, pred: Callable) -> jax.Array:
+    hits = jax.vmap(pred)(ht.keys, ht.vals) & (jnp.arange(ht.capacity) < ht.count)
+    return jnp.sum(hits.astype(jnp.int32))

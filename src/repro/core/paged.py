@@ -1,0 +1,110 @@
+"""Roomy paged-KV store — the RoomyArray access pattern applied to KV cache.
+
+Long-context decode is a space-limited computation: the KV cache of one
+524 288-token sequence does not fit one chip's HBM.  We treat the cache as a
+RoomyArray of fixed-size *pages* distributed over the mesh ("many disks"),
+and a decode step's reads as delayed accesses resolved by one batched
+gather per layer — never per-token random access.
+
+Functional layout (a pytree, friendly to scan-over-layers):
+
+  k_pages, v_pages : (num_pages, page_size, kv_heads, head_dim)
+  page_table       : (batch, pages_per_seq) int32 — logical→physical map
+  lengths          : (batch,) int32 current sequence lengths
+
+Sharding: ``num_pages`` shards over the mesh's data axis for batch=1
+long-context (context parallelism); for batched decode the batch dim of
+``page_table``/``lengths`` shards over data instead and pages replicate the
+same way the model does. The dry-run exercises both.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagedKV(NamedTuple):
+    k_pages: jax.Array     # (num_pages, page, kvh, hd)
+    v_pages: jax.Array     # (num_pages, page, kvh, hd)
+    page_table: jax.Array  # (batch, pages_per_seq) int32
+    lengths: jax.Array     # (batch,) int32
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+
+def make(batch: int, max_len: int, kv_heads: int, head_dim: int,
+         page_size: int = 128, dtype=jnp.bfloat16) -> PagedKV:
+    pages_per_seq = -(-max_len // page_size)
+    num_pages = batch * pages_per_seq
+    # Identity page table: page p of sequence b is physical b*pps + p.
+    table = (jnp.arange(batch)[:, None] * pages_per_seq
+             + jnp.arange(pages_per_seq)[None, :]).astype(jnp.int32)
+    shape = (num_pages, page_size, kv_heads, head_dim)
+    return PagedKV(
+        k_pages=jnp.zeros(shape, dtype),
+        v_pages=jnp.zeros(shape, dtype),
+        page_table=table,
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def append(cache: PagedKV, k_new: jax.Array, v_new: jax.Array) -> PagedKV:
+    """Append one token's K/V per sequence (decode step).
+
+    k_new, v_new: (batch, kv_heads, head_dim). Delayed-update semantics:
+    the whole batch of writes lands as one scatter (Roomy update+sync).
+    """
+    b = cache.lengths.shape[0]
+    page_logical = cache.lengths // cache.page_size
+    offset = cache.lengths % cache.page_size
+    phys = jnp.take_along_axis(cache.page_table, page_logical[:, None],
+                               axis=1)[:, 0]
+    k_pages = cache.k_pages.at[phys, offset].set(k_new.astype(cache.k_pages.dtype))
+    v_pages = cache.v_pages.at[phys, offset].set(v_new.astype(cache.v_pages.dtype))
+    return cache._replace(k_pages=k_pages, v_pages=v_pages,
+                          lengths=cache.lengths + 1)
+
+
+def bulk_fill(cache: PagedKV, k: jax.Array, v: jax.Array,
+              lengths: jax.Array) -> PagedKV:
+    """Prefill: write (batch, seq, kvh, hd) K/V into pages in one pass.
+
+    Partial final pages are zero-padded (lengths marks validity)."""
+    b, s, kvh, hd = k.shape
+    ps = cache.page_size
+    npage = -(-s // ps)
+    if npage * ps != s:
+        pad = npage * ps - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_r = k.reshape(b * npage, ps, kvh, hd)
+    v_r = v.reshape(b * npage, ps, kvh, hd)
+    phys = cache.page_table[:, :npage].reshape(-1)
+    k_pages = cache.k_pages.at[phys].set(k_r.astype(cache.k_pages.dtype))
+    v_pages = cache.v_pages.at[phys].set(v_r.astype(cache.v_pages.dtype))
+    return cache._replace(k_pages=k_pages, v_pages=v_pages, lengths=lengths)
+
+
+def gather(cache: PagedKV) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Resolve the delayed page accesses for a decode step.
+
+    Returns (k, v, mask): (batch, pages_per_seq*page, kvh, hd) and a
+    validity mask (batch, pages_per_seq*page). One batched gather — the
+    RoomyArray access/sync pair with the page table as the op queue.
+    """
+    b, pps = cache.page_table.shape
+    k = cache.k_pages[cache.page_table]      # (b, pps, page, kvh, hd)
+    v = cache.v_pages[cache.page_table]
+    ps = cache.page_size
+    k = k.reshape(b, pps * ps, *k.shape[3:])
+    v = v.reshape(b, pps * ps, *v.shape[3:])
+    mask = jnp.arange(pps * ps)[None, :] < cache.lengths[:, None]
+    return k, v, mask

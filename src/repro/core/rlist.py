@@ -1,0 +1,164 @@
+"""RoomyList — capacity-bounded, unordered multiset of fixed-width elements.
+
+Faithful port of the paper's RoomyList (Table 1):
+
+  add          delayed   -> ``add`` (batched append; the caller's batch is
+                            the delay unit — see DESIGN.md §2)
+  remove       delayed   -> ``remove`` (batched)
+  addAll       immediate -> ``add_all``
+  removeAll    immediate -> ``remove_all`` (multiset: removes *all*
+                            occurrences of every element present in other)
+  removeDupes  immediate -> ``remove_dupes``
+  sync         immediate -> no-op here (adds apply eagerly in the functional
+                            encoding; kept for API parity)
+  size         immediate -> ``.count``
+  map / reduce / predicateCount -> ``map_rows`` / ``reduce`` / ``predicate_count``
+
+Representation: ``data`` is (capacity, width) uint32 with the logical
+content in rows [0, count); rows beyond are the sentinel. The list is
+unordered, so every operation is free to permute rows.
+
+The paper notes RoomyList operations are dominated by sorting — that is by
+construction true here too (lexsort is the workhorse), which is why the LM
+integration prefers RoomyArray/RoomyHashTable bucketing (see delayed.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+class RoomyList(NamedTuple):
+    data: jax.Array   # (capacity, width) uint32
+    count: jax.Array  # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.data.shape[1]
+
+
+def make(capacity: int, width: int) -> RoomyList:
+    return RoomyList(T.sentinel_rows(capacity, width), jnp.zeros((), jnp.int32))
+
+
+def from_rows(rows: jax.Array, capacity: int | None = None) -> RoomyList:
+    n, w = rows.shape
+    capacity = capacity or n
+    rl = make(capacity, w)
+    rl, _ = add(rl, rows.astype(jnp.uint32), jnp.ones((n,), bool))
+    return rl
+
+
+def valid_mask(rl: RoomyList) -> jax.Array:
+    return jnp.arange(rl.capacity) < rl.count
+
+
+def add(rl: RoomyList, rows: jax.Array, valid: jax.Array | None = None):
+    """Append a batch of rows. Returns (list, overflow)."""
+    if valid is None:
+        valid = jnp.ones((rows.shape[0],), bool)
+    data, count, overflow = T.append_block(rl.data, rl.count, rows, valid)
+    return RoomyList(data, count), overflow
+
+
+def add_all(dst: RoomyList, src: RoomyList):
+    """dst += src (multiset union, keeps duplicates) — paper's addAll."""
+    return add(dst, src.data, valid_mask(src))
+
+
+def _compact(rl: RoomyList, keep: jax.Array) -> RoomyList:
+    data, count = T.compact_valid_first(rl.data, keep & valid_mask(rl))
+    return RoomyList(data, count)
+
+
+def remove(rl: RoomyList, rows: jax.Array, valid: jax.Array | None = None) -> RoomyList:
+    """Remove all occurrences of each given row — paper's delayed remove."""
+    if valid is None:
+        valid = jnp.ones((rows.shape[0],), bool)
+    other = make(rows.shape[0], rows.shape[1])
+    other, _ = add(other, rows.astype(jnp.uint32), valid)
+    return remove_all(rl, other)
+
+
+def remove_all(a: RoomyList, b: RoomyList) -> RoomyList:
+    """a -= b: drop every a-row that occurs (at least once) in b."""
+    na, nb = a.capacity, b.capacity
+    rows = jnp.concatenate([a.data, b.data], axis=0)
+    tag_b = jnp.concatenate([jnp.zeros((na,), bool), valid_mask(b)])
+    from_a = jnp.concatenate([valid_mask(a), jnp.zeros((nb,), bool)])
+    perm = T.lexsort_rows(rows)
+    rows_s, tag_s, from_a_s = rows[perm], tag_b[perm], from_a[perm]
+    rid = T.run_ids(rows_s)
+    # A run contains a b-row iff segment-max of tag_b is 1.
+    run_has_b = jax.ops.segment_max(
+        tag_s.astype(jnp.int32), rid, num_segments=na + nb
+    )
+    keep_s = from_a_s & (run_has_b[rid] == 0)
+    # Map keep decision back to a's slots.
+    keep = jnp.zeros((na + nb,), bool).at[perm].set(keep_s)[:na]
+    return _compact(a, keep)
+
+
+def remove_dupes(rl: RoomyList) -> RoomyList:
+    """Collapse the multiset to a set — paper's removeDupes."""
+    perm = T.lexsort_rows(rl.data)
+    rows_s = rl.data[perm]
+    keep_s = T.first_of_run(rows_s) & T.rows_valid(rows_s)
+    keep = jnp.zeros((rl.capacity,), bool).at[perm].set(keep_s)
+    return _compact(rl, keep)
+
+
+def member_mask(rl: RoomyList, queries: jax.Array) -> jax.Array:
+    """(m,) bool — which query rows occur in the list."""
+    m = queries.shape[0]
+    rows = jnp.concatenate([rl.data, queries.astype(jnp.uint32)], axis=0)
+    tag_list = jnp.concatenate([valid_mask(rl), jnp.zeros((m,), bool)])
+    perm = T.lexsort_rows(rows)
+    rid = T.run_ids(rows[perm])
+    run_has = jax.ops.segment_max(
+        tag_list[perm].astype(jnp.int32), rid, num_segments=rows.shape[0]
+    )
+    hit_s = run_has[rid] == 1
+    hits = jnp.zeros((rows.shape[0],), bool).at[perm].set(hit_s)
+    return hits[rl.capacity:]
+
+
+def map_rows(rl: RoomyList, fn: Callable) -> jax.Array:
+    """Apply fn to every element (vectorized); returns fn's batched output.
+
+    fn: (width,) uint32 -> pytree. Invalid slots still flow through fn;
+    mask with ``valid_mask`` on the caller side when it matters.
+    """
+    return jax.vmap(fn)(rl.data)
+
+
+def reduce(rl: RoomyList, elt_fn: Callable, merge_fn: Callable, identity) -> jax.Array:
+    """Paper's reduce: merge_fn must be associative+commutative with
+    ``identity`` as its unit (undefined order, as the paper warns)."""
+    vals = jax.vmap(elt_fn)(rl.data)
+    ident = jnp.asarray(identity, dtype=vals.dtype)
+    mask = valid_mask(rl).reshape((-1,) + (1,) * (vals.ndim - 1))
+    vals = jnp.where(mask, vals, ident)
+    return T.tree_reduce(vals, merge_fn, identity)
+
+
+def predicate_count(rl: RoomyList, pred: Callable) -> jax.Array:
+    hits = jax.vmap(pred)(rl.data) & valid_mask(rl)
+    return jnp.sum(hits.astype(jnp.int32))
+
+
+def to_numpy(rl: RoomyList):
+    """Materialize the logical content (host-side; test/debug helper)."""
+    import numpy as np
+
+    data = np.asarray(jax.device_get(rl.data))
+    n = int(jax.device_get(rl.count))
+    return data[:n]

@@ -1,0 +1,132 @@
+"""RoomySet — the native set the paper names as future work (§3):
+
+  "Some of these operations (particularly intersection) are sub-optimal
+   when built using the current set of primitives. Future work is planned
+   to add a native RoomySet data structure. … Set intersection may become
+   a Roomy primitive in the future."
+
+Representation: rows kept **sorted-unique** (sentinel-padded), so every
+set operation is ONE merge pass — no 3-temporary intersection dance:
+
+  union         merge + dedup                 O((n+m)·log)
+  intersection  rows present in both runs     O((n+m)·log)
+  difference    rows present only in A        O((n+m)·log)
+  member_mask   sorted-merge probe            O((n+m)·log)
+
+vs the RoomyList recipes: union 2 passes, intersection 7 passes over
+3 temporaries (benchmarked in benchmarks/constructs.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rlist as RL
+from . import types as T
+
+
+class RoomySet(NamedTuple):
+    data: jax.Array   # (capacity, width) uint32, sorted-unique then sentinel
+    count: jax.Array  # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.data.shape[1]
+
+
+def _normalize(rows: jax.Array, valid: jax.Array) -> RoomySet:
+    """Sort, dedup, compact — establish the invariant."""
+    n, w = rows.shape
+    rows = jnp.where(valid[:, None], rows, T.sentinel_rows(n, w))
+    perm = T.lexsort_rows(rows)
+    rows_s = rows[perm]
+    keep = T.first_of_run(rows_s) & T.rows_valid(rows_s)
+    rows_u = jnp.where(keep[:, None], rows_s, T.sentinel_rows(n, w))
+    # already sorted with sentinels interleaved → stable re-sort compacts
+    perm2 = T.lexsort_rows(rows_u)
+    return RoomySet(rows_u[perm2], jnp.sum(keep.astype(jnp.int32)))
+
+
+def make(capacity: int, width: int) -> RoomySet:
+    return RoomySet(T.sentinel_rows(capacity, width), jnp.zeros((), jnp.int32))
+
+
+def from_rows(rows: jax.Array, capacity: int | None = None) -> RoomySet:
+    n, w = rows.shape
+    capacity = capacity or n
+    pad = capacity - n
+    rows = jnp.concatenate(
+        [rows.astype(jnp.uint32), T.sentinel_rows(pad, w)], axis=0) \
+        if pad else rows.astype(jnp.uint32)
+    return _normalize(rows, jnp.arange(capacity) < n)
+
+
+def from_list(rl: RL.RoomyList) -> RoomySet:
+    return _normalize(rl.data, RL.valid_mask(rl))
+
+
+def _merge(a: RoomySet, b: RoomySet, keep_rule: str) -> RoomySet:
+    """One sorted-merge pass implementing union/intersection/difference.
+
+    keep_rule: 'any' (union) | 'both' (intersection) | 'a_only' (difference)
+    """
+    na, nb = a.capacity, b.capacity
+    rows = jnp.concatenate([a.data, b.data], axis=0)
+    from_a = jnp.concatenate([jnp.ones((na,), bool), jnp.zeros((nb,), bool)])
+    perm = T.lexsort_rows(rows)
+    rows_s, from_a_s = rows[perm], from_a[perm]
+    valid_s = T.rows_valid(rows_s)
+    rid = T.run_ids(rows_s)
+    nseg = na + nb
+    in_a = jax.ops.segment_max((from_a_s & valid_s).astype(jnp.int32), rid,
+                               num_segments=nseg)
+    in_b = jax.ops.segment_max((~from_a_s & valid_s).astype(jnp.int32), rid,
+                               num_segments=nseg)
+    first = T.first_of_run(rows_s) & valid_s
+    if keep_rule == "any":
+        keep = first
+    elif keep_rule == "both":
+        keep = first & (in_a[rid] == 1) & (in_b[rid] == 1)
+    elif keep_rule == "a_only":
+        keep = first & (in_a[rid] == 1) & (in_b[rid] == 0)
+    else:
+        raise ValueError(keep_rule)
+    out = jnp.where(keep[:, None], rows_s, T.sentinel_rows(nseg, a.width))
+    perm2 = T.lexsort_rows(out)
+    return RoomySet(out[perm2][:max(na, nb) if keep_rule != "any" else nseg],
+                    jnp.sum(keep.astype(jnp.int32)))
+
+
+def union(a: RoomySet, b: RoomySet) -> RoomySet:
+    """Native |: one pass (capacity grows to na+nb)."""
+    return _merge(a, b, "any")
+
+
+def intersection(a: RoomySet, b: RoomySet) -> RoomySet:
+    """Native &: ONE pass — the primitive the paper planned."""
+    return _merge(a, b, "both")
+
+
+def difference(a: RoomySet, b: RoomySet) -> RoomySet:
+    """Native −: one pass."""
+    return _merge(a, b, "a_only")
+
+
+def member_mask(s: RoomySet, queries: jax.Array) -> jax.Array:
+    return RL.member_mask(RL.RoomyList(s.data, s.count), queries)
+
+
+def size(s: RoomySet) -> jax.Array:
+    return s.count
+
+
+def to_numpy(s: RoomySet):
+    import numpy as np
+    data = np.asarray(jax.device_get(s.data))
+    return data[: int(jax.device_get(s.count))]

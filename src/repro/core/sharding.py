@@ -1,0 +1,40 @@
+"""Owner maps and mesh helpers for sharded Roomy structures.
+
+Roomy distributes each structure across "disks" by a static owner function;
+here the disks are mesh shards. Two owner maps, matching the paper:
+
+* arrays: block distribution — owner(i) = i // (n / nshards)
+* hash tables / lists: hash distribution — owner(x) = hash(x) % nshards
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import types as T
+
+
+def block_owner(idx: jax.Array, n: int, nshards: int) -> jax.Array:
+    """Owner shard of array index idx under block distribution."""
+    per = -(-n // nshards)  # ceil
+    return (idx // per).astype(jnp.int32)
+
+
+def hash_owner(rows: jax.Array, nshards: int) -> jax.Array:
+    """Owner shard of an element/key row under hash distribution."""
+    return (T.hash_rows(rows) % jnp.uint32(nshards)).astype(jnp.int32)
+
+
+def shard_leading(x: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """Place x with its leading dim sharded over ``axis``."""
+    spec = P(axis, *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def replicated(x, mesh: Mesh):
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]

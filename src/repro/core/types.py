@@ -1,0 +1,167 @@
+"""Element codecs and low-level helpers shared by the Roomy data structures.
+
+Roomy elements are fixed-width records. We represent every element as a row
+of ``width`` uint32 words (JAX runs with x64 disabled, so uint32 is the
+natural machine word).  The all-ones row is reserved as the *sentinel*
+("empty slot") — the same reservation Roomy's disk format makes for chunk
+padding.  Rows compare lexicographically word-0-first, so sentinel rows sort
+last, which every compaction routine below relies on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def sentinel_rows(n: int, width: int) -> jax.Array:
+    """(n, width) block of sentinel (all-ones) rows."""
+    return jnp.full((n, width), UINT32_MAX, dtype=jnp.uint32)
+
+
+def is_sentinel(rows: jax.Array) -> jax.Array:
+    """(n,) bool — True where the row is the reserved empty marker."""
+    return jnp.all(rows == UINT32_MAX, axis=-1)
+
+
+def rows_valid(rows: jax.Array) -> jax.Array:
+    return ~is_sentinel(rows)
+
+
+def lexsort_rows(rows: jax.Array) -> jax.Array:
+    """Permutation sorting rows lexicographically (word 0 most significant).
+
+    ``jnp.lexsort`` treats the *last* key as primary, so feed words in
+    reverse order.  Stable, so equal rows keep their relative order.
+    """
+    w = rows.shape[-1]
+    return jnp.lexsort(tuple(rows[:, j] for j in range(w - 1, -1, -1)))
+
+
+def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.all(a == b, axis=-1)
+
+
+def run_ids(sorted_rows: jax.Array) -> jax.Array:
+    """Segment ids of equal-runs in lexicographically sorted rows.
+
+    run_ids[i] == run_ids[j] iff rows i and j are equal. ids are dense,
+    starting at 0.
+    """
+    neq = jnp.any(sorted_rows[1:] != sorted_rows[:-1], axis=-1)
+    new_run = jnp.concatenate([jnp.ones((1,), dtype=bool), neq])
+    return jnp.cumsum(new_run.astype(jnp.int32)) - 1
+
+
+def first_of_run(sorted_rows: jax.Array) -> jax.Array:
+    """(n,) bool — True at the first element of each equal-run."""
+    neq = jnp.any(sorted_rows[1:] != sorted_rows[:-1], axis=-1)
+    return jnp.concatenate([jnp.ones((1,), dtype=bool), neq])
+
+
+def hash_rows(rows: jax.Array, seed: int = 0x9E3779B9) -> jax.Array:
+    """Deterministic 32-bit mix hash of each row (for bucket assignment).
+
+    FNV-ish multiply/xor fold over the words; good enough dispersion for
+    bucketing (we never rely on it for adversarial inputs).
+    """
+    h = jnp.full(rows.shape[:-1], jnp.uint32(seed), dtype=jnp.uint32)
+    for j in range(rows.shape[-1]):
+        w = rows[..., j]
+        h = (h ^ w) * jnp.uint32(0x01000193)
+        h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    return h
+
+
+def compact_valid_first(rows: jax.Array, valid: jax.Array):
+    """Stable-partition rows so valid ones come first; invalid→sentinel.
+
+    Returns (rows, count). Order of the valid rows is preserved.
+    """
+    perm = jnp.argsort(~valid, stable=True)
+    rows = rows[perm]
+    valid = valid[perm]
+    rows = jnp.where(valid[:, None], rows, sentinel_rows(rows.shape[0], rows.shape[1]))
+    return rows, jnp.sum(valid.astype(jnp.int32))
+
+
+def segmented_reduce_last(
+    vals: jax.Array,
+    starts: jax.Array,
+    combine: Callable,
+):
+    """Segmented inclusive scan; position i holds the combine of its segment
+    prefix. The *last* position of each segment therefore holds the segment
+    total.
+
+    vals: (n, ...) payloads in segment order.
+    starts: (n,) bool, True at segment starts.
+    combine(a, b): associative payload combiner.
+    """
+
+    def op(left, right):
+        fl, vl = left
+        fr, vr = right
+        v = jnp.where(
+            fr if fr.ndim == vl.ndim else fr.reshape(fr.shape + (1,) * (vl.ndim - fr.ndim)),
+            vr,
+            combine(vl, vr),
+        )
+        return (fl | fr, v)
+
+    flags = starts
+    _, out = jax.lax.associative_scan(op, (flags, vals))
+    return out
+
+
+def tree_reduce(vals: jax.Array, merge: Callable, identity) -> jax.Array:
+    """Log-depth reduction of vals (leading axis) with a user monoid.
+
+    Pads to a power of two with ``identity``; merge must satisfy
+    merge(identity, x) == x.
+    """
+    n = vals.shape[0]
+    pow2 = 1
+    while pow2 < n:
+        pow2 *= 2
+    ident_row = jnp.broadcast_to(jnp.asarray(identity, dtype=vals.dtype), vals.shape[1:])
+    pad = jnp.broadcast_to(ident_row, (pow2 - n,) + vals.shape[1:])
+    x = jnp.concatenate([vals, pad], axis=0) if pow2 != n else vals
+    while x.shape[0] > 1:
+        half = x.shape[0] // 2
+        x = merge(x[:half], x[half:])
+    return x[0]
+
+
+def append_block(buf: jax.Array, count: jax.Array, block: jax.Array, valid: jax.Array):
+    """Append the valid rows of ``block`` to ``buf`` starting at ``count``.
+
+    buf: (cap, ...) with sentinel/garbage beyond count.
+    block: (m, ...); valid: (m,) bool.
+    Returns (buf, new_count, overflow). Valid rows are scattered to
+    positions [count, count+nvalid); writes past capacity are dropped and
+    ``overflow`` is set so callers can re-run with a larger capacity (the
+    Python-level "growth" path; see DESIGN.md §2 static-shape note).
+    """
+    cap = buf.shape[0]
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    # Destination of each valid row; invalid rows target ``cap`` → dropped.
+    dest = count + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid, dest, cap)
+    new_buf = buf.at[dest].set(block.astype(buf.dtype), mode="drop")
+    new_count = jnp.minimum(count + nvalid, cap)
+    overflow = count + nvalid > cap
+    return new_buf, new_count, overflow
+
+
+def pad_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

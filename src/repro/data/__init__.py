@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic + Roomy disk-backed streams."""
+from .pipeline import DiskTokenStream, SyntheticStream, make_batch, synth_tokens
+__all__ = ["DiskTokenStream", "SyntheticStream", "make_batch", "synth_tokens"]

@@ -1,0 +1,133 @@
+"""Data pipeline: deterministic synthetic LM stream + disk-backed dataset.
+
+Determinism contract (fault tolerance depends on it): batch content is a
+pure function of (seed, step) — after a restore-from-checkpoint the stream
+replays identically from the restored step, no iterator state to persist.
+
+Two sources:
+  SyntheticStream   hash-based token synthesis (no storage at all)
+  DiskTokenStream   tokens stored in a Roomy Tier-D ChunkStore and
+                    streamed chunk-at-a-time — the paper's disks-as-memory
+                    applied to the input pipeline (larger-than-RAM corpora)
+
+Both yield {"inputs": {"tokens", "positions"[, "embeds"]}, "labels"} ready
+for loss_fn, with a background prefetch thread (depth 2).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..core.disk.store import ChunkStore
+from ..models.config import ModelConfig
+
+
+def synth_tokens(seed: int, step: int, batch: int, seq: int,
+                 vocab: int) -> np.ndarray:
+    """Deterministic (seed, step)-keyed token block — a Markov-ish mix so
+    the loss is learnable (next token correlates with current)."""
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003)
+                                + np.uint64(step))
+    base = rng.integers(0, vocab, size=(batch, 1), dtype=np.int64)
+    steps = rng.integers(1, 7, size=(batch, seq), dtype=np.int64)
+    toks = (base + np.cumsum(steps, axis=1)) % vocab
+    return toks.astype(np.int32)
+
+
+def _positions(cfg: ModelConfig, batch: int, seq: int) -> np.ndarray:
+    pos = np.tile(np.arange(seq, dtype=np.int32)[None, :], (batch, 1))
+    if cfg.mrope:
+        return np.tile(pos[:, :, None], (1, 1, 3))
+    return pos
+
+
+def make_batch(cfg: ModelConfig, seed: int, step: int, batch: int,
+               seq: int) -> Dict:
+    toks = synth_tokens(seed, step, batch, seq + 1, cfg.vocab_size)
+    inputs = {"positions": _positions(cfg, batch, seq)}
+    if cfg.frontend_stub:
+        # Stub frontend: embed ids with a fixed random codebook (the
+        # "precomputed frame/patch embeddings" of the assignment).
+        rng = np.random.default_rng(1234)
+        book = rng.standard_normal((cfg.vocab_size, cfg.d_model)).astype(
+            np.float32) * 0.02
+        inputs["embeds"] = book[toks[:, :seq]]
+    else:
+        inputs["tokens"] = toks[:, :seq]
+    return {"inputs": inputs, "labels": toks[:, 1:seq + 1]}
+
+
+class SyntheticStream:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0, start_step: int = 0, prefetch: int = 2):
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+        self.step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self.step
+        while not self._stop.is_set():
+            b = make_batch(self.cfg, self.seed, step, self.batch, self.seq)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, b), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        step, b = self._q.get()
+        self.step = step + 1
+        return b
+
+    def __iter__(self) -> Iterator[Dict]:
+        return self
+
+    def close(self):
+        self._stop.set()
+
+
+class DiskTokenStream:
+    """Roomy Tier-D backed corpus: out-of-core token storage, streamed.
+
+    Build once with ``write_corpus``; batches are then read by chunk index —
+    still a pure function of step, so replay-after-restore holds.
+    """
+
+    def __init__(self, store_dir: str, cfg: ModelConfig, batch: int,
+                 seq: int, start_step: int = 0):
+        self.store = ChunkStore(store_dir, width=1, dtype="uint32",
+                                chunk_rows=(seq + 1) * batch)
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.step = start_step
+        assert self.store.n_chunks > 0, "corpus empty — run write_corpus"
+
+    @staticmethod
+    def write_corpus(store_dir: str, cfg: ModelConfig, batch: int, seq: int,
+                     n_steps: int, seed: int = 0) -> None:
+        store = ChunkStore(store_dir, width=1, dtype="uint32",
+                           chunk_rows=(seq + 1) * batch, fresh=True)
+        for step in range(n_steps):
+            toks = synth_tokens(seed, step, batch, seq + 1, cfg.vocab_size)
+            store.append(toks.reshape(-1, 1).astype(np.uint32))
+        store.flush()
+
+    def __next__(self) -> Dict:
+        chunk_i = self.step % self.store.n_chunks
+        rows = np.asarray(
+            np.load(self.store._chunk_path(chunk_i), mmap_mode="r"))
+        toks = rows.reshape(self.batch, self.seq + 1).astype(np.int32)
+        inputs = {"positions": _positions(self.cfg, self.batch, self.seq)}
+        inputs["tokens"] = toks[:, :self.seq]
+        self.step += 1
+        return {"inputs": inputs, "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        return self

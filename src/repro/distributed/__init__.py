@@ -1,0 +1,3 @@
+"""Distribution: per-arch sharding rules and mesh placement helpers."""
+from .sharding_rules import ShardingRules, named
+__all__ = ["ShardingRules", "named"]

@@ -1,0 +1,202 @@
+"""Per-arch sharding rules: params, batches, caches → PartitionSpecs.
+
+Policy (DESIGN.md §5): TP over ``model`` on head/ff/expert/vocab dims where
+the dim divides evenly; FSDP (ZeRO-3) over ``data`` (+``pod``) on the
+opposite dim; batch/tokens over (``pod``, ``data``). Divisibility fallbacks
+replicate the offending dim and are reported by ``describe()`` so every
+dry-run logs exactly which fallbacks fired.
+
+Leaf rules are keyed by parameter name with a *trailing-dims role pattern*;
+any extra leading dims (the layer-stack axes) get None automatically, so
+the same table serves flat, (L, …) and (L/2, 2, …) stacked layouts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+# trailing-dim role patterns per leaf name
+_PATTERNS: Dict[str, Tuple[str, ...]] = {
+    # embeddings: vocab TP over model; d over model only as the fallback
+    # when vocab doesn't divide (never over data — batch owns that axis in
+    # the gather; see §Perf iteration 0 in EXPERIMENTS.md)
+    "table": ("vocab", "d_embed"),
+    "head": ("d_embed", "vocab"),
+    # attention
+    "wq": ("fsdp", "tp_q"),
+    "wk": ("fsdp", "tp_kv"),
+    "wv": ("fsdp", "tp_kv"),
+    "wo": ("tp_q", "fsdp"),
+    # dense mlp
+    "up": ("fsdp", "tp_ff"),
+    "gate": ("fsdp", "tp_ff"),
+    "down": ("tp_ff", "fsdp"),
+    # moe (detected by ndim: expert leaves have a leading E dim)
+    "router": ("fsdp", "none"),
+    # mamba
+    "in_proj": ("fsdp", "tp_di"),
+    "conv_w": ("none", "tp_conv"),
+    "conv_b": ("tp_conv",),
+    "x_proj": ("tp_di", "none"),
+    "dt_proj": ("none", "tp_di"),
+    "dt_bias": ("none",),
+    "a_log": ("tp_di", "none"),
+    "d_skip": ("tp_di",),
+    "out_proj": ("tp_di", "fsdp"),
+    # norms
+    "ln1": ("none",), "ln2": ("none",), "post_ln1": ("none",),
+    "post_ln2": ("none",), "ln": ("none",), "norm": ("none",),
+    "final_norm": ("none",),
+}
+
+_MOE_PATTERNS: Dict[str, Tuple[str, ...]] = {
+    "up": ("ep", "fsdp", "none"),
+    "gate": ("ep", "fsdp", "none"),
+    "down": ("ep", "none", "fsdp"),
+}
+
+
+class ShardingRules:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = mesh.shape.get("model", 1)
+        self.fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        self.fsdp = math.prod(mesh.shape[a] for a in self.fsdp_axes) or 1
+        self.dp_axes = self.fsdp_axes
+        self.fallbacks: List[str] = []
+
+    # ------------------------------------------------------- role → axis
+    def _axis_for(self, role: str, dim: int, leaf: str) -> Optional[object]:
+        cfg, tp = self.cfg, self.tp
+        if role == "none":
+            return None
+        if role == "fsdp":
+            if self.fsdp > 1 and dim % self.fsdp == 0:
+                return self.fsdp_axes if len(self.fsdp_axes) > 1 \
+                    else self.fsdp_axes[0]
+            if self.fsdp > 1:
+                self.fallbacks.append(f"{leaf}: dim {dim} !% fsdp {self.fsdp}")
+            return None
+        if role == "d_embed":
+            # only shard d over model when the vocab dim could not be
+            if cfg.vocab_padded % tp != 0 and tp > 1 and dim % tp == 0:
+                return "model"
+            return None
+        # TP roles — require clean division by the model axis
+        ok = dim % tp == 0
+        if role == "tp_q":
+            ok = ok and cfg.n_heads % tp == 0
+        elif role == "tp_kv":
+            ok = ok and cfg.n_kv_heads % tp == 0
+        elif role == "vocab":
+            ok = ok and cfg.vocab_padded % tp == 0
+        if not ok:
+            if tp > 1:
+                self.fallbacks.append(f"{leaf}: role {role} dim {dim} "
+                                      f"replicated (tp={tp})")
+            return None
+        if role == "ep":
+            return "model"
+        return "model" if tp > 1 else None
+
+    def _spec_for(self, path: str, shape: Tuple[int, ...]) -> P:
+        leaf = path.split("/")[-1]
+        in_moe = "/moe/" in path or path.endswith("moe")
+        pattern = (_MOE_PATTERNS.get(leaf) if in_moe and leaf in _MOE_PATTERNS
+                   else _PATTERNS.get(leaf))
+        if pattern is None:
+            return P()                                    # replicate unknown
+        roles = ("none",) * (len(shape) - len(pattern)) + pattern
+        axes = [self._axis_for(r, d, f"{path}{shape}")
+                for r, d in zip(roles, shape)]
+        # vocab not divisible → try FSDP on the other dim is already in the
+        # pattern; nothing else to do.
+        return P(*axes)
+
+    # ----------------------------------------------------------- pytrees
+    def param_specs(self, params_shape) -> dict:
+        """params_shape: pytree of ShapeDtypeStruct (jax.eval_shape)."""
+        flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+        specs = {}
+        for kp, leaf in flat:
+            path = "/".join(str(getattr(k, "key", k)) for k in kp)
+            specs[path] = self._spec_for(path, leaf.shape)
+        treedef = jax.tree_util.tree_structure(params_shape)
+        return jax.tree_util.tree_unflatten(
+            treedef, [specs["/".join(str(getattr(k, "key", k)) for k in kp)]
+                      for kp, _ in flat])
+
+    def batch_spec(self) -> P:
+        """(B, S) token batches: batch over (pod, data)."""
+        ax = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        return P(ax)
+
+    def token_spec(self, extra_dims: int = 1) -> P:
+        ax = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+        return P(ax, *([None] * extra_dims))
+
+    def activation_spec(self) -> P:
+        """(B, S, d) activations."""
+        return self.token_spec(extra_dims=2)
+
+    def cache_specs(self, caches_shape, batch: int) -> dict:
+        """Decode caches. batch≥fsdp → shard batch dims; batch==1 (long
+        context) → shard the page/state dims over data (context
+        parallelism, DESIGN.md §5)."""
+        dp = self.dp_axes if len(self.dp_axes) > 1 else (
+            self.dp_axes[0] if self.dp_axes else None)
+
+        def spec(kp, leaf):
+            path = "/".join(str(getattr(k, "key", k)) for k in kp)
+            name = path.split("/")[-1].lstrip(".")   # NamedTuple GetAttrKey
+            # leaves: k_pages/v_pages (L, P, page, kvh, hd); page_table
+            # (L, B, pps); lengths (L, B); ssm conv (L, B, k, C), h (L, B, di, N)
+            if name in ("k_pages", "v_pages"):
+                if batch == 1:
+                    return P(None, dp, None, None, None)
+                return P(*([None] * (leaf.ndim - 4)), dp, None, None, None)
+            if name in ("page_table",):
+                if batch == 1:
+                    return P(*([None] * leaf.ndim))
+                return P(*([None] * (leaf.ndim - 2)), dp, None)
+            if name in ("lengths",):
+                if batch == 1:
+                    return P(*([None] * leaf.ndim))
+                return P(*([None] * (leaf.ndim - 1)), dp)
+            if name == "h":                      # (L, B, di, N)
+                if batch == 1:
+                    return P(*([None] * (leaf.ndim - 2)), "model", None)
+                return P(*([None] * (leaf.ndim - 3)), dp, None, None)
+            if name == "conv":                   # (L, B, k, channels)
+                if batch == 1:
+                    return P(*([None] * (leaf.ndim - 1)), "model")
+                return P(*([None] * (leaf.ndim - 3)), dp, None, None)
+            return P()
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+        return jax.tree_util.tree_unflatten(
+            treedef, [spec(kp, leaf) for kp, leaf in flat])
+
+    def describe(self) -> str:
+        lines = [f"mesh={dict(self.mesh.shape)} tp={self.tp} "
+                 f"fsdp={self.fsdp} axes={self.fsdp_axes}"]
+        if self.fallbacks:
+            lines.append("sharding fallbacks (replicated dims):")
+            lines += [f"  - {f}" for f in sorted(set(self.fallbacks))]
+        else:
+            lines.append("no sharding fallbacks")
+        return "\n".join(lines)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention      blockwise online-softmax attention
+                       (causal/local/softcap/GQA, optional LSE residual)
+  flash_attention_bwd  the matching backward pair (dkdv + dq kernels),
+                       wired through ops.flash_attention's custom_vjp
+  mamba_scan           chunked selective scan for mamba1/mamba2 archs
+  paged_decode         flash-decoding over Roomy KV pages (scalar-prefetch
+                       page-table DMA indexing — the serving hot loop)
+  bucket_scatter       segment scatter-add — the Roomy sync apply phase
+
+ref.py also hosts the mamba2 SSD (chunked matmul) form — pure-jnp but
+MXU-shaped, the §Perf cell-C optimization. Each kernel has a pure-jnp
+oracle; ops.py holds the jit'd backend-dispatching wrappers. Kernels are
+TPU-target and validated in interpret mode on CPU (tests/test_kernels.py
+sweeps shapes × dtypes; backward vs jax.grad of the naive oracle).
+"""
+from . import ops, ref
+from .ops import bucket_scatter_add, flash_attention, mamba_scan
+
+__all__ = ["ops", "ref", "bucket_scatter_add", "flash_attention",
+           "mamba_scan"]

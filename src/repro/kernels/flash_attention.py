@@ -1,0 +1,188 @@
+"""Pallas TPU flash attention — the compute hot spot of every attention arch.
+
+TPU-native design (DESIGN.md §7): online-softmax blockwise attention with
+q/kv tiles sized for the 128×128 MXU and all accumulators resident in VMEM.
+The kv-block grid axis is the innermost ("arbitrary" = sequential) axis, so
+the (BQ, D) f32 accumulator + (BQ,) m/l statistics persist in VMEM scratch
+across kv steps — the HBM traffic is exactly one read of Q/K/V and one
+write of O (the flash property).
+
+Variants needed by the assigned archs (all compile-time flags):
+  causal         decoder LMs
+  local window   gemma2 alternating local layers (sliding window)
+  logit softcap  gemma2 (tanh soft-capping)
+  GQA            q-head groups share one kv head (phi3.5/minicpm/…)
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); kv innermost-sequential.
+Block shapes: q (1, 1, BQ, D), k/v (1, 1, BK, D), out (1, 1, BQ, D).
+Scratch: acc (BQ, D) f32, m (BQ, 1) f32, l (BQ, 1) f32 — ~BQ·(D+2)·4 bytes
+≈ 66 KB at BQ=128, D=128: comfortably inside one core's VMEM next to the
+~128 KB of q/k/v tiles.
+
+Causal skipping: fully-masked kv blocks are skipped with @pl.when (no MXU
+work issued), giving the ~2× causal saving.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int | None,
+                 softcap: float | None, bq: int, bk: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # Static-shape block skip decisions are data-independent → pl.when.
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window is not None:
+        run = run & (k_start + bk - 1 >= q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos >= q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                           # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def _attn_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                     l_ref, **kw):
+    """Forward variant that also emits the row log-sum-exp (bwd residual)."""
+    _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, **kw)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == nk - 1)
+    def _emit_lse():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        lse_ref[0, 0] = (m_ref[:, 0] + jnp.log(safe_l)).astype(lse_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, D) in q.dtype (and the (B, Hq, Sq) f32 row
+    log-sum-exp when return_lse — the backward residual). Sequences are
+    padded to block multiples internally; `window` is the number of
+    *previous* positions visible (exclusive of self), matching gemma2's
+    sliding window.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(skv, 8))
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+
+    grid = (b, hq, sq_p // bq, skv_p // bk)
+    kw = dict(scale=scale, causal=causal, window=window,
+              softcap=softcap, bq=bq, bk=bk, seq_kv=skv)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda bb, h, qi, ki, g=groups: (bb, h // g, ki, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda bb, h, qi, ki, g=groups: (bb, h // g, ki, 0)),
+    ]
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0))
+    scratch = [
+        pltpu.VMEM((bq, d), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+    ]
+    params = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"))
+    if return_lse:
+        out, lse = pl.pallas_call(
+            functools.partial(_attn_kernel_lse, **kw),
+            grid=grid, in_specs=in_specs,
+            out_specs=(o_spec,
+                       pl.BlockSpec((1, 1, bq),
+                                    lambda bb, h, qi, ki: (bb, h, qi))),
+            out_shape=(jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+                       jax.ShapeDtypeStruct((b, hq, sq_p), jnp.float32)),
+            scratch_shapes=scratch, compiler_params=params,
+            interpret=interpret, name="roomy_flash_attention_fwd",
+        )(q, k, v)
+        return out[:, :, :sq, :], lse[:, :, :sq]
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, **kw),
+        grid=grid, in_specs=in_specs, out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=scratch, compiler_params=params,
+        interpret=interpret, name="roomy_flash_attention",
+    )(q, k, v)
+    return out[:, :, :sq, :]

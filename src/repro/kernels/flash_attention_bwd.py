@@ -1,0 +1,223 @@
+"""Pallas TPU flash-attention backward — completes the kernel pair.
+
+Standard two-kernel decomposition (FlashAttention-2 style):
+
+  dkdv kernel   grid (B, Hq, KVb, Qb←sequential): per kv block, accumulate
+                dK/dV over all visible q blocks in VMEM scratch
+  dq kernel     grid (B, Hq, Qb, KVb←sequential): per q block, accumulate
+                dQ over all visible kv blocks
+
+Recomputation uses the forward's LSE residual (one f32 row per query —
+flash_attention(…, return_lse=True)), plus D = rowsum(dO ∘ O) computed in
+plain jnp by the wrapper (elementwise; not worth a kernel).
+
+GQA: gradients are produced per *query* head — the ops.py wrapper sums
+dK/dV over each kv head's group (exactly what the math says).
+
+Softcap: s = c·tanh(u/c) ⇒ ds/du = 1 − (s/c)², applied inside both
+kernels. Causal/window masking matches the forward block-skip logic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import NEG_INF
+
+
+def _logits(q, k, scale, softcap):
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_capped = jnp.tanh(s / softcap) * softcap
+        dcap = 1.0 - jnp.square(s_capped / softcap)
+        return s_capped, dcap
+    return s, None
+
+
+def _mask(q_start, k_start, bq, bk, seq_kv, causal, window):
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = k_pos < seq_kv
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos >= q_pos - window
+    return m
+
+
+def _run(q_start, k_start, bq, bk, causal, window):
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window is not None:
+        run = run & (k_start + bk - 1 >= q_start - window)
+    return run
+
+
+def _dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
+                 dk_ref, dv_ref, dk_acc, dv_acc, *,
+                 scale, causal, window, softcap, bq, bk, seq_kv):
+    kvi = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start, k_start = qi * bq, kvi * bk
+
+    @pl.when(_run(q_start, k_start, bq, bk, causal, window))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]                           # (bq,)
+        dvec = dvec_ref[0, 0]                         # (bq,) rowsum(dO·O)
+        s, dcap = _logits(q, k, scale, softcap)
+        msk = _mask(q_start, k_start, bq, bk, seq_kv, causal, window)
+        p = jnp.exp(jnp.where(msk, s, NEG_INF) - lse[:, None])
+        p = jnp.where(msk, p, 0.0)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # pᵀ dO (bk, d)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (bq, bk)
+        ds = p * (dp - dvec[:, None])
+        if softcap is not None:
+            ds = ds * dcap
+        ds = ds * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # dsᵀ q (bk, d)
+
+    @pl.when(qi == nq - 1)
+    def _emit():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref,
+               dq_acc, *, scale, causal, window, softcap, bq, bk, seq_kv):
+    qi = pl.program_id(2)
+    kvi = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kvi == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start, k_start = qi * bq, kvi * bk
+
+    @pl.when(_run(q_start, k_start, bq, bk, causal, window))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        dvec = dvec_ref[0, 0]
+        s, dcap = _logits(q, k, scale, softcap)
+        msk = _mask(q_start, k_start, bq, bk, seq_kv, causal, window)
+        p = jnp.exp(jnp.where(msk, s, NEG_INF) - lse[:, None])
+        p = jnp.where(msk, p, 0.0)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ds = p * (dp - dvec[:, None])
+        if softcap is not None:
+            ds = ds * dcap
+        ds = ds * scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # ds k (bq, d)
+
+    @pl.when(kvi == nk - 1)
+    def _emit():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, o, lse, do, *,
+    causal=True, window=None, softcap=None, scale=None,
+    block_q=128, block_k=128, interpret=False,
+):
+    """Returns (dq (B,Hq,Sq,D), dk (B,Hq,Skv,D), dv (B,Hq,Skv,D)).
+
+    dk/dv are per *query* head; sum groups for GQA (ops wrapper).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(skv, 8))
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bk) * bk
+    pad_q = [(0, 0), (0, 0), (0, sq_p - sq), (0, 0)]
+    pad_k = [(0, 0), (0, 0), (0, skv_p - skv), (0, 0)]
+    if sq_p != sq:
+        q, o, do = (jnp.pad(x, pad_q) for x in (q, o, do))
+        lse = jnp.pad(lse, [(0, 0), (0, 0), (0, sq_p - sq)],
+                      constant_values=0.0)
+    if skv_p != skv:
+        k, v = (jnp.pad(x, pad_k) for x in (k, v))
+
+    dvec = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                   axis=-1)                             # (b, hq, sq_p)
+
+    kw = dict(scale=scale, causal=causal, window=window, softcap=softcap,
+              bq=bq, bk=bk, seq_kv=skv)
+    g = groups
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda bb, h, x, y: (bb, h, y, 0))
+    k_spec = pl.BlockSpec((1, 1, bk, d),
+                          lambda bb, h, x, y: (bb, h // g, x, 0))
+    row_spec = pl.BlockSpec((1, 1, bq), lambda bb, h, x, y: (bb, h, y))
+    params = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkdv_kernel, **kw),
+        grid=(b, hq, skv_p // bk, sq_p // bq),
+        in_specs=[q_spec, k_spec, k_spec, q_spec, row_spec, row_spec],
+        out_specs=(pl.BlockSpec((1, 1, bk, d),
+                                lambda bb, h, x, y: (bb, h, x, 0)),
+                   pl.BlockSpec((1, 1, bk, d),
+                                lambda bb, h, x, y: (bb, h, x, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, hq, skv_p, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hq, skv_p, d), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        compiler_params=params, interpret=interpret,
+        name="roomy_flash_attention_dkdv",
+    )(q, k, v, do, lse, dvec)
+
+    q_spec2 = pl.BlockSpec((1, 1, bq, d), lambda bb, h, x, y: (bb, h, x, 0))
+    k_spec2 = pl.BlockSpec((1, 1, bk, d),
+                           lambda bb, h, x, y: (bb, h // g, y, 0))
+    row_spec2 = pl.BlockSpec((1, 1, bq), lambda bb, h, x, y: (bb, h, x))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **kw),
+        grid=(b, hq, sq_p // bq, skv_p // bk),
+        in_specs=[q_spec2, k_spec2, k_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, x, y: (bb, h, x, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=params, interpret=interpret,
+        name="roomy_flash_attention_dq",
+    )(q, k, v, do, lse, dvec)
+
+    return (dq[:, :, :sq].astype(q.dtype),
+            dk[:, :, :skv].astype(q.dtype),
+            dv[:, :, :skv].astype(q.dtype))

@@ -1,0 +1,102 @@
+"""Pallas TPU selective-scan (Mamba) kernel — the SSM archs' dominant op.
+
+The recurrence per (channel i, state j):
+
+    h[i,j] ← exp(Δ_t·A[i,j])·h[i,j] + (Δ_t·x_t[i])·B_t[j]
+    y_t[i]  = Σ_j C_t[j]·h[i,j] + D[i]·x_t[i]
+
+TPU adaptation (DESIGN.md §7): time is *chunked* — the grid's innermost
+(sequential) axis walks time chunks while the (BD, N) state block lives in
+VMEM scratch across steps, so HBM traffic is one streaming read of
+x/Δ/B/C and one write of y per chunk: the Roomy streaming discipline
+applied to the time dimension. batch × channel-blocks are the parallel
+grid axes (channel blocks are independent, unlike attention rows).
+
+d_state N is small (16 for falcon-mamba / 64-128 for mamba2's head form),
+so the per-step work is VPU-heavy outer products; the MXU matmul form
+(chunked SSD) is a possible further optimization, noted in EXPERIMENTS.md.
+
+mamba2 reduces to this kernel with A[i,j] = a_head(i) broadcast and x/Δ in
+(heads·head_dim) channel layout (see models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BD = 256    # channel block
+DEFAULT_BT = 128    # time chunk
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref, *,
+                 bt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                 # (bd, n)
+    d = d_ref[...].astype(jnp.float32)                 # (1, bd)
+
+    def step(t, h):
+        xt = x_ref[0, t].astype(jnp.float32)           # (bd,)
+        dtt = dt_ref[0, t].astype(jnp.float32)         # (bd,)
+        bt_ = b_ref[0, t].astype(jnp.float32)          # (n,)
+        ct = c_ref[0, t].astype(jnp.float32)           # (n,)
+        da = jnp.exp(dtt[:, None] * a)                 # (bd, n)
+        h = h * da + (dtt * xt)[:, None] * bt_[None, :]
+        y = jnp.sum(h * ct[None, :], axis=1) + d[0] * xt
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bt, step, h_ref[...])
+    h_ref[...] = h
+
+
+def mamba_scan(
+    x: jax.Array,       # (B, L, Di)
+    dt: jax.Array,      # (B, L, Di)  — already softplus'd Δ
+    a: jax.Array,       # (Di, N)     — negative decay rates
+    b: jax.Array,       # (B, L, N)
+    c: jax.Array,       # (B, L, N)
+    d: jax.Array,       # (Di,)
+    *,
+    block_d: int = DEFAULT_BD,
+    block_t: int = DEFAULT_BT,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y: (B, L, Di) in x.dtype. L must be a multiple of block_t
+    (callers pad); Di a multiple of block_d (block shrinks if Di small)."""
+    bsz, seq, di = x.shape
+    n = a.shape[1]
+    bd = min(block_d, di)
+    bt = min(block_t, seq)
+    assert di % bd == 0 and seq % bt == 0, (di, bd, seq, bt)
+
+    grid = (bsz, di // bd, seq // bt)
+    kernel = functools.partial(_scan_kernel, bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),   # x
+            pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),   # dt
+            pl.BlockSpec((bd, n), lambda bb, dd, tt: (dd, 0)),            # a
+            pl.BlockSpec((1, bt, n), lambda bb, dd, tt: (bb, tt, 0)),     # b
+            pl.BlockSpec((1, bt, n), lambda bb, dd, tt: (bb, tt, 0)),     # c
+            pl.BlockSpec((1, bd), lambda bb, dd, tt: (0, dd)),            # d
+        ],
+        out_specs=pl.BlockSpec((1, bt, bd), lambda bb, dd, tt: (bb, tt, dd)),
+        out_shape=jax.ShapeDtypeStruct((bsz, seq, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="roomy_mamba_scan",
+    )(x, dt, a, b, c, d.reshape(1, -1))

@@ -1,0 +1,123 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend dispatch policy (DESIGN.md §7):
+  * TPU backend → pl.pallas_call (compiled Mosaic kernel)
+  * anything else (CPU CI, the 512-device dry-run) → interpret mode for
+    explicitly-requested kernel validation, otherwise the blocked jnp
+    reference, whose HLO has the same FLOP count and a matching streaming
+    memory profile (what cost_analysis reads).
+
+``impl`` arg: "auto" | "pallas" | "interpret" | "ref".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import bucket_scatter as _bs
+from . import flash_attention as _fa
+from . import mamba_scan as _ms
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+# ------------------------------------------------------------- attention
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_kernel_vjp(q, k, v, causal, window, softcap, scale, block_q,
+                      block_k, interpret):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, scale, block_q, block_k,
+               interpret):
+    o, lse = _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_impl(causal, window, softcap, scale, block_q, block_k,
+                    interpret, res, do):
+    from .flash_attention_bwd import flash_attention_bwd
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if g > 1:                                 # GQA: sum the query group
+        skv = k.shape[2]
+        dk = dk.reshape(b, hkv, g, skv, d).sum(2)
+        dv = dv.reshape(b, hkv, g, skv, d).sum(2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_kernel_vjp.defvjp(_flash_fwd, _flash_bwd_impl)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, impl="auto", block_q=128, block_k=128):
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _flash_kernel_vjp(q, k, v, causal, window, softcap, scale,
+                                 block_q, block_k, mode == "interpret")
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale, block_k=block_k)
+
+
+# ------------------------------------------------------------ mamba scan
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_d", "block_t"))
+def mamba_scan(x, dt, a, b, c, d, *, impl="auto", block_d=256, block_t=128):
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        bsz, seq, di = x.shape
+        bt = min(block_t, seq)
+        pad = (-seq) % bt
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        bd = block_d
+        while di % bd:
+            bd //= 2
+        y = _ms.mamba_scan(x, dt, a, b, c, d, block_d=bd, block_t=bt,
+                           interpret=(mode == "interpret"))
+        return y[:, :seq]
+    # ref path: the associative form materializes (B, L, Di, N) — fine for
+    # tests, ruinous at dry-run scale. Long sequences use the sequential
+    # scan, whose live state matches the Pallas kernel's VMEM footprint.
+    if x.shape[1] > 512:
+        return _ref.mamba_scan_seq_ref(x, dt, a, b, c, d)
+    return _ref.mamba_scan_ref(x, dt, a, b, c, d)
+
+
+# --------------------------------------------------------- bucket scatter
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_m"))
+def bucket_scatter_add(table, idx, payload, *, impl="auto", block_m=256):
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _bs.bucket_scatter_add(table, idx, payload, block_m=block_m,
+                                      interpret=(mode == "interpret"))
+    return _ref.bucket_scatter_add_ref(table, idx, payload)

@@ -1,0 +1,246 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the implementations the model stack uses on non-TPU backends
+and under the dry-run (kernels lower to XLA HLO there — see DESIGN.md §7).
+``attention_ref`` is written in the *blocked online-softmax* form (a scan
+over kv chunks) so its HLO memory profile matches the flash kernel rather
+than materializing S×S logits; ``attention_naive`` is the O(S²)-memory
+textbook form used only as the oracle-of-the-oracle in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------- attention
+
+def _mask(q_pos, k_pos, seq_kv, causal, window):
+    m = k_pos < seq_kv
+    if causal:
+        m = m & (k_pos <= q_pos)
+    if window is not None:
+        m = m & (k_pos >= q_pos - window)
+    return m
+
+
+def attention_naive(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None):
+    """(B, Hq, Sq, D) x (B, Hkv, Skv, D) — materializes full logits."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    s = jnp.where(_mask(q_pos, k_pos, skv, causal, window), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None, block_k: int = 512):
+    """Blocked online-softmax attention (flash semantics, pure jnp).
+
+    Scans kv in chunks of block_k carrying (acc, m, l) — O(Sq·D) live
+    memory. This is the model-stack attention on every non-TPU backend.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bk = min(block_k, skv)
+    skv_p = -(-skv // bk) * bk
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nk = skv_p // bk
+    kb = k.reshape(b, hkv, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq)[:, None]
+
+    def step(carry, inp):
+        acc, m_prev, l_prev, ki = carry[0], carry[1], carry[2], carry[3]
+        kc, vc = inp
+        kc = jnp.repeat(kc.astype(jnp.float32), g, axis=1)   # (b, hq, bk, d)
+        vc = jnp.repeat(vc.astype(jnp.float32), g, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = ki * bk + jnp.arange(bk)[None, :]
+        msk = _mask(q_pos, k_pos, skv, causal, window)
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        p = jnp.where(msk[None, None], p, 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (acc, m_cur, l_cur, ki + 1), None
+
+    init = (jnp.zeros((b, hq, sq, d), jnp.float32),
+            jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((), jnp.int32))
+    (acc, m, l, _), _ = jax.lax.scan(step, init, (kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, mask, *, softcap=None, scale=None):
+    """Single-position decode attention over a (paged) cache.
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); mask: (B, S) validity.
+    GQA via grouped einsum — K/V are never repeated or upcast in HBM
+    (the f32+repeat form peaked at g·2× the cache size; §Perf note)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------ mamba scan
+
+def mamba_scan_ref(x, dt, a, b, c, d):
+    """Associative-scan oracle of kernels/mamba_scan.py (same signature)."""
+    bsz, seq, di = x.shape
+    n = a.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    af, bf, cf = a.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * af[None, None])            # (B, L, Di, N)
+    dbx = (dtf * xf)[..., None] * bf[:, :, None, :]          # (B, L, Di, N)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    y = jnp.einsum("blin,bln->bli", h, cf) + xf * d.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype)
+
+
+def mamba_scan_seq_stateful(x, dt, a, b, c, d, h0=None):
+    """Sequential scan returning (y, final_state) — the prefill form."""
+    bsz, seq, di = x.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * a[None])               # (B, Di, N)
+        h = h * da + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, ct) + xt * d[None]
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    xs = (x.astype(jnp.float32).swapaxes(0, 1),
+          dt.astype(jnp.float32).swapaxes(0, 1),
+          b.astype(jnp.float32).swapaxes(0, 1),
+          c.astype(jnp.float32).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last
+
+
+def mamba_scan_seq_ref(x, dt, a, b, c, d):
+    """Sequential-scan second oracle (independent of associative form)."""
+    return mamba_scan_seq_stateful(x, dt, a, b, c, d)[0]
+
+
+# ------------------------------------------------------- mamba2 SSD form
+
+def mamba2_ssd(x, dt, a, b, c, d, *, chunk: int = 128, h0=None):
+    """Chunked state-space-dual (matmul) form of mamba2 — beyond-paper
+    optimization for the memory-bound sequential scan (§Perf cell C).
+
+    Valid when the decay is scalar-per-head (mamba2). Within a chunk of Q
+    steps everything is dense matmuls (MXU work, no per-step state in HBM);
+    one (H, P, N) state hand-off crosses chunks.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a: (H,) negative;
+    b, c: (B, L, N) (single group); d: (H,).
+    Returns (y (B, L, H, P), h_last (B, H, P, N)).
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xf = x.astype(jnp.float32).reshape(bs, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bs, nc, q, h)
+    bf = b.astype(jnp.float32).reshape(bs, nc, q, n)
+    cf = c.astype(jnp.float32).reshape(bs, nc, q, n)
+    af = a.astype(jnp.float32)
+
+    # per-chunk log-decay prefix: cum[t] = Σ_{r≤t} dt_r·a   (≤ 0)
+    log_a = dtf * af[None, None, None, :]              # (B, NC, Q, H)
+    cum = jnp.cumsum(log_a, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Qt,Qs,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    g = jnp.einsum("bktn,bksn->bkts", cf, bf)          # (B,NC,Qt,Qs)
+    m = g[..., None] * w * dtf[:, :, None, :, :]       # (B,NC,Qt,Qs,H)
+    y_intra = jnp.einsum("bktsh,bkshp->bkthp", m, xf)
+
+    # inter-chunk: scan the (H, P, N) hand-off
+    decay_full = jnp.exp(cum[:, :, -1])                # (B, NC, H)
+    # state injected by chunk k: Σ_s exp(cum_last-cum_s)·dt_s·x_s ⊗ B_s
+    wsrc = jnp.exp(cum[:, :, -1:, :] - cum) * dtf      # (B,NC,Q,H)
+    inj = jnp.einsum("bkqh,bkqhp,bkqn->bkhpn", wsrc, xf, bf)
+
+    def step(hprev, inp):
+        dk, ik = inp                                   # (B,H), (B,H,P,N)
+        hnew = hprev * dk[..., None, None] + ik
+        return hnew, hprev                             # emit PRE-chunk state
+
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step, h0, (decay_full.swapaxes(0, 1), inj.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                         # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bkqh,bkqn,bkhpn->bkqhp",
+                         jnp.exp(cum), cf, h_in)
+    y = (y_intra + y_inter).reshape(bs, nc * q, h, p)[:, :l]
+    y = y + x.astype(jnp.float32)[:, :l] * d.astype(jnp.float32)[None, None, :, None]
+    return y, h_last
+
+
+# --------------------------------------------------------- bucket scatter
+
+def bucket_scatter_add_ref(table, idx, payload):
+    """Oracle of kernels/bucket_scatter.py: dropped out-of-range indices."""
+    n = table.shape[0]
+    idx = jnp.where(idx < n, idx, n)
+    acc = table.astype(jnp.float32).at[idx].add(
+        payload.astype(jnp.float32), mode="drop")
+    return acc.astype(table.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline, train, serve.
+No jax imports at package level (dryrun must set XLA_FLAGS first)."""

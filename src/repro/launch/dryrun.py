@@ -1,0 +1,384 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512
+placeholder CPU devices stand in for 2 TPU v5e pods; ``.lower().compile()``
+must succeed and yields memory_analysis (fits?), cost_analysis (FLOPs /
+bytes) and the partitioned HLO whose collective schedule feeds §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+      --shape train_4k --mesh single --out-dir experiments/dryrun
+  ... --list  prints all runnable cells.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs import SHAPES, get_config, shape_applicable
+from ..configs.inputs import input_specs
+from ..configs.registry import ARCH_IDS
+from ..distributed.sharding_rules import ShardingRules, named
+from ..models import lm
+from .mesh import make_production_mesh
+
+# ----------------------------------------------------- HLO collective scan
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64"
+                       r"|u64|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str, n_devices: int) -> Dict:
+    """Per-device operand bytes + wire-bytes estimate per collective kind.
+
+    Shapes in the partitioned module are per-device shards. Conventions:
+      all-reduce         operand = result;      wire ≈ 2·B·(g-1)/g
+      all-gather         operand = result/g;    wire ≈ (result/g)·(g-1)
+      reduce-scatter     operand = result·g;    wire ≈ result·(g-1)
+      all-to-all         operand = result;      wire ≈ B·(g-1)/g
+      collective-permute operand = result;      wire = B
+    """
+    stats = {k: {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0}
+             for k in ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute")}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result)
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            g = len(gl.group(1).split(",")) if gl else n_devices
+        g = max(g, 1)
+        if kind == "all-reduce":
+            op_b, wire = b, 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            op_b, wire = b // g, (b // g) * (g - 1)
+        elif kind == "reduce-scatter":
+            op_b, wire = b * g, b * (g - 1)
+        elif kind == "all-to-all":
+            op_b, wire = b, b * (g - 1) / g
+        else:
+            op_b, wire = b, float(b)
+        s = stats[kind]
+        s["count"] += 1
+        s["operand_bytes"] += op_b
+        s["wire_bytes"] += wire
+    stats["total_operand_bytes"] = sum(
+        s["operand_bytes"] for s in stats.values() if isinstance(s, dict))
+    stats["total_wire_bytes"] = sum(
+        s["wire_bytes"] for s in stats.values() if isinstance(s, dict))
+    return stats
+
+
+# ------------------------------------------------------------- cell runner
+
+def _batch_shardings(tree, mesh, rules: ShardingRules):
+    """Shard every batch-dim-leading input leaf over the dp axes (replicate
+    when the batch doesn't tile them, e.g. long_500k's batch=1)."""
+    dp = rules.dp_axes
+    dp_n = rules.fsdp
+
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 0
+        if dp and b % dp_n == 0 and b > 0:
+            ax = dp if len(dp) > 1 else dp[0]
+            return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(spec, tree)
+
+
+def _build_lowered(cfg, shape, mesh, rules: ShardingRules, donate: bool,
+                   microbatches: int = 1):
+    """Lower the cell's step function (train/prefill/decode)."""
+    params_shape = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = rules.param_specs(params_shape)
+    p_shard = named(mesh, pspecs)
+    specs_in = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(optim.init, params_shape)
+        opt_shard = optim.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=named(mesh, pspecs), v=named(mesh, pspecs))
+        batch_shard = _batch_shardings(specs_in, mesh, rules)
+
+        def step(params, opt_state, batch):
+            if microbatches > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(
+                        (microbatches, x.shape[0] // microbatches)
+                        + x.shape[1:]), batch)
+
+                def body(acc, mbatch):
+                    loss, g = jax.value_and_grad(
+                        lambda p: lm.loss_fn(p, mbatch, cfg, mesh))(params)
+                    g32 = jax.tree.map(lambda y: y.astype(jnp.float32), g)
+                    return (jax.tree.map(jnp.add, acc[0], g32),
+                            acc[1] + loss), None
+
+                zero = (jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                        jnp.zeros((), jnp.float32))
+                (gsum, lsum), _ = jax.lax.scan(body, zero, mb)
+                grads = jax.tree.map(lambda g: g / microbatches, gsum)
+                loss = lsum / microbatches
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: lm.loss_fn(p, batch, cfg, mesh))(params)
+            params, opt_state, gnorm = optim.update(
+                grads, opt_state, params, lr=1e-4)
+            return params, opt_state, loss
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard, batch_shard),
+            out_shardings=(p_shard, opt_shard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(params_shape, opt_shape, specs_in)
+    if shape.kind == "prefill":
+        batch_shard = _batch_shardings(specs_in, mesh, rules)
+
+        def step(params, batch):
+            return lm.prefill(params, batch["inputs"], cfg, mesh)
+
+        jitted = jax.jit(step, in_shardings=(p_shard, batch_shard))
+        return jitted.lower(params_shape, specs_in)
+    # decode
+    cache_spec_tree = rules.cache_specs(specs_in["caches"],
+                                        shape.global_batch)
+    cache_shard = named(mesh, cache_spec_tree)
+    in_shard = _batch_shardings(specs_in["inputs"], mesh, rules)
+
+    def step(params, inputs, caches):
+        return lm.decode_step(params, inputs, caches, cfg, mesh)
+
+    jitted = jax.jit(
+        step, in_shardings=(p_shard, in_shard, cache_shard),
+        out_shardings=(NamedSharding(mesh, P()), cache_shard),
+        donate_argnums=(2,) if donate else ())
+    return jitted.lower(params_shape, specs_in["inputs"],
+                        specs_in["caches"])
+
+
+def _flops_points(cfg) -> tuple:
+    """(k1, k2) unrolled depths for per-layer FLOP extrapolation."""
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        return k, 2 * k
+    if cfg.local_global_pattern:
+        return 2, 4
+    return 2, 4
+
+
+def _counted_flops(cfg, shape, mesh, rules) -> Dict:
+    """Unrolled-twin FLOP count with layer extrapolation (scan bodies are
+    counted once by XLA — measured; see EXPERIMENTS.md §Roofline method)."""
+    k1, k2 = _flops_points(cfg)
+    block_k = max(shape.seq_len, 512)
+    fs = []
+    for k in (k1, k2):
+        cfg_k = cfg.replace(n_layers=k, scan_layers=False,
+                            attn_block_k=block_k)
+        lowered = _build_lowered(cfg_k, shape, mesh, rules, donate=False)
+        fs.append(lowered.compile().cost_analysis().get("flops", 0.0))
+    per_layer = (fs[1] - fs[0]) / (k2 - k1)
+    total = fs[0] + per_layer * (cfg.n_layers - k1)
+    # Sequential time-scan correction (ssm/hybrid): the mamba recurrence is
+    # a while loop over time in every mode; add its analytic FLOPs.
+    corr = 0.0
+    if cfg.mamba_version and shape.kind != "decode":
+        tokens = shape.global_batch * shape.seq_len
+        per_tok_layer = 7.0 * cfg.d_inner * cfg.ssm_state
+        mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd(≈2×)
+        if shape.kind == "train" and cfg.remat:
+            mult += 1.0                                # remat refwd
+        corr = (tokens * per_tok_layer * cfg.n_layers * mult
+                / mesh.devices.size)
+    return {"flops_k1": fs[0], "flops_k2": fs[1],
+            "flops_per_layer": per_layer,
+            "scan_time_correction": corr,
+            "flops_per_device_counted": total + corr}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             moe_dispatch: Optional[str] = None,
+             embed_dispatch: Optional[str] = None,
+             remat: Optional[bool] = None,
+             donate: bool = True,
+             count_flops: bool = True,
+             microbatches: int = 1,
+             attn_shard: Optional[str] = None,
+             ssm_impl: Optional[str] = None,
+             save_hlo: Optional[str] = None) -> Dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch).replace(kernels="ref")
+    if moe_dispatch:
+        cfg = cfg.replace(moe_dispatch=moe_dispatch)
+    if embed_dispatch:
+        cfg = cfg.replace(embedding_dispatch=embed_dispatch)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if attn_shard is not None:
+        cfg = cfg.replace(attn_activation_shard=attn_shard)
+    if ssm_impl is not None:
+        cfg = cfg.replace(mamba2_use_ssd=(ssm_impl == "ssd"))
+
+    meta = {"arch": arch, "shape": shape_name, "microbatches": microbatches,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind, "seq_len": shape.seq_len,
+            "global_batch": shape.global_batch,
+            "moe_dispatch": cfg.moe_dispatch,
+            "embed_dispatch": cfg.embedding_dispatch,
+            "remat": cfg.remat,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+    if not shape_applicable(shape, cfg.family):
+        return {**meta, "skipped":
+                "long_500k needs sub-quadratic attention (full-attention "
+                "arch) — see DESIGN.md §6"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = ShardingRules(cfg, mesh)
+
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, rules, donate,
+                             microbatches=microbatches)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, n_dev)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    flops_info = {}
+    if count_flops:
+        try:
+            flops_info = _counted_flops(cfg, shape, mesh, rules)
+        except Exception as e:                       # pragma: no cover
+            flops_info = {"flops_count_error": repr(e)}
+
+    result = {
+        **meta,
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "collectives": coll,
+        **flops_info,
+        "sharding_notes": rules.describe(),
+    }
+    return result
+
+
+def cells(include_multi: bool = True):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            yield arch, shape_name, False
+            if include_multi:
+                yield arch, shape_name, True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--moe-dispatch", choices=("roomy", "einsum"))
+    ap.add_argument("--embed-dispatch", choices=("gspmd", "roomy"))
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--skip-flops", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--attn-shard", choices=("auto", "none"))
+    ap.add_argument("--ssm-impl", choices=("ssd", "seq"))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape, multi in cells():
+            print(f"{arch} {shape} {'multi' if multi else 'single'}")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    res = run_cell(args.arch, args.shape, args.mesh == "multi",
+                   moe_dispatch=args.moe_dispatch,
+                   embed_dispatch=args.embed_dispatch,
+                   remat=False if args.no_remat else None,
+                   donate=not args.no_donate,
+                   count_flops=not args.skip_flops,
+                   microbatches=args.microbatches,
+                   attn_shard=args.attn_shard,
+                   ssm_impl=args.ssm_impl,
+                   save_hlo=args.save_hlo)
+    tag = f"__{args.tag}" if args.tag else ""
+    out = os.path.join(
+        args.out_dir,
+        f"{args.arch}__{args.shape}__{args.mesh}{tag}.json")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("sharding_notes",)}, indent=2))
+    print(res.get("sharding_notes", ""))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

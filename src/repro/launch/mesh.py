@@ -1,0 +1,27 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. Callers (dryrun.py) set the 512-placeholder-
+device XLA flag *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi_pod → 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(tp: int = 1):
+    """Whatever this host actually has (CI smoke tests, examples)."""
+    n = len(jax.devices())
+    dp = n // tp
+    return jax.make_mesh(
+        (dp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

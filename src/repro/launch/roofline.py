@@ -1,0 +1,108 @@
+"""Roofline analysis over dry-run JSON results (§Roofline of the brief).
+
+Per (arch × shape × mesh) cell:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          (s)
+  memory term     = HLO_bytes_per_device / HBM_bw              (s)
+  collective term = wire_bytes_per_device / link_bw            (s)
+
+HLO_FLOPs comes from the unrolled-twin count (dryrun.py: XLA counts scan
+bodies once, so the scanned module under-reports; the dry-run lowers an
+unrolled twin at two depths and extrapolates — exact for homogeneous
+stacks, ±2 % for zamba2's segment remainder).  HLO_bytes comes from the
+scanned module's cost_analysis "bytes accessed" (the memory-realistic
+form). collective bytes are parsed from the partitioned HLO (operand-bytes
+per the brief, wire-bytes per collective algebra — both reported; the term
+uses wire bytes as that is what crosses a link).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per link.
+
+MODEL_FLOPS = 6·N_active·D for train (2·N_active·D decode/prefill); the
+MODEL/HLO ratio exposes remat/replication waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+
+def analyze(cell: Dict) -> Dict:
+    if "skipped" in cell:
+        return {**cell, "dominant": "skipped"}
+    n_dev = cell["devices"]
+    flops = cell.get("flops_per_device_counted",
+                     cell.get("flops_per_device", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = cell["bytes_per_device"] / HBM_BW
+    wire = cell["collectives"]["total_wire_bytes"]
+    t_coll = wire / LINK_BW
+
+    tokens = cell["global_batch"] * (cell["seq_len"]
+                                     if cell["kind"] != "decode"
+                                     else 1)
+    mult = 6.0 if cell["kind"] == "train" else 2.0
+    model_flops = mult * cell["active_params"] * tokens / n_dev
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        **cell,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": model_flops,
+        "model_over_hlo": model_flops / flops if flops else 0.0,
+        "roofline_fraction": (model_flops / PEAK_FLOPS) / bound
+        if bound else 0.0,
+    }
+
+
+def _fmt_row(r: Dict) -> str:
+    if r.get("dominant") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP | — | — |")
+    return ("| {arch} | {shape} | {mesh} | {tc:.4f} | {tm:.4f} | {tl:.4f} "
+            "| {dom} | {ratio:.2f} | {frac:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=r["t_compute_s"], tm=r["t_memory_s"], tl=r["t_collective_s"],
+        dom=r["dominant"], ratio=r["model_over_hlo"],
+        frac=r["roofline_fraction"])
+
+
+def table(results: List[Dict]) -> str:
+    head = ("| arch | shape | mesh | compute (s) | memory (s) | "
+            "collective (s) | bound | MODEL/HLO | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows = [_fmt_row(analyze(r)) for r in results]
+    return "\n".join([head] + rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in-dir", default="experiments/dryrun")
+    ap.add_argument("--glob", default="*.json")
+    ap.add_argument("--out")
+    args = ap.parse_args()
+    results = []
+    for f in sorted(glob.glob(os.path.join(args.in_dir, args.glob))):
+        with open(f) as fh:
+            results.append(json.load(fh))
+    t = table(results)
+    print(t)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(t + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Training launcher.
+
+Host-scale real runs (this container, examples, CI):
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke \
+      --steps 100 --batch 8 --seq 128
+
+Production runs target the same entry point with --mesh single|multi on a
+real pod (the dry-run proves those configs compile; see dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="wsd",
+                    choices=("wsd", "cosine", "constant"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=("none", "int8", "topk"))
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="host-mesh tensor-parallel size")
+    args = ap.parse_args()
+
+    from ..configs import get_config
+    from ..runtime import TrainSettings, train
+    from .mesh import make_host_mesh
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = cfg.replace(kernels="ref")
+    settings = TrainSettings(
+        batch=args.batch, seq=args.seq, steps=args.steps, lr=args.lr,
+        schedule=args.schedule, num_microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir, seed=args.seed)
+    mesh = make_host_mesh(tp=args.tp) if args.tp > 1 else None
+    out = train(cfg, settings, mesh=mesh)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"({len(out['losses'])} steps, {out['restarts']} restarts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Composable LM stack covering all ten assigned architectures."""
+from .config import ModelConfig
+from .lm import (decode_step, forward_hidden, init_params, loss_fn,
+                 make_cache, prefill)
+
+__all__ = ["ModelConfig", "decode_step", "forward_hidden", "init_params",
+           "loss_fn", "make_cache", "prefill"]

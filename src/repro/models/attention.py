@@ -1,0 +1,276 @@
+"""Attention layer: train/prefill (flash path) and paged decode.
+
+Shapes follow (B, S, H, D) activations; the kernel path transposes to
+(B, H, S, D). GQA divisibility fallbacks (DESIGN.md §5) are *sharding*
+concerns, handled in distributed/sharding_rules.py — the math here is
+layout-agnostic.
+
+Decode uses the Roomy paged-KV store (core/paged.py): append is a delayed
+update executed as one scatter; the attention read is one batched gather —
+never per-token random access.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import paged
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .config import ModelConfig
+from .layers import cdtype, dense_init
+from .rope import mrope, rope
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d)),
+    }
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _apply_rope(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope:
+        q = mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attn_act_spec(cfg: ModelConfig, mesh, b: int, s: int):
+    """When q-heads don't divide the model axis (attention weights are
+    replicated by the sharding rules), spread the attention *activations*
+    over 'model' instead — batch if it tiles the whole grid, else sequence.
+    Returns (in_spec, out_spec) or None."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.attn_activation_shard != "auto" or mesh is None:
+        return None
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1 or cfg.n_heads % tp == 0:
+        return None                       # weights TP-shard fine already
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if dp and b % (n_dp * tp) == 0:
+        return (P(dp + ("model",), None, None), P(dp_ax, None, None))
+    if s % tp == 0 and (not dp or b % n_dp == 0):
+        return (P(dp_ax, "model", None), P(dp_ax, None, None))
+    return None
+
+
+def attention(p: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, *, window: Optional[int] = None,
+              return_kv: bool = False, mesh=None):
+    """Full-sequence causal attention (training / prefill).
+
+    window: sliding-window size for this layer (overrides cfg default);
+    None = global.
+    """
+    from jax.sharding import NamedSharding
+    b, s, _ = x.shape
+    spec = _attn_act_spec(cfg, mesh, b, s)
+    if spec is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec[0]))
+    q, k, v = _qkv(p, x, cfg)
+    q, k = _apply_rope(q, k, positions, cfg)
+    softcap = cfg.attn_softcap or None
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True, window=window, softcap=softcap,
+        impl=cfg.kernels, block_k=cfg.attn_block_k)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(cdtype(cfg))
+    if spec is not None:
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(mesh, spec[1]))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_attention(p: dict, x: jax.Array, cache: paged.PagedKV,
+                     cfg: ModelConfig, *, window: Optional[int] = None,
+                     mesh=None) -> Tuple[jax.Array, paged.PagedKV]:
+    """One-token decode step against the Roomy paged cache.
+
+    x: (B, 1, d). Returns (out (B, 1, d), updated cache).
+
+    With a mesh, the whole append+gather+attend runs INSIDE shard_map so
+    pages never leave their owner (the Roomy owner-compute discipline):
+      batch % dp == 0 → batch-sharded: each shard serves its own rows
+      batch == 1      → context-parallel: each shard attends over its own
+                        pages; one log-sum-exp merge (flash-decoding)
+    Without a mesh: plain batched gather (single host).
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)                       # (B, 1, H/KVH, D)
+    positions = cache.lengths[:, None]              # (B, 1)
+    if cfg.mrope:
+        pos3 = jnp.repeat(positions[..., None], 3, axis=-1)
+        q, k = _apply_rope(q, k, pos3, cfg)
+    else:
+        q, k = _apply_rope(q, k, positions, cfg)
+    softcap = cfg.attn_softcap or None
+    dp_axes = tuple(a for a in ("pod", "data")
+                    if mesh is not None and a in mesh.axis_names)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a] if mesh is not None else 1
+
+    if dp_axes and b > 1 and b % n_dp == 0:
+        out, cache = _paged_decode_batched(q[:, 0], k[:, 0], v[:, 0],
+                                           cache, cfg, mesh, dp_axes,
+                                           softcap, window)
+    elif dp_axes and b == 1 and window is None:
+        out, cache = _paged_decode_cp(q[:, 0], k[:, 0], v[:, 0], cache,
+                                      cfg, mesh, dp_axes, softcap)
+    else:
+        cache = paged.append(cache, k[:, 0], v[:, 0])
+        kf, vf, mask = paged.gather(cache)          # batched access
+        if window is not None:
+            pos_in_seq = jnp.arange(mask.shape[1])[None, :]
+            cur = cache.lengths[:, None] - 1
+            mask = mask & (pos_in_seq >= cur - window)
+        out = kref.decode_attention_ref(q[:, 0], kf, vf, mask,
+                                        softcap=softcap)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(cdtype(cfg)), cache
+
+
+def _paged_decode_batched(q, k_new, v_new, cache: paged.PagedKV,
+                          cfg: ModelConfig, mesh, dp_axes, softcap, window):
+    """Batch-sharded decode: rows and their pages live on the same shard
+    (batch-major identity page layout), so append + gather stay local."""
+    from jax.sharding import PartitionSpec as P
+    b = q.shape[0]
+    ps = cache.page_size
+    num_pages = cache.k_pages.shape[0]
+    pps = cache.pages_per_seq
+
+    def local(q_l, k_l, v_l, kp, vp, table_l, len_l):
+        p_loc = kp.shape[0]
+        idx = jax.lax.axis_index(dp_axes)
+        off = idx * p_loc
+        # append (Roomy delayed update, one scatter)
+        page_log = len_l // ps
+        offset = len_l % ps
+        phys_g = jnp.take_along_axis(table_l, page_log[:, None], axis=1)[:, 0]
+        phys_l = phys_g - off
+        kp = kp.at[phys_l, offset].set(k_l.astype(kp.dtype))
+        vp = vp.at[phys_l, offset].set(v_l.astype(vp.dtype))
+        new_len = len_l + 1
+        # gather (local batched access)
+        tbl_l = table_l - off                       # local physical ids
+        kf = kp[tbl_l]                              # (B_l, pps, ps, kvh, hd)
+        vf = vp[tbl_l]
+        b_l = q_l.shape[0]
+        kf = kf.reshape(b_l, pps * ps, *kf.shape[3:])
+        vf = vf.reshape(b_l, pps * ps, *vf.shape[3:])
+        mask = jnp.arange(pps * ps)[None, :] < new_len[:, None]
+        if window is not None:
+            cur = new_len[:, None] - 1
+            mask = mask & (jnp.arange(pps * ps)[None, :] >= cur - window)
+        out = kref.decode_attention_ref(q_l, kf, vf, mask, softcap=softcap)
+        return out, kp, vp, new_len
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, None, None), P(dp, None, None),
+                  P(dp, None, None, None), P(dp, None, None, None),
+                  P(dp, None), P(dp)),
+        out_specs=(P(dp, None, None), P(dp, None, None, None),
+                   P(dp, None, None, None), P(dp)))
+    out, kp, vp, lengths = fn(q, k_new, v_new, cache.k_pages,
+                              cache.v_pages, cache.page_table,
+                              cache.lengths)
+    return out, cache._replace(k_pages=kp, v_pages=vp, lengths=lengths)
+
+
+def _paged_decode_cp(q, k_new, v_new, cache: paged.PagedKV,
+                     cfg: ModelConfig, mesh, dp_axes, softcap):
+    """Context-parallel single-sequence decode (identity page table).
+
+    Pages shard over dp_axes; the owner of the current tail page takes the
+    append; every shard attends over its local pages; partials merge with
+    one pmax + two psums — the Roomy owner-compute pattern (DESIGN.md §3.3).
+    """
+    from jax.sharding import PartitionSpec as P
+    import math as _math
+    scale = 1.0 / _math.sqrt(cfg.head_dim)
+    ps = cache.page_size
+
+    def local(q_loc, k_l, v_l, kp, vp, lengths):
+        p_loc = kp.shape[0]
+        idx = jax.lax.axis_index(dp_axes)
+        off = idx * p_loc
+        # append: only the owner of the tail page writes
+        phys = lengths[0] // ps                     # identity table
+        offset = lengths[0] % ps
+        loc = phys - off
+        mine = (loc >= 0) & (loc < p_loc)
+        loc_c = jnp.clip(loc, 0, p_loc - 1)
+        old_k = kp[loc_c, offset]
+        old_v = vp[loc_c, offset]
+        kp = kp.at[loc_c, offset].set(
+            jnp.where(mine, k_l[0].astype(kp.dtype), old_k))
+        vp = vp.at[loc_c, offset].set(
+            jnp.where(mine, v_l[0].astype(vp.dtype), old_v))
+        new_len = lengths[0] + 1
+        kvh, hd = kp.shape[2], kp.shape[3]
+        g = cfg.n_heads // cfg.n_kv_heads
+        kf = kp.reshape(p_loc * ps, kvh, hd).astype(jnp.float32)
+        vf = vp.reshape(p_loc * ps, kvh, hd).astype(jnp.float32)
+        kf = jnp.repeat(kf, g, axis=1)              # (S_loc, Hq, hd)
+        vf = jnp.repeat(vf, g, axis=1)
+        pos = off * ps + jnp.arange(p_loc * ps)
+        mask = pos < new_len
+        logits = jnp.einsum("hd,shd->hs", q_loc[0].astype(jnp.float32),
+                            kf) * scale
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = jnp.where(mask[None, :], logits, kref.NEG_INF)
+        m_loc = jnp.max(logits, axis=1)                       # (Hq,)
+        m_glob = jax.lax.pmax(m_loc, dp_axes)
+        p_ = jnp.exp(logits - m_glob[:, None])
+        p_ = jnp.where(mask[None, :], p_, 0.0)
+        l_loc = jnp.sum(p_, axis=1)
+        acc = jnp.einsum("hs,shd->hd", p_, vf)
+        l_glob = jax.lax.psum(l_loc, dp_axes)
+        acc = jax.lax.psum(acc, dp_axes)
+        l_glob = jnp.where(l_glob == 0.0, 1.0, l_glob)
+        out = (acc / l_glob[:, None]).astype(q_loc.dtype)[None]
+        return out, kp, vp
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(),
+                  P(dp, None, None, None), P(dp, None, None, None), P()),
+        out_specs=(P(), P(dp, None, None, None), P(dp, None, None, None)))
+    out, kp, vp = fn(q, k_new, v_new, cache.k_pages, cache.v_pages,
+                     cache.lengths)
+    cache = cache._replace(k_pages=kp, v_pages=vp,
+                           lengths=cache.lengths + 1)
+    return out, cache

@@ -1,0 +1,111 @@
+"""Residual blocks assembled from the layer zoo, one init/apply per family.
+
+Scan structuring (compile-time control, DESIGN.md §5):
+  dense/moe/audio/vlm  uniform blocks, params stacked (L, …)
+  gemma2               (local, global) pairs stacked (L/2, 2, …) — avoids
+                       per-layer control flow entirely
+  ssm                  uniform mamba1 blocks (L, …)
+  hybrid (zamba2)      mamba2 runs between shared-attn applications;
+                       segments are sliced statically so only real
+                       attention layers carry KV caches
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import paged
+from .attention import attention, decode_attention, init_attention
+from .config import ModelConfig
+from .layers import cdtype, init_mlp, mlp, rms_norm
+from .moe import init_moe, moe
+from .ssm import (SSMState, init_mamba1, init_mamba2, init_ssm_state, mamba1,
+                  mamba1_decode, mamba1_prefill, mamba2, mamba2_decode,
+                  mamba2_prefill)
+
+
+# ------------------------------------------------- transformer block
+
+def init_transformer_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), jnp.float32),
+         "ln2": jnp.zeros((d,), jnp.float32),
+         "attn": init_attention(ks[0], cfg)}
+    p["moe" if cfg.is_moe else "mlp"] = (
+        init_moe(ks[1], cfg) if cfg.is_moe else init_mlp(ks[1], cfg))
+    if cfg.post_norm:
+        p["post_ln1"] = jnp.zeros((d,), jnp.float32)
+        p["post_ln2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def transformer_block(p: dict, x: jax.Array, positions: jax.Array,
+                      cfg: ModelConfig, *, window: Optional[int] = None,
+                      mesh=None, return_kv: bool = False):
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if return_kv:
+        h, kv = attention(p["attn"], h, positions, cfg, window=window,
+                          return_kv=True, mesh=mesh)
+    else:
+        h = attention(p["attn"], h, positions, cfg, window=window, mesh=mesh)
+    if cfg.post_norm:
+        h = rms_norm(h, p["post_ln1"], cfg.rms_eps)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    h = moe(p["moe"], h, cfg, mesh) if cfg.is_moe else mlp(p["mlp"], h, cfg)
+    if cfg.post_norm:
+        h = rms_norm(h, p["post_ln2"], cfg.rms_eps)
+    x = x + h
+    if return_kv:
+        return x, kv
+    return x
+
+
+def transformer_block_decode(p: dict, x: jax.Array, cache: paged.PagedKV,
+                             cfg: ModelConfig, *,
+                             window: Optional[int] = None, mesh=None
+                             ) -> Tuple[jax.Array, paged.PagedKV]:
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    h, cache = decode_attention(p["attn"], h, cache, cfg, window=window,
+                                mesh=mesh)
+    if cfg.post_norm:
+        h = rms_norm(h, p["post_ln1"], cfg.rms_eps)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    h = moe(p["moe"], h, cfg, mesh) if cfg.is_moe else mlp(p["mlp"], h, cfg)
+    if cfg.post_norm:
+        h = rms_norm(h, p["post_ln2"], cfg.rms_eps)
+    return x + h, cache
+
+
+# ------------------------------------------------------ mamba blocks
+
+def init_mamba_block(key, cfg: ModelConfig, version: int) -> dict:
+    init = init_mamba1 if version == 1 else init_mamba2
+    return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mamba": init(key, cfg)}
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig, version: int):
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    h = mamba1(p["mamba"], h, cfg) if version == 1 else mamba2(p["mamba"], h, cfg)
+    return x + h
+
+
+def mamba_block_decode(p: dict, x: jax.Array, state: SSMState,
+                       cfg: ModelConfig, version: int):
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    fn = mamba1_decode if version == 1 else mamba2_decode
+    h, state = fn(p["mamba"], h, state, cfg)
+    return x + h, state
+
+
+def mamba_block_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
+                        version: int):
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    fn = mamba1_prefill if version == 1 else mamba2_prefill
+    h, state = fn(p["mamba"], h, cfg)
+    return x + h, state

@@ -1,0 +1,177 @@
+"""Model configuration — one dataclass covers all ten assigned families.
+
+Field semantics are documented inline; per-arch instances live in
+``repro/configs/<arch>.py``. The config is a frozen dataclass so it can be
+a static argument to jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                 # query heads; 0 for attention-free archs
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dispatch: str = "roomy"      # roomy (paper) | einsum (baseline)
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    mamba_version: int = 0           # 0=none, 1=mamba1, 2=mamba2
+    mamba2_head_dim: int = 64
+    mamba2_use_ssd: bool = True      # chunked matmul (SSD) form — §Perf C
+    ssd_chunk: int = 128
+
+    # --- attention variants ---
+    local_window: int = 0            # sliding-window size (gemma2 local layers)
+    local_global_pattern: bool = False
+    logit_softcap: float = 0.0       # final-logit tanh cap (gemma2: 30)
+    attn_softcap: float = 0.0        # attention-logit tanh cap (gemma2: 50)
+    post_norm: bool = False          # gemma2 post-block RMSNorms
+    rope_theta: float = 10_000.0
+    mrope: bool = False              # qwen2-vl M-RoPE (3 position streams)
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+
+    # --- MLP ---
+    mlp_act: str = "silu"            # silu | gelu | relu2
+    mlp_gated: bool = True
+
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0       # shared attn+mlp block every k layers
+
+    # --- embeddings / head ---
+    tie_embeddings: bool = True
+    frontend_stub: bool = False      # audio/vlm: inputs are embeddings
+    embedding_dispatch: str = "gspmd"  # gspmd | roomy
+    scale_embeddings: bool = False   # gemma2: multiply embeds by sqrt(d)
+
+    # --- distribution ---
+    attn_activation_shard: str = "auto"   # auto | none — when q-heads don't
+    # divide the model axis, reshard attention activations (batch or seq
+    # over 'model') instead of replicating the compute (§Perf iteration 1)
+
+    # --- numerics / compilation ---
+    rms_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    kernels: str = "auto"            # auto | pallas | interpret | ref
+    attn_block_k: int = 512          # ref-attention kv chunk
+
+    # ----------------------------------------------------------- derived
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim always
+        TP-shards over the model axis (pad-to-shard; padded logit rows are
+        masked to -inf in lm_head). 122753→122880, 49155→49408, etc."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def experts_padded(self) -> int:
+        """Experts padded to a multiple of 16 so the expert axis shards over
+        the model mesh axis (dead experts are router-masked; their cost is
+        visible in the roofline MODEL/HLO FLOP ratio — see EXPERIMENTS.md)."""
+        if not self.is_moe:
+            return 0
+        return -(-self.n_experts // 16) * 16
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        n = 0
+        # embeddings
+        n += v * d if (self.tie_embeddings or self.frontend_stub) else 2 * v * d
+        per_layer = 0
+        if self.family in ("ssm",):
+            per_layer += self._mamba_params(1)
+        elif self.family == "hybrid":
+            per_layer += self._mamba_params(2)
+        else:
+            per_layer += self._attn_params() + self._mlp_params()
+        per_layer += 2 * d                       # norms
+        n += self.n_layers * per_layer
+        if self.family == "hybrid" and self.shared_attn_every:
+            n += self._attn_params() + self._mlp_params() + 2 * self.d_model
+        n += d                                   # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only, per layer)."""
+        if not self.is_moe:
+            return self.param_count()
+        expert_p = self._expert_params()
+        total = self.param_count()
+        return total - self.n_layers * (self.n_experts - self.top_k) * expert_p
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        return (self.n_heads * hd * d * 2            # q, o
+                + self.n_kv_heads * hd * d * 2)      # k, v
+
+    def _expert_params(self) -> int:
+        d, ff = self.d_model, self.d_ff
+        return d * ff * (3 if self.mlp_gated else 2)
+
+    def _mlp_params(self) -> int:
+        if self.is_moe:
+            return self.n_experts * self._expert_params() + self.d_model * self.n_experts
+        return self._expert_params()
+
+    def _mamba_params(self, version: int) -> int:
+        d, di, n = self.d_model, self.d_inner, self.ssm_state
+        if version == 1:
+            return (d * 2 * di                       # in_proj
+                    + di * self.ssm_conv             # conv
+                    + di * (self.dt_rank + 2 * n)    # x_proj
+                    + self.dt_rank * di + di         # dt_proj
+                    + di * n + di                    # A, D
+                    + di * d)                        # out_proj
+        heads = di // self.mamba2_head_dim
+        return (d * (2 * di + 2 * n + heads)         # in_proj (x,z,B,C,dt)
+                + (di + 2 * n) * self.ssm_conv
+                + heads * 2                          # A, D per head
+                + di                                 # norm
+                + di * d)
+
+    def train_flops_per_token(self) -> float:
+        """MODEL_FLOPS/token = 6·N_active (fwd+bwd) — §Roofline convention."""
+        return 6.0 * self.active_param_count()
+
+    def decode_flops_per_token(self) -> float:
+        return 2.0 * self.active_param_count()
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

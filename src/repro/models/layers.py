@@ -1,0 +1,167 @@
+"""Shared layers: RMSNorm, MLP variants, embeddings (GSPMD + Roomy paths).
+
+Initialization follows the llama family: truncated-normal fan-in scaling
+for projections, ones for norm gains. Params are stored f32 (master copy);
+every block casts to the config compute dtype at use (the optimizer sees
+f32 — the usual mixed-precision split).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import delayed as roomy_delayed
+from .config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            / jnp.sqrt(fan_in))
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return functools.partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------------- MLP
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], (d, ff)),
+         "down": dense_init(ks[1], (ff, d))}
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(ks[2], (d, ff))
+    return p
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    act = _act(cfg.mlp_act)
+    h = x @ p["up"].astype(dt)
+    if cfg.mlp_gated:
+        h = act(x @ p["gate"].astype(dt)) * h
+    else:
+        h = act(h)
+    return h @ p["down"].astype(dt)
+
+
+# ------------------------------------------------------------ embeddings
+
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    e = jax.random.normal(key, (cfg.vocab_padded, cfg.d_model),
+                          jnp.float32) * 0.02
+    p = {"table": e}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1),
+                               (cfg.d_model, cfg.vocab_padded))
+    return p
+
+
+def embed_tokens(p: dict, ids: jax.Array, cfg: ModelConfig,
+                 mesh=None) -> jax.Array:
+    """ids (B, S) → (B, S, d). GSPMD path: plain take (XLA inserts the
+    vocab-shard collective). Roomy path: explicit bucket exchange over the
+    model axis — the paper's delayed-access pattern (DESIGN.md §3.2)."""
+    dt = cdtype(cfg)
+    if cfg.embedding_dispatch == "roomy" and mesh is not None \
+            and "model" in mesh.axis_names:
+        n_dev = 1
+        for a in mesh.axis_names:
+            n_dev *= mesh.shape[a]
+        if (ids.shape[0] * ids.shape[1]) % n_dev == 0:
+            return _roomy_embed(p["table"], ids, cfg, mesh).astype(dt)
+    return p["table"].astype(dt)[ids]
+
+
+def _roomy_embed(table: jax.Array, ids: jax.Array, cfg: ModelConfig, mesh):
+    """Explicit Roomy gather: tokens issue delayed accesses to the vocab-
+    sharded table; one all_to_all each way resolves the whole batch.
+
+    Ownership is *striped* (owner = id mod S) so frequent low ids spread
+    across shards; buckets carry 4× the uniform per-owner load (overflow →
+    zero embedding, counted like MoE token drops; factor-4 makes it
+    vanishingly rare — tested in tests/test_roomy_lm.py)."""
+    s_model = mesh.shape["model"]
+    v = cfg.vocab_padded
+    rows_per = -(-v // s_model)
+    b, s = ids.shape
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    tokens_local = max(1, (b * s) // n_dev)
+    capacity = max(8, min(tokens_local, 4 * (-(-tokens_local // s_model))))
+
+    def local(ids_loc, table_loc):
+        flat = ids_loc.reshape(-1)
+        dest = (flat % s_model).astype(jnp.int32)
+        valid = jnp.ones_like(flat, dtype=bool)
+
+        def owner_fn(recv, recv_valid):
+            # recv: (S, C, 1) global ids; striped layout → local row id//S
+            local_idx = recv[..., 0].astype(jnp.int32) // s_model
+            local_idx = jnp.minimum(local_idx, table_loc.shape[0] - 1)
+            return table_loc[local_idx]
+
+        out, ok, _ = roomy_delayed.bucket_sync_access(
+            dest, flat[:, None].astype(jnp.int32), valid, "model",
+            s_model, capacity, owner_fn)
+        out = jnp.where(ok[:, None], out, 0.0)
+        return out.reshape(ids_loc.shape + (cfg.d_model,))
+
+    shard_axes = data_axes + ("model",)
+    # Striped table layout: row r of shard s holds vocab id r*S + s.
+    tab = _pad_rows(table, rows_per * s_model)
+    tab = tab.reshape(rows_per, s_model, cfg.d_model).transpose(1, 0, 2) \
+             .reshape(rows_per * s_model, cfg.d_model)
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(shard_axes, None), P("model", None)),
+        out_specs=P(shard_axes, None, None),
+    )
+    return fn(ids.reshape(b * s, 1), tab).reshape(b, s, cfg.d_model)
+
+
+def _pad_rows(x: jax.Array, n: int) -> jax.Array:
+    if x.shape[0] == n:
+        return x
+    return jnp.pad(x, ((0, n - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+def lm_head(p_embed: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    if cfg.tie_embeddings:
+        w = p_embed["table"].astype(dt).T
+    else:
+        w = p_embed["head"].astype(dt)
+    logits = x @ w
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.vocab_padded != cfg.vocab_size:      # mask pad-to-shard rows
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits

@@ -1,0 +1,444 @@
+"""Model assembly: init, forward, loss, prefill, decode — all ten archs.
+
+Entry points (all pure; mesh optional — None on single-device CI):
+
+  init_params(cfg, key)                         → params pytree
+  forward_hidden(params, inputs, cfg, mesh)     → (B, S, d)
+  loss_fn(params, batch, cfg, mesh)             → scalar CE loss
+  prefill(params, inputs, cfg, mesh)            → (logits_last, caches)
+  decode_step(params, inputs, caches, cfg, mesh)→ (logits, caches)
+  make_cache(cfg, batch, max_len)               → empty caches pytree
+
+``inputs``: {"tokens": (B,S) i32} or {"embeds": (B,S,d)} for frontend-stub
+archs, plus "positions" ((B,S) or (B,S,3) for M-RoPE).
+Caches: PagedKV pytrees stacked over layers (per-family structure, see
+blocks.py docstring) and SSMState stacks for mamba archs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import paged
+from .blocks import (init_mamba_block, init_transformer_block, mamba_block,
+                     mamba_block_decode, transformer_block,
+                     transformer_block_decode)
+from .config import ModelConfig
+from .layers import cdtype, embed_tokens, init_embedding, lm_head, rms_norm
+from .ssm import init_ssm_state
+
+PAGE_SIZE = 128
+
+
+# ---------------------------------------------------------------- init
+
+def _hybrid_segments(cfg: ModelConfig):
+    """[(start, end, apply_shared_after)] covering all layers."""
+    k = cfg.shared_attn_every
+    segs = []
+    start = 0
+    for i in range(cfg.n_layers):
+        if k and (i + 1) % k == 0:
+            segs.append((start, i + 1, True))
+            start = i + 1
+    if start < cfg.n_layers:
+        segs.append((start, cfg.n_layers, False))
+    return segs
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return sum(1 for *_, s in _hybrid_segments(cfg) if s)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_embed, k_blocks, k_shared, k_final = jax.random.split(key, 4)
+    params: dict = {"embed": init_embedding(k_embed, cfg),
+                    "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.family == "ssm":
+        params["blocks"] = jax.vmap(
+            lambda k: init_mamba_block(k, cfg, version=1))(layer_keys)
+    elif cfg.family == "hybrid":
+        params["blocks"] = jax.vmap(
+            lambda k: init_mamba_block(k, cfg, version=2))(layer_keys)
+        params["shared"] = init_transformer_block(k_shared, cfg)
+    else:
+        blocks = jax.vmap(lambda k: init_transformer_block(k, cfg))(layer_keys)
+        if cfg.local_global_pattern:
+            assert cfg.n_layers % 2 == 0
+            blocks = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // 2, 2) + a.shape[1:]),
+                blocks)
+        params["blocks"] = blocks
+    return params
+
+
+# ------------------------------------------------------------- forward
+
+def _dp_axes(mesh):
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _constrain_tokens(x, mesh):
+    """(B, S, …) activations → batch over the dp axes (when they tile)."""
+    dp = _dp_axes(mesh)
+    if not dp:
+        return x
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if x.shape[0] % n != 0:
+        return x
+    ax = dp if len(dp) > 1 else dp[0]
+    from jax.sharding import PartitionSpec as P
+    return _constrain(x, mesh, P(ax, *([None] * (x.ndim - 1))))
+
+
+def _embed(params, inputs: Dict, cfg: ModelConfig, mesh):
+    if cfg.frontend_stub and "embeds" in inputs:
+        x = inputs["embeds"].astype(cdtype(cfg))
+    else:
+        x = embed_tokens(params["embed"], inputs["tokens"], cfg, mesh)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return _constrain_tokens(x, mesh)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _layer_loop(body, x, stacked, cfg: ModelConfig, with_ys: bool = False):
+    """scan-over-layers (compile-time compact) or python unroll.
+
+    The unrolled path exists for FLOP accounting: XLA's cost analysis
+    counts a while-loop body once (verified — see EXPERIMENTS.md §Roofline
+    method), so the dry-run lowers an unrolled twin to count real FLOPs.
+    with_ys: also return the stacked per-layer outputs (prefill caches).
+    """
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body, x, stacked)
+        return (x, ys) if with_ys else x
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys_list = []
+    for i in range(n):
+        p_l = jax.tree.map(lambda a: a[i], stacked)
+        x, y = body(x, p_l)
+        ys_list.append(y)
+    if not with_ys:
+        return x
+    ys = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys_list)
+    return x, ys
+
+
+def forward_hidden(params, inputs: Dict, cfg: ModelConfig, mesh=None):
+    x = _embed(params, inputs, cfg, mesh)
+    positions = inputs["positions"]
+
+    if cfg.family == "ssm":
+        def body(h, p_l):
+            return mamba_block(p_l, h, cfg, version=1), None
+        x = _layer_loop(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+    elif cfg.family == "hybrid":
+        def body(h, p_l):
+            return mamba_block(p_l, h, cfg, version=2), None
+        body = _maybe_remat(body, cfg)
+        for (s0, s1, sh) in _hybrid_segments(cfg):
+            seg = jax.tree.map(lambda a: a[s0:s1], params["blocks"])
+            x = _layer_loop(body, x, seg, cfg)
+            if sh:
+                x = transformer_block(params["shared"], x, positions, cfg,
+                                      mesh=mesh)
+
+    elif cfg.local_global_pattern:
+        w = cfg.local_window
+
+        def body(h, p_pair):
+            p_local = jax.tree.map(lambda a: a[0], p_pair)
+            p_global = jax.tree.map(lambda a: a[1], p_pair)
+            h = transformer_block(p_local, h, positions, cfg, window=w,
+                                  mesh=mesh)
+            h = transformer_block(p_global, h, positions, cfg, window=None,
+                                  mesh=mesh)
+            return h, None
+        x = _layer_loop(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+    else:
+        def body(h, p_l):
+            return transformer_block(p_l, h, positions, cfg, mesh=mesh), None
+        x = _layer_loop(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+    return rms_norm(x, params["final_norm"], cfg.rms_eps)
+
+
+def logits_fn(params, hidden, cfg: ModelConfig):
+    return lm_head(params["embed"], hidden, cfg)
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, mesh=None):
+    """Mean CE over positions with label >= 0.
+
+    Logits are constrained (batch over dp, vocab over model when it
+    divides) so the big (B, S, V) temporaries stay sharded both ways —
+    the fix recorded as §Perf iteration 0."""
+    hidden = forward_hidden(params, batch["inputs"], cfg, mesh)
+    logits = logits_fn(params, hidden, cfg).astype(jnp.float32)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        dp = _dp_axes(mesh)
+        n = 1
+        for a in dp:
+            n *= mesh.shape[a]
+        tp = mesh.shape.get("model", 1)
+        b_ax = (dp if len(dp) > 1 else dp[0]) if dp and \
+            logits.shape[0] % max(n, 1) == 0 else None
+        v_ax = "model" if tp > 1 and cfg.vocab_padded % tp == 0 else None
+        logits = _constrain(logits, mesh, P(b_ax, None, v_ax))
+    labels = batch["labels"]
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ------------------------------------------------------ caches / decode
+
+def _kv_to_pages(k, v, max_len, cfg: ModelConfig, mesh):
+    """(B, S, kvh, hd) → (B·pps, ps, kvh, hd) page layout.
+
+    Under the identity page table this is a pure reshape (no scatter), and
+    the pages get an explicit dp sharding so prefill writes land where
+    decode will read them (§Perf iteration 3 — the scatter/vmap form cost
+    ~10× in resharding collectives)."""
+    b, s, kvh, hd = k.shape
+    ps = PAGE_SIZE
+    pps = max_len // ps
+    if pps * ps != s:
+        k = jnp.pad(k, ((0, 0), (0, pps * ps - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pps * ps - s), (0, 0), (0, 0)))
+    k_r = k.reshape(b * pps, ps, kvh, hd).astype(cdtype(cfg))
+    v_r = v.reshape(b * pps, ps, kvh, hd).astype(cdtype(cfg))
+    dp = _dp_axes(mesh)
+    if dp and (b * pps) % _dp_size(mesh) == 0:
+        from jax.sharding import PartitionSpec as P
+        ax = dp if len(dp) > 1 else dp[0]
+        k_r = _constrain(k_r, mesh, P(ax, None, None, None))
+        v_r = _constrain(v_r, mesh, P(ax, None, None, None))
+    return k_r, v_r
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _assemble_cache(k_pages, v_pages, lengths_val, batch, max_len,
+                    cfg: ModelConfig, n_stack: int):
+    """Build a layer-stacked PagedKV from page-form ys. Leaves carry a
+    leading (n_stack, …) axis; table/lengths are identical per layer."""
+    pps = max_len // PAGE_SIZE
+    table = (jnp.arange(batch)[:, None] * pps
+             + jnp.arange(pps)[None, :]).astype(jnp.int32)
+    table = jnp.broadcast_to(table, (n_stack, batch, pps))
+    lengths = jnp.full((n_stack, batch), lengths_val, jnp.int32)
+    return paged.PagedKV(k_pages=k_pages, v_pages=v_pages,
+                         page_table=table, lengths=lengths)
+
+
+def _fill_cache(k, v, lengths, max_len, cfg: ModelConfig, mesh=None):
+    b = k.shape[0]
+    k_r, v_r = _kv_to_pages(k, v, max_len, cfg, mesh)
+    cache = paged.make(b, max_len, cfg.n_kv_heads, cfg.head_dim,
+                       page_size=PAGE_SIZE, dtype=cdtype(cfg))
+    return cache._replace(k_pages=k_r, v_pages=v_r,
+                          lengths=jnp.asarray(lengths, jnp.int32))
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Empty decode caches (the dry-run lowers decode_step against these)."""
+    max_len = -(-max_len // PAGE_SIZE) * PAGE_SIZE
+    mk = lambda: paged.make(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                            page_size=PAGE_SIZE, dtype=cdtype(cfg))
+    if cfg.family == "ssm":
+        states = [init_ssm_state(cfg, batch, 1) for _ in range(cfg.n_layers)]
+        return {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *states)}
+    if cfg.family == "hybrid":
+        states = [init_ssm_state(cfg, batch, 2) for _ in range(cfg.n_layers)]
+        kv = [mk() for _ in range(n_shared_applications(cfg))]
+        return {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+                "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *kv)}
+    n = cfg.n_layers
+    if cfg.local_global_pattern:
+        kv = [mk() for _ in range(n)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *kv)
+        return {"kv": jax.tree.map(
+            lambda a: a.reshape((n // 2, 2) + a.shape[1:]), stacked)}
+    kv = [mk() for _ in range(n)]
+    return {"kv": jax.tree.map(lambda *xs: jnp.stack(xs), *kv)}
+
+
+def prefill(params, inputs: Dict, cfg: ModelConfig, mesh=None,
+            max_len: Optional[int] = None):
+    """Full forward building decode caches; returns (last logits, caches)."""
+    positions = inputs["positions"]
+    x = _embed(params, inputs, cfg, mesh)
+    b, s = x.shape[0], x.shape[1]
+    max_len = max_len or s
+    max_len = -(-max_len // PAGE_SIZE) * PAGE_SIZE
+    lengths = jnp.full((b,), s, jnp.int32)
+
+    if cfg.family == "ssm":
+        from .blocks import mamba_block_prefill
+
+        def body(h, p_l):
+            h, st = mamba_block_prefill(p_l, h, cfg, version=1)
+            return h, st
+        x, states = _layer_loop(_maybe_remat(body, cfg), x,
+                                params["blocks"], cfg, with_ys=True)
+        hidden = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return logits_fn(params, hidden[:, -1:], cfg), {"ssm": states}
+
+    if cfg.family == "hybrid":
+        from .blocks import mamba_block_prefill
+
+        def body(h, p_l):
+            h, st = mamba_block_prefill(p_l, h, cfg, version=2)
+            return h, st
+        body = _maybe_remat(body, cfg)
+        kvs, states = [], []
+        for (s0, s1, sh) in _hybrid_segments(cfg):
+            seg = jax.tree.map(lambda a: a[s0:s1], params["blocks"])
+            x, st = _layer_loop(body, x, seg, cfg, with_ys=True)
+            states.append(st)
+            if sh:
+                x, kv = transformer_block(params["shared"], x, positions,
+                                          cfg, mesh=mesh, return_kv=True)
+                kvs.append(_fill_cache(kv[0], kv[1], lengths, max_len, cfg,
+                                       mesh))
+        caches = {"kv": jax.tree.map(lambda *xs: jnp.stack(xs), *kvs),
+                  "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                      *states)}
+        hidden = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return logits_fn(params, hidden[:, -1:], cfg), caches
+
+    if cfg.local_global_pattern:
+        w = cfg.local_window
+
+        def body(h, p_pair):
+            p_local = jax.tree.map(lambda a: a[0], p_pair)
+            p_global = jax.tree.map(lambda a: a[1], p_pair)
+            h, kv_l = transformer_block(p_local, h, positions, cfg, window=w,
+                                        mesh=mesh, return_kv=True)
+            h, kv_g = transformer_block(p_global, h, positions, cfg,
+                                        window=None, mesh=mesh, return_kv=True)
+            pages = [_kv_to_pages(kv[0], kv[1], max_len, cfg, mesh)
+                     for kv in (kv_l, kv_g)]
+            ys = jax.tree.map(lambda a_, b_: jnp.stack([a_, b_]),
+                              pages[0], pages[1])
+            return h, ys
+        x, (kp, vp) = _layer_loop(_maybe_remat(body, cfg), x,
+                                  params["blocks"], cfg, with_ys=True)
+        # kp: (L/2, 2, B·pps, ps, kvh, hd)
+        half = cfg.n_layers // 2
+        cache = _assemble_cache(
+            kp.reshape((cfg.n_layers,) + kp.shape[2:]),
+            vp.reshape((cfg.n_layers,) + vp.shape[2:]),
+            s, b, max_len, cfg, cfg.n_layers)
+        cache = jax.tree.map(
+            lambda a: a.reshape((half, 2) + a.shape[1:]), cache)
+        hidden = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return logits_fn(params, hidden[:, -1:], cfg), {"kv": cache}
+
+    def body(h, p_l):
+        h, kv = transformer_block(p_l, h, positions, cfg, mesh=mesh,
+                                  return_kv=True)
+        return h, _kv_to_pages(kv[0], kv[1], max_len, cfg, mesh)
+    x, (kp, vp) = _layer_loop(_maybe_remat(body, cfg), x, params["blocks"],
+                              cfg, with_ys=True)
+    cache = _assemble_cache(kp, vp, s, b, max_len, cfg, cfg.n_layers)
+    hidden = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, hidden[:, -1:], cfg), {"kv": cache}
+
+
+def decode_step(params, inputs: Dict, caches, cfg: ModelConfig, mesh=None):
+    """One-token step. inputs: {"tokens": (B, 1)} (or embeds).
+
+    Returns (logits (B, 1, V), updated caches).
+    """
+    x = _embed(params, inputs, cfg, mesh)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            p_l, st = xs
+            h, st = mamba_block_decode(p_l, h, st, cfg, version=1)
+            return h, st
+        x, states = jax.lax.scan(body, x, (params["blocks"], caches["ssm"]))
+        caches = {"ssm": states}
+
+    elif cfg.family == "hybrid":
+        def body(h, xs):
+            p_l, st = xs
+            h, st = mamba_block_decode(p_l, h, st, cfg, version=2)
+            return h, st
+        new_states, new_kvs = [], []
+        shared_i = 0
+        for (s0, s1, sh) in _hybrid_segments(cfg):
+            seg = jax.tree.map(lambda a: a[s0:s1], params["blocks"])
+            st = jax.tree.map(lambda a: a[s0:s1], caches["ssm"])
+            x, st = jax.lax.scan(body, x, (seg, st))
+            new_states.append(st)
+            if sh:
+                kv_i = jax.tree.map(lambda a: a[shared_i], caches["kv"])
+                x, kv_i = transformer_block_decode(params["shared"], x, kv_i,
+                                                   cfg, mesh=mesh)
+                new_kvs.append(kv_i)
+                shared_i += 1
+        caches = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_states),
+            "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kvs),
+        }
+
+    elif cfg.local_global_pattern:
+        w = cfg.local_window
+
+        def body(h, xs):
+            p_pair, c_pair = xs
+            p_l = jax.tree.map(lambda a: a[0], p_pair)
+            p_g = jax.tree.map(lambda a: a[1], p_pair)
+            c_l = jax.tree.map(lambda a: a[0], c_pair)
+            c_g = jax.tree.map(lambda a: a[1], c_pair)
+            h, c_l = transformer_block_decode(p_l, h, c_l, cfg, window=w,
+                                              mesh=mesh)
+            h, c_g = transformer_block_decode(p_g, h, c_g, cfg, window=None,
+                                              mesh=mesh)
+            return h, jax.tree.map(lambda a_, b_: jnp.stack([a_, b_]), c_l, c_g)
+        x, cache = jax.lax.scan(body, x, (params["blocks"], caches["kv"]))
+        caches = {"kv": cache}
+
+    else:
+        def body(h, xs):
+            p_l, c_l = xs
+            h, c_l = transformer_block_decode(p_l, h, c_l, cfg, mesh=mesh)
+            return h, c_l
+        x, cache = jax.lax.scan(body, x, (params["blocks"], caches["kv"]))
+        caches = {"kv": cache}
+
+    hidden = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, hidden, cfg), caches

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts with two dispatch engines (DESIGN.md §3.1).
+
+``einsum``  — the GSPMD/Switch-style baseline: one-hot dispatch/combine
+              matmuls, capacity-bucketed per batch row. Simple, but the
+              one-hot matmuls burn O(T·E·C·d) extra FLOPs and dead padded
+              experts still occupy capacity.
+
+``roomy``   — the paper's engine: every (token, expert-choice) is a delayed
+              access op; sync bins ops by owner shard, runs ONE all_to_all
+              each way, and second-level-bins per local expert on the owner
+              (Roomy bucketing twice). No one-hot matmuls, no dead-expert
+              compute; overflow drops are counted exactly like Roomy bucket
+              overflow.
+
+Expert axis is padded to a multiple of 16 (``cfg.experts_padded``) so it
+shards over the model mesh axis; the router masks padded experts to -inf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import delayed as roomy_delayed
+from .config import ModelConfig
+from .layers import cdtype, dense_init, _act
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.experts_padded
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "up": dense_init(ks[1], (e, d, ff), in_axis=1),
+        "down": dense_init(ks[2], (e, ff, d), in_axis=1),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(ks[3], (e, d, ff), in_axis=1)
+    return p
+
+
+def _route(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x (..., d) → (weights (..., k), ids (..., k)). f32 router math."""
+    e = cfg.experts_padded
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    dead = jnp.arange(e) >= cfg.n_experts
+    logits = jnp.where(dead, -jnp.inf, logits)
+    top, ids = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(top, axis=-1)
+    return weights, ids.astype(jnp.int32)
+
+
+def _expert_ffn(p: dict, xin: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """xin (E, C, d) → (E, C, d), batched over the expert axis."""
+    dt = xin.dtype
+    act = _act(cfg.mlp_act)
+    h = jnp.einsum("ecd,edf->ecf", xin, p["up"].astype(dt))
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", xin, p["gate"].astype(dt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(dt))
+
+
+# --------------------------------------------------------------- einsum
+
+def moe_einsum(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Baseline dispatch. x: (B, S, d); capacity group = batch row."""
+    b, s, d = x.shape
+    e, k = cfg.experts_padded, cfg.top_k
+    cap = max(1, int(math.ceil(s * k / e * cfg.capacity_factor)))
+    dt = x.dtype
+
+    w, ids = _route(p, x, cfg)                    # (b, s, k)
+    flat_ids = ids.reshape(b, s * k)
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)        # (b, sk, e)
+    slot = jnp.cumsum(oh, axis=1) * oh                        # 1-indexed
+    slot = jnp.sum(slot, axis=-1) - 1                         # (b, sk)
+    keep = (slot >= 0) & (slot < cap)
+    slot = jnp.where(keep, slot, cap)                         # park dropped
+    disp = (jax.nn.one_hot(flat_ids, e, dtype=dt)[..., :, None]
+            * jax.nn.one_hot(slot, cap, dtype=dt)[..., None, :]
+            * keep[..., None, None].astype(dt))               # (b, sk, e, c)
+    disp = disp.reshape(b, s, k, e, cap)
+    disp_x = jnp.sum(disp, axis=2)                            # (b, s, e, c)
+    comb = jnp.sum(disp * w[..., None, None].astype(dt), axis=2)
+
+    # expert axis leading for the batched FFN:
+    xin = jnp.einsum("bsd,bsec->ebcd", x, disp_x).reshape(e, b * cap, d)
+    hout = _expert_ffn(p, xin, cfg).reshape(e, b, cap, d)
+    out = jnp.einsum("ebcd,bsec->bsd", hout, comb)
+    return out
+
+
+# ---------------------------------------------------------------- roomy
+
+def moe_roomy(p: dict, x: jax.Array, cfg: ModelConfig, mesh) -> jax.Array:
+    """Paper-technique dispatch: bucket exchange over the model axis."""
+    b, s, d = x.shape
+    e, k = cfg.experts_padded, cfg.top_k
+    s_model = mesh.shape["model"]
+    e_loc = e // s_model
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    t_loc = max(1, (b * s) // n_dev)              # tokens per device
+    m = t_loc * k                                  # delayed ops per device
+    cap1 = max(8, int(math.ceil(m / s_model * cfg.capacity_factor)))
+    cap2 = max(8, int(math.ceil(s_model * cap1 / e_loc * cfg.capacity_factor)))
+
+    w_all, ids_all = _route(p, x, cfg)            # (b, s, k) — replicated math
+
+    def local(x_loc, w_loc, ids_loc, up, down, *gate):
+        # x_loc (t, d); w/ids (t, k)
+        t = x_loc.shape[0]
+        xk = jnp.repeat(x_loc, k, axis=0)                       # (t*k, d)
+        ek = ids_loc.reshape(-1)                                # (t*k,)
+        dest = (ek // e_loc).astype(jnp.int32)
+        e_local = (ek % e_loc).astype(x_loc.dtype)
+        payload = jnp.concatenate([xk, e_local[:, None]], axis=1)
+        valid = jnp.ones((t * k,), bool)
+
+        def owner_fn(recv, recv_valid):
+            # recv (S, C1, d+1) — second-level bin by local expert id
+            flat = recv.reshape(-1, d + 1)
+            fv = recv_valid.reshape(-1)
+            e_id = flat[:, d].astype(jnp.int32)
+            binned = roomy_delayed.bin_by_dest(e_id, flat[:, :d], fv,
+                                               e_loc, cap2)
+            pp = {"up": up, "down": down}
+            if gate:
+                pp["gate"] = gate[0]
+            y = _expert_ffn(pp, binned.payload, cfg)            # (E_loc, C2, d)
+            y = jnp.where(binned.valid[..., None], y, 0.0)
+            back = roomy_delayed.unbin(y, binned.src_idx, flat.shape[0])
+            return back.reshape(recv.shape[0], recv.shape[1], d)
+
+        y, ok, _ = roomy_delayed.bucket_sync_access(
+            dest, payload, valid, "model", s_model, cap1, owner_fn)
+        y = jnp.where(ok[:, None], y, 0.0).reshape(t, k, d)
+        return jnp.sum(y * w_loc[..., None].astype(y.dtype), axis=1)
+
+    token_axes = tuple(a for a in mesh.axis_names)
+    in_specs = [P(token_axes, None), P(token_axes, None), P(token_axes, None),
+                P("model", None, None), P("model", None, None)]
+    args = [x.reshape(b * s, d), w_all.reshape(b * s, k),
+            ids_all.reshape(b * s, k), p["up"].astype(x.dtype),
+            p["down"].astype(x.dtype)]
+    if cfg.mlp_gated:
+        in_specs.append(P("model", None, None))
+        args.append(p["gate"].astype(x.dtype))
+    fn = jax.shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=P(token_axes, None))
+    return fn(*args).reshape(b, s, d)
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh=None) -> jax.Array:
+    if cfg.moe_dispatch == "roomy" and mesh is not None \
+            and "model" in mesh.axis_names:
+        n_dev = 1
+        for a in mesh.axis_names:
+            n_dev *= mesh.shape[a]
+        # Roomy dispatch needs tokens to tile the device grid; tiny decode
+        # batches fall back to the einsum path (capacity 1-2 there anyway).
+        if (x.shape[0] * x.shape[1]) % n_dev == 0:
+            return moe_roomy(p, x, cfg, mesh)
+    return moe_einsum(p, x, cfg)

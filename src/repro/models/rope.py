@@ -1,0 +1,61 @@
+"""Rotary position embeddings — standard RoPE and qwen2-vl's M-RoPE.
+
+M-RoPE splits the head_dim rotary frequencies into sections driven by
+separate position streams (temporal, height, width). The vision frontend
+is a stub per the assignment, so the 3-row position ids arrive as inputs
+(text tokens simply repeat the same position in all three rows, which
+makes M-RoPE collapse to standard RoPE — a property the tests use).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    half = x.shape[-1] // 2
+    freqs = _freqs(x.shape[-1], theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float,
+          sections: Tuple[int, ...]) -> jax.Array:
+    """x: (..., S, H, D); positions3: (..., S, 3) — (t, h, w) streams.
+
+    sections: per-stream count of rotary frequency pairs; must sum to D/2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _freqs(x.shape[-1], theta)                      # (half,)
+    # Pick the position stream for each frequency band.
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)),
+        jnp.array(sections),
+        total_repeat_length=half)                           # (half,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)                                            # (..., S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)

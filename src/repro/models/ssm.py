@@ -1,0 +1,263 @@
+"""State-space blocks: mamba1 (falcon-mamba) and mamba2 (zamba2 hybrid).
+
+Both reduce to the same selective-scan kernel (kernels/mamba_scan.py) —
+mamba2's scalar-per-head decay is broadcast into the (d_inner, N) form at
+trace time (zero-cost under XLA fusion; see the kernel docstring).
+
+Decode keeps O(1) state per layer: a (conv-1)-token convolution tail and
+the (d_inner, N) SSM state — this is why the SSM archs run the long_500k
+cell (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+from .layers import cdtype, dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, conv-1, conv_channels)
+    h: jax.Array       # (B, d_inner, N) f32
+
+
+# ------------------------------------------------------------- mamba1
+
+def init_mamba1(key, cfg: ModelConfig) -> dict:
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1)))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n)),
+        "dt_proj": dense_init(ks[3], (dtr, di)),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus ≈ 0.01
+        "a_log": a_init,
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def mamba1(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt_c = cdtype(cfg)
+    b, s, _ = x.shape
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ p["in_proj"].astype(dt_c)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    proj = x_c @ p["x_proj"].astype(dt_c)
+    dt_in, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt_c)
+                         + p["dt_bias"].astype(dt_c))
+    a = -jnp.exp(p["a_log"])
+    y = kops.mamba_scan(x_c, dt, a, b_mat, c_mat, p["d_skip"],
+                        impl=cfg.kernels)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_c)
+
+
+def mamba1_decode(p: dict, x: jax.Array, state: SSMState,
+                  cfg: ModelConfig) -> Tuple[jax.Array, SSMState]:
+    """x: (B, 1, d) → (out (B, 1, d), state)."""
+    dt_c = cdtype(cfg)
+    b = x.shape[0]
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x[:, 0] @ p["in_proj"].astype(dt_c)
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # (B, di)
+    window = jnp.concatenate([state.conv, x_in[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"]) + p["conv_b"]
+    x_c = jax.nn.silu(conv).astype(dt_c)
+    proj = x_c @ p["x_proj"].astype(dt_c)
+    dt_in, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt_c)
+                         + p["dt_bias"].astype(dt_c))    # (B, di)
+    a = -jnp.exp(p["a_log"])                             # (di, n)
+    dtf, xf = dt.astype(jnp.float32), x_c.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a[None])               # (B, di, n)
+    h = state.h * da + (dtf * xf)[..., None] * b_mat.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, c_mat.astype(jnp.float32)) \
+        + xf * p["d_skip"][None]
+    y = y.astype(dt_c) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_c)
+    return out[:, None], SSMState(conv=window[:, 1:], h=h)
+
+
+# ------------------------------------------------------------- mamba2
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    heads = di // hd
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + heads)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.full((heads,), -4.6, jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d)),
+    }
+
+
+def _mamba2_split(p, xz, cfg):
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = di // cfg.mamba2_head_dim
+    return jnp.split(xz, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+
+def mamba2(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt_c = cdtype(cfg)
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    heads = di // hd
+    xz = x @ p["in_proj"].astype(dt_c)
+    z, x_in, b_mat, c_mat, dt_h = _mamba2_split(p, xz, cfg)
+    conv_in = jnp.concatenate([x_in, b_mat, c_mat], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    x_c, b_mat, c_mat = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_h + p["dt_bias"].astype(dt_c))   # (B, S, H)
+    if cfg.mamba2_use_ssd:
+        # chunked SSD (matmul) form — the §Perf-C optimization
+        from ..kernels.ref import mamba2_ssd
+        a = -jnp.exp(p["a_log"])
+        y4, _ = mamba2_ssd(x_c.reshape(b, s, heads, hd), dt, a,
+                           b_mat, c_mat, p["d_skip"], chunk=cfg.ssd_chunk)
+        y = y4.reshape(b, s, di).astype(dt_c)
+    else:
+        # broadcast head-scalars to the mamba1 kernel form
+        dt_full = jnp.repeat(dt, hd, axis=-1)                # (B, S, di)
+        a_full = -jnp.exp(jnp.repeat(p["a_log"], hd))[:, None]
+        a_full = jnp.broadcast_to(a_full, (di, n))
+        d_full = jnp.repeat(p["d_skip"], hd)
+        y = kops.mamba_scan(x_c, dt_full, a_full, b_mat, c_mat, d_full,
+                            impl=cfg.kernels)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return y @ p["out_proj"].astype(dt_c)
+
+
+def mamba2_decode(p: dict, x: jax.Array, state: SSMState,
+                  cfg: ModelConfig) -> Tuple[jax.Array, SSMState]:
+    dt_c = cdtype(cfg)
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    xz = x[:, 0] @ p["in_proj"].astype(dt_c)
+    z, x_in, b_mat, c_mat, dt_h = _mamba2_split(p, xz, cfg)
+    conv_in = jnp.concatenate([x_in, b_mat, c_mat], axis=-1)  # (B, conv_ch)
+    window = jnp.concatenate([state.conv, conv_in[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv).astype(dt_c)
+    x_c, b_mat, c_mat = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_h + p["dt_bias"].astype(dt_c))    # (B, H)
+    dt_full = jnp.repeat(dt, hd, axis=-1).astype(jnp.float32)
+    a_full = jnp.broadcast_to(
+        -jnp.exp(jnp.repeat(p["a_log"], hd))[:, None], (di, n))
+    da = jnp.exp(dt_full[..., None] * a_full[None])
+    xf = x_c.astype(jnp.float32)
+    h = state.h * da + (dt_full * xf)[..., None] \
+        * b_mat.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, c_mat.astype(jnp.float32)) \
+        + xf * jnp.repeat(p["d_skip"], hd)[None]
+    y = rms_norm(y.astype(dt_c) * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(dt_c)
+    return out[:, None], SSMState(conv=window[:, 1:], h=h)
+
+
+def mamba1_prefill(p: dict, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence forward that also returns the decode state (the
+    prefill path; sequential-scan ref form — see kernels/ref.py)."""
+    from ..kernels.ref import mamba_scan_seq_stateful
+    dt_c = cdtype(cfg)
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    k = cfg.ssm_conv
+    xz = x @ p["in_proj"].astype(dt_c)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    proj = x_c @ p["x_proj"].astype(dt_c)
+    dt_in, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt_c)
+                         + p["dt_bias"].astype(dt_c))
+    a = -jnp.exp(p["a_log"])
+    y, h_last = mamba_scan_seq_stateful(x_c, dt, a, b_mat, c_mat,
+                                        p["d_skip"])
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_c)
+    conv_tail = _conv_tail(x_in, k)
+    return out, SSMState(conv=conv_tail, h=h_last)
+
+
+def mamba2_prefill(p: dict, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, SSMState]:
+    from ..kernels.ref import mamba_scan_seq_stateful
+    dt_c = cdtype(cfg)
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.mamba2_head_dim
+    k = cfg.ssm_conv
+    xz = x @ p["in_proj"].astype(dt_c)
+    z, x_in, b_mat, c_mat, dt_h = _mamba2_split(p, xz, cfg)
+    conv_in = jnp.concatenate([x_in, b_mat, c_mat], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    x_c, b_mat, c_mat = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_h + p["dt_bias"].astype(dt_c))
+    b_sz, s = x.shape[0], x.shape[1]
+    heads = di // hd
+    if cfg.mamba2_use_ssd:
+        from ..kernels.ref import mamba2_ssd
+        a = -jnp.exp(p["a_log"])
+        y4, h4 = mamba2_ssd(x_c.reshape(b_sz, s, heads, hd), dt, a,
+                            b_mat, c_mat, p["d_skip"], chunk=cfg.ssd_chunk)
+        y = y4.reshape(b_sz, s, di).astype(dt_c)
+        h_last = h4.reshape(b_sz, di, n)
+    else:
+        dt_full = jnp.repeat(dt, hd, axis=-1)
+        a_full = jnp.broadcast_to(
+            -jnp.exp(jnp.repeat(p["a_log"], hd))[:, None], (di, n))
+        d_full = jnp.repeat(p["d_skip"], hd)
+        y, h_last = mamba_scan_seq_stateful(x_c, dt_full, a_full, b_mat,
+                                            c_mat, d_full)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"].astype(dt_c)
+    return out, SSMState(conv=_conv_tail(conv_in, k), h=h_last)
+
+
+def _conv_tail(x_in: jax.Array, k: int) -> jax.Array:
+    """Last k-1 conv inputs (zero-padded on the left for short seqs)."""
+    b, s, c = x_in.shape
+    if s >= k - 1:
+        return x_in[:, s - (k - 1):]
+    pad = jnp.zeros((b, (k - 1) - s, c), x_in.dtype)
+    return jnp.concatenate([pad, x_in], axis=1)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, version: int) -> SSMState:
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_ch = di if version == 1 else di + 2 * n
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cdtype(cfg)),
+        h=jnp.zeros((batch, di, n), jnp.float32),
+    )

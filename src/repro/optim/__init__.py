@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW, schedules (WSD default), grad compression."""
+from . import compress, schedule
+from .adamw import AdamWState, clip_by_global_norm, global_norm, init, update
+
+__all__ = ["AdamWState", "clip_by_global_norm", "compress", "global_norm",
+           "init", "schedule", "update"]

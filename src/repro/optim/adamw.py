@@ -1,0 +1,69 @@
+"""AdamW with global-norm clipping — self-contained (no optax dependency).
+
+State (m, v) mirrors the param tree; everything is f32 regardless of the
+compute dtype (mixed-precision master copy lives in the params themselves,
+which are f32 — see layers.py). Fully sharded: the train launcher places
+m/v with the same specs as the params (ZeRO-3), and the update is
+elementwise so no collectives are added beyond the grad reduction.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(
+    grads, state: AdamWState, params, *,
+    lr: jax.Array | float,
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0,
+):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        return (p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,39 @@
+"""LR schedules. WSD (warmup–stable–decay) is minicpm-2b's native schedule
+(arXiv:2404.06395) and the framework default; cosine and linear included.
+All are step → lr callables safe to trace (pure jnp)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_ratio: float = 0.1):
+    """Warmup → stable plateau → exponential-ish (linear here) decay."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        decay_frac = (step - warmup_steps - stable_steps) / jnp.maximum(
+            decay_steps, 1)
+        decay = peak_lr * (1.0 - (1.0 - final_ratio)
+                           * jnp.clip(decay_frac, 0.0, 1.0))
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < warmup_steps + stable_steps,
+                                  peak_lr, decay))
+        return out
+    return lr
+
+
+def cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+           final_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+def constant(peak_lr: float):
+    return lambda step: jnp.asarray(peak_lr, jnp.float32)

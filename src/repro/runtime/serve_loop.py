@@ -1,0 +1,133 @@
+"""Batched serving runtime: continuous-batching scheduler over paged KV.
+
+Requests arrive with prompt token lists; the scheduler packs up to
+``max_batch`` active sequences, prefills new arrivals (padded to one shared
+length per admission wave), then decodes all active sequences in lockstep
+— each decode step touches the Roomy paged caches through one batched
+gather/scatter (core/paged.py). Finished sequences (EOS or max_new) free
+their slots for waiting requests.
+
+This is the degenerate single-host form of a disaggregated server; the
+dry-run lowers the same ``decode_step`` against the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        assert not cfg.frontend_stub, "serving demo uses token-input archs"
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.max_len = max_batch, max_len
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, t, c, cfg))
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+
+    # ----------------------------------------------------------- engine
+    def _prefill_one(self, req: Request, caches, slot: int):
+        """Prefill via decode steps (exact for every family, incl. SSM)."""
+        for tok in req.prompt:
+            inputs = {"tokens": jnp.full((self.max_batch, 1), tok, jnp.int32),
+                      "positions": jnp.zeros((self.max_batch, 1), jnp.int32)}
+            logits, caches = self._masked_step(inputs, caches, slot)
+        self.stats["prefills"] += 1
+        return logits, caches
+
+    def _masked_step(self, inputs, caches, slot: Optional[int] = None):
+        """One decode step; when ``slot`` is given, only that row's caches
+        advance — other active rows keep their pre-step state (otherwise a
+        mid-flight prefill would pollute their pages)."""
+        logits, new_caches = self._decode(self.params, inputs, caches)
+        if slot is None:
+            return logits, new_caches
+        b = self.max_batch
+
+        def merge(kp, new, old):
+            name = str(getattr(kp[-1], "key", kp[-1])).lstrip(".")
+            if new.ndim == 0:
+                return new
+            if name in ("k_pages", "v_pages"):
+                pps = old.shape[-4] // b          # num_pages = B*pps
+                pages = jnp.arange(old.shape[-4])
+                m = (pages // pps) == slot        # (num_pages,)
+                m = m.reshape((1,) * (old.ndim - 4) + (-1, 1, 1, 1))
+                return jnp.where(m, new, old)
+            if name == "page_table":
+                m = (jnp.arange(b) == slot).reshape(
+                    (1,) * (old.ndim - 2) + (-1, 1))
+                return jnp.where(m, new, old)
+            if name == "lengths":
+                m = (jnp.arange(b) == slot).reshape(
+                    (1,) * (old.ndim - 1) + (-1,))
+                return jnp.where(m, new, old)
+            if name == "conv":                     # (L, B, k, C)
+                m = (jnp.arange(b) == slot).reshape(
+                    (1,) * (old.ndim - 3) + (-1, 1, 1))
+                return jnp.where(m, new, old)
+            if name == "h":                        # (L, B, di, N)
+                m = (jnp.arange(b) == slot).reshape(
+                    (1,) * (old.ndim - 3) + (-1, 1, 1))
+                return jnp.where(m, new, old)
+            return new
+
+        merged = jax.tree_util.tree_map_with_path(merge, new_caches, caches)
+        return logits, merged
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        cfg = self.cfg
+        waiting = list(requests)
+        active: List[Optional[Request]] = [None] * self.max_batch
+        caches = lm.make_cache(cfg, self.max_batch, self.max_len)
+        last_tok = np.zeros((self.max_batch,), np.int32)
+
+        while waiting or any(a is not None for a in active):
+            # ----- admission
+            for slot in range(self.max_batch):
+                if active[slot] is None and waiting:
+                    req = waiting.pop(0)
+                    logits, caches = self._prefill_one(req, caches, slot)
+                    last = int(np.asarray(logits)[slot, 0].argmax()) \
+                        if self.greedy else 0
+                    req.out.append(last)
+                    last_tok[slot] = last
+                    active[slot] = req
+            if not any(a is not None for a in active):
+                break
+            # ----- one lockstep decode wave
+            inputs = {"tokens": jnp.asarray(last_tok)[:, None],
+                      "positions": jnp.zeros((self.max_batch, 1), jnp.int32)}
+            logits, caches = self._masked_step(inputs, caches)
+            self.stats["decode_steps"] += 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for slot, req in enumerate(active):
+                if req is None:
+                    continue
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                last_tok[slot] = tok
+                self.stats["tokens_out"] += 1
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    active[slot] = None
+        return {r.rid: r.out for r in requests}

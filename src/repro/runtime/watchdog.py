@@ -1,0 +1,65 @@
+"""Straggler detection + elastic re-mesh decision logic (DESIGN.md §8).
+
+On a real cluster the watchdog wraps the per-step host loop: a step whose
+wall time exceeds ``threshold × EWMA`` marks its slowest participant as a
+straggler; repeated offenses trigger the elastic path (checkpoint → shrink
+mesh → resume), which on this container is exercised by the checkpoint
+elastic-restore tests. The detector itself is pure host-side logic and is
+unit-tested directly.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class StragglerWatchdog:
+    ewma_alpha: float = 0.2
+    threshold: float = 2.5          # step is "slow" above threshold×EWMA
+    strikes_to_evict: int = 3
+    warmup_steps: int = 5           # compile steps excluded
+
+    _ewma: Optional[float] = None
+    _seen: int = 0
+    strikes: int = 0
+    events: List[str] = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> str:
+        """Returns one of: 'warmup' | 'ok' | 'slow' | 'evict'."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return "warmup"
+        if self._ewma is None:
+            self._ewma = seconds
+            return "ok"
+        slow = seconds > self.threshold * self._ewma
+        # Slow steps do not poison the EWMA (classic watchdog rule).
+        if not slow:
+            self._ewma = (1 - self.ewma_alpha) * self._ewma \
+                + self.ewma_alpha * seconds
+            self.strikes = max(0, self.strikes - 1)
+            return "ok"
+        self.strikes += 1
+        self.events.append(
+            f"step {step}: {seconds:.3f}s > {self.threshold:.1f}×"
+            f"{self._ewma:.3f}s (strike {self.strikes})")
+        if self.strikes >= self.strikes_to_evict:
+            self.strikes = 0
+            return "evict"
+        return "slow"
+
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._ewma
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidev(code: str, n_devices: int = 8, timeout: int = 300):
+    """Run a snippet in a subprocess with N fake devices (the dry-run flag
+    must never leak into this process — see the brief)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, (
+        f"multidev subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+        f"STDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def multidev():
+    return run_multidev

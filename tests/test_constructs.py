@@ -1,0 +1,163 @@
+"""Paper §3 programming constructs (Tier J): map, reduce, set ops, chain
+reduction, parallel prefix, pair reduction, BFS — each against an
+independent oracle, plus the paper's own examples."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import array as RA
+from repro.core import constructs as C
+from repro.core import hashtable as HT
+from repro.core import rlist as RL
+
+
+class TestPaperMapExample:
+    def test_array_to_hashtable(self):
+        """Paper's map example: RoomyArray → RoomyHashTable (index as key)."""
+        data = jnp.array([5, 9, 5, 7], jnp.int32)
+        ra = RA.make(data, queue_capacity=4)
+        ht = HT.make(16, 1, 8, val_dtype=jnp.int32)
+        keys = jnp.arange(4, dtype=jnp.uint32)[:, None]
+        ht, _ = HT.insert(ht, keys, ra.data)
+        ht, _ = HT.sync(ht)
+        vals, found = HT.lookup(ht, keys)
+        assert bool(jnp.all(found))
+        assert np.array_equal(np.asarray(vals), np.asarray(data))
+
+
+class TestPaperReduceExample:
+    def test_sum_of_squares(self):
+        """Paper's reduce example over a RoomyList."""
+        rl = RL.from_rows(jnp.arange(10, dtype=jnp.uint32)[:, None], 16)
+        s = RL.reduce(rl, lambda r: (r[0] * r[0]).astype(jnp.uint32),
+                      lambda a, b: a + b, jnp.uint32(0))
+        assert int(s) == sum(i * i for i in range(10))
+
+
+class TestSetOps:
+    @settings(max_examples=25, deadline=None)
+    @given(st.sets(st.integers(0, 30)), st.sets(st.integers(0, 30)))
+    def test_union_difference_intersection(self, a, b):
+        def mk(s):
+            rows = (jnp.array(sorted(s), jnp.uint32)[:, None]
+                    if s else jnp.zeros((0, 1), jnp.uint32))
+            return RL.from_rows(rows, capacity=64)
+        A, B = mk(a), mk(b)
+        got_u = sorted(x[0] for x in RL.to_numpy(C.set_union(A, B)).tolist())
+        assert got_u == sorted(a | b)
+        got_d = sorted(x[0] for x in
+                       RL.to_numpy(C.set_difference(A, B)).tolist())
+        assert got_d == sorted(a - b)
+        got_i = sorted(x[0] for x in
+                       RL.to_numpy(C.set_intersection(A, B)).tolist())
+        assert got_i == sorted(a & b)
+
+
+class TestChainAndPrefix:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(-100, 100), min_size=1, max_size=32))
+    def test_chain_reduction(self, vals):
+        """a[i] += a[i-1], all reads before writes (paper §3)."""
+        a = jnp.array(vals, jnp.int32)
+        ra = RA.make(a, queue_capacity=len(vals), payload_dtype=jnp.int32)
+        out = C.chain_reduce(ra, lambda old, prev: old + prev)
+        want = np.array(vals, np.int64)
+        want[1:] += np.array(vals[:-1], np.int64)
+        assert np.array_equal(np.asarray(out.data), want.astype(np.int32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(-50, 50), min_size=1, max_size=40))
+    def test_parallel_prefix_is_cumsum(self, vals):
+        a = jnp.array(vals, jnp.int32)
+        ra = RA.make(a, queue_capacity=len(vals), payload_dtype=jnp.int32)
+        out = C.parallel_prefix(ra, lambda o, p: o + p)
+        assert np.array_equal(np.asarray(out.data),
+                              np.cumsum(vals).astype(np.int32))
+
+
+class TestPairReduction:
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.integers(-10, 10), min_size=1, max_size=20),
+           st.integers(2, 8))
+    def test_sum_over_pairs(self, vals, block):
+        a = jnp.array(vals, jnp.int32)
+        ra = RA.make(a, queue_capacity=1)
+        got = C.pair_reduce(ra, lambda x, y: (x * y).astype(jnp.int32),
+                            lambda p, q: p + q, jnp.int32(0), block=block)
+        assert int(got) == sum(vals) ** 2       # Σᵢⱼ xᵢxⱼ = (Σx)²
+
+
+class TestBFS:
+    def test_pancake_diameters(self):
+        """Paper's flagship app. Diameters from OEIS A058986."""
+        for n, want_diam in [(4, 4), (5, 5), (6, 7)]:
+            def encode_start(n):
+                return np.uint32(sum(i << (4 * i) for i in range(n)))
+
+            def gen_next(row, n=n):
+                code = row[0]
+                perm = jnp.stack(
+                    [(code >> jnp.uint32(4 * i)) & jnp.uint32(0xF)
+                     for i in range(n)]).astype(jnp.int32)
+                outs = []
+                for k in range(2, n + 1):
+                    flipped = jnp.concatenate([perm[:k][::-1], perm[k:]])
+                    acc = jnp.uint32(0)
+                    for i in range(n):
+                        acc = acc | (flipped[i].astype(jnp.uint32)
+                                     << jnp.uint32(4 * i))
+                    outs.append(acc)
+                return jnp.stack(outs)[:, None], jnp.ones((n - 1,), bool)
+
+            total = math.factorial(n)
+            res = C.breadth_first_search(
+                np.array([[encode_start(n)]], np.uint32), gen_next,
+                fanout=n - 1, width=1,
+                all_capacity=total + 8, level_capacity=total + 8)
+            assert sum(res.level_sizes) == total, (n, res.level_sizes)
+            assert len(res.level_sizes) - 1 == want_diam
+
+    def test_capacity_growth_path(self):
+        """Start with a too-small 'all' capacity; BFS must grow and finish."""
+        n = 5
+
+        def gen_next(row):
+            code = row[0]
+            perm = jnp.stack(
+                [(code >> jnp.uint32(4 * i)) & jnp.uint32(0xF)
+                 for i in range(n)]).astype(jnp.int32)
+            outs = []
+            for k in range(2, n + 1):
+                flipped = jnp.concatenate([perm[:k][::-1], perm[k:]])
+                acc = jnp.uint32(0)
+                for i in range(n):
+                    acc = acc | (flipped[i].astype(jnp.uint32)
+                                 << jnp.uint32(4 * i))
+                outs.append(acc)
+            return jnp.stack(outs)[:, None], jnp.ones((n - 1,), bool)
+
+        start = np.uint32(sum(i << (4 * i) for i in range(n)))
+        res = C.breadth_first_search(
+            np.array([[start]], np.uint32), gen_next, fanout=n - 1, width=1,
+            all_capacity=16, level_capacity=64)   # 120 states won't fit 16
+        assert sum(res.level_sizes) == math.factorial(n)
+
+
+class TestCayleyBFS:
+    def test_mahonian_profile_s5(self):
+        """Second BFS app: S_5 bubble-sort Cayley graph — level sizes must
+        equal the Mahonian numbers and diameter n(n-1)/2 (exact oracle)."""
+        import sys, os
+        sys.path.insert(0, os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "examples"))
+        from cayley_bfs import gen_next_jnp, mahonian
+        n = 5
+        start = np.uint32(sum(i << (4 * i) for i in range(n)))
+        res = C.breadth_first_search(
+            np.array([[start]], np.uint32), gen_next_jnp(n), fanout=n - 1,
+            width=1, all_capacity=128, level_capacity=128)
+        assert res.level_sizes == mahonian(n)
+        assert len(res.level_sizes) - 1 == n * (n - 1) // 2

@@ -1,0 +1,104 @@
+"""Optimizer substrate: AdamW math, schedules, compression error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.optim import compress, schedule
+
+
+class TestAdamW:
+    def test_matches_reference_math(self):
+        """One step against a hand-rolled numpy AdamW."""
+        p = {"w": jnp.array([1.0, -2.0, 3.0])}
+        g = {"w": jnp.array([0.1, 0.2, -0.3])}
+        st_ = optim.init(p)
+        lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+        new_p, new_st, gnorm = optim.update(
+            g, st_, p, lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=wd,
+            clip_norm=None)
+        gn = np.array([0.1, 0.2, -0.3])
+        m = (1 - b1) * gn
+        v = (1 - b2) * gn ** 2
+        mh = m / (1 - b1)
+        vh = v / (1 - b2)
+        want = np.array([1.0, -2.0, 3.0]) - lr * (
+            mh / (np.sqrt(vh) + eps) + wd * np.array([1.0, -2.0, 3.0]))
+        np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+        assert int(new_st.step) == 1
+
+    def test_clipping(self):
+        p = {"w": jnp.zeros(4)}
+        g = {"w": jnp.full((4,), 10.0)}        # norm 20
+        _, _, gnorm = optim.update(g, optim.init(p), p, lr=0.0,
+                                   clip_norm=1.0, weight_decay=0.0)
+        assert abs(float(gnorm) - 20.0) < 1e-4
+
+    def test_quadratic_convergence(self):
+        p = {"w": jnp.array([5.0])}
+        st_ = optim.init(p)
+        for _ in range(200):
+            g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+            p, st_, _ = optim.update(g, st_, p, lr=0.1, weight_decay=0.0)
+        assert abs(float(p["w"][0])) < 0.1
+
+
+class TestSchedules:
+    def test_wsd_phases(self):
+        lr = schedule.wsd(1.0, warmup_steps=10, stable_steps=20,
+                          decay_steps=10, final_ratio=0.1)
+        assert float(lr(0)) == 0.0
+        assert abs(float(lr(5)) - 0.5) < 1e-6           # warmup
+        assert abs(float(lr(15)) - 1.0) < 1e-6          # stable
+        assert abs(float(lr(25)) - 1.0) < 1e-6
+        assert abs(float(lr(40)) - 0.1) < 1e-6          # decayed
+        assert abs(float(lr(100)) - 0.1) < 1e-6         # floor
+
+    def test_cosine_endpoints(self):
+        lr = schedule.cosine(1.0, warmup_steps=10, total_steps=110,
+                             final_ratio=0.1)
+        assert abs(float(lr(10)) - 1.0) < 1e-5
+        assert abs(float(lr(110)) - 0.1) < 1e-5
+
+
+class TestCompression:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_int8_error_feedback_closes(self, seed):
+        """codec(x) + residual == x exactly (the error-feedback identity)."""
+        g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (300,)) * 3}
+        msg, res = compress.int8_compress(g, None)
+        deq = compress.int8_decompress(msg, g)
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + res["w"]), np.asarray(g["w"]),
+            rtol=1e-5, atol=1e-6)
+
+    def test_int8_residual_accumulates_to_exact(self):
+        """Constant grad: mean of k compressed steps → true grad (EF)."""
+        g = {"w": jnp.array([0.001, 1.0, -0.5, 0.0003] * 64)}
+        res = None
+        total = jnp.zeros_like(g["w"])
+        k = 50
+        for _ in range(k):
+            msg, res = compress.int8_compress(g, res)
+            total = total + compress.int8_decompress(msg, g)["w"]
+        np.testing.assert_allclose(np.asarray(total / k),
+                                   np.asarray(g["w"]), atol=1e-4)
+
+    def test_topk_keeps_largest(self):
+        g = {"w": jnp.array([0.1, -5.0, 0.2, 4.0, 0.01] * 20)}
+        msg, res = compress.topk_compress(g, None, density=0.4)
+        deq = compress.topk_decompress(msg, g)
+        # top-40% = the ±5/±4 entries
+        kept = np.asarray(deq["w"]) != 0
+        assert kept.sum() == 40
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + res["w"]), np.asarray(g["w"]),
+            rtol=1e-5, atol=1e-6)
+
+    def test_wire_bytes_reduction(self):
+        g = {"w": jnp.zeros((1024,), jnp.float32)}
+        msg, _ = compress.int8_compress(g, None)
+        assert compress.wire_bytes(msg) < 1024 * 4 / 3   # >3× reduction

@@ -1,0 +1,95 @@
+"""Unit tests for the dry-run HLO collective parser and roofline math
+(host-side logic only — no devices, no XLA flag)."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import collective_stats, _shape_bytes
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, analyze
+
+HLO = """
+ENTRY %main {
+  %ar = f32[1024,256]{1,0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag.1 = bf16[4096]{0} all-gather(%y), replica_groups=[2,256]<=[512]T(1,0), dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = (bf16[64,32]{1,0}, bf16[64,32]{1,0}) all-to-all(%p, %q), replica_groups=[32,16]<=[512]
+  %cp = u32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ard = f32[8] all-reduce-done(%h)
+}
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[1024,256]{1,0}") == 1024 * 256 * 4
+        assert _shape_bytes("bf16[4096]{0}") == 4096 * 2
+        assert _shape_bytes("(bf16[64,32]{1,0}, bf16[64,32]{1,0})") \
+            == 2 * 64 * 32 * 2
+        assert _shape_bytes("pred[7]") == 7
+
+
+class TestCollectiveStats:
+    def test_parse_and_algebra(self):
+        s = collective_stats(HLO, n_devices=512)
+        ar = s["all-reduce"]
+        assert ar["count"] == 1                      # -done line skipped? no:
+        # all-reduce-done matches the base regex? the (-start)? group only
+        # covers -start; '-done(' does not match 'all-reduce(' → excluded.
+        b = 1024 * 256 * 4
+        assert ar["operand_bytes"] == b
+        np.testing.assert_allclose(ar["wire_bytes"], 2 * b * 15 / 16)
+
+        ag = s["all-gather"]
+        assert ag["count"] == 1
+        assert ag["operand_bytes"] == 4096 * 2 // 256
+        np.testing.assert_allclose(ag["wire_bytes"],
+                                   (4096 * 2 // 256) * 255)
+
+        rs = s["reduce-scatter"]
+        assert rs["operand_bytes"] == 128 * 4 * 4    # explicit group of 4
+
+        a2a = s["all-to-all"]
+        assert a2a["operand_bytes"] == 2 * 64 * 32 * 2
+
+        cp = s["collective-permute"]
+        assert cp["operand_bytes"] == 16 * 4
+        assert s["total_operand_bytes"] > 0
+
+
+class TestRooflineMath:
+    def _cell(self, **kw):
+        base = {
+            "arch": "x", "shape": "train_4k", "mesh": "16x16",
+            "kind": "train", "seq_len": 4096, "global_batch": 256,
+            "devices": 256, "active_params": 1_000_000_000,
+            "flops_per_device_counted": 1e14,
+            "bytes_per_device": 1e11,
+            "collectives": {"total_wire_bytes": 1e10},
+        }
+        base.update(kw)
+        return base
+
+    def test_terms_and_dominance(self):
+        r = analyze(self._cell())
+        np.testing.assert_allclose(r["t_compute_s"], 1e14 / PEAK_FLOPS)
+        np.testing.assert_allclose(r["t_memory_s"], 1e11 / HBM_BW)
+        np.testing.assert_allclose(r["t_collective_s"], 1e10 / LINK_BW)
+        assert r["dominant"] == "compute"
+        model = 6.0 * 1e9 * 256 * 4096 / 256
+        np.testing.assert_allclose(r["model_flops_per_device"], model)
+        np.testing.assert_allclose(r["model_over_hlo"], model / 1e14)
+        np.testing.assert_allclose(
+            r["roofline_fraction"],
+            (model / PEAK_FLOPS) / r["t_compute_s"])
+
+    def test_decode_uses_2nd_and_one_token(self):
+        r = analyze(self._cell(kind="decode",
+                               flops_per_device_counted=1e9,
+                               bytes_per_device=1e12))
+        model = 2.0 * 1e9 * 256 / 256
+        np.testing.assert_allclose(r["model_flops_per_device"], model)
+        assert r["dominant"] == "memory"
+
+    def test_skip_passthrough(self):
+        r = analyze({"arch": "x", "shape": "long_500k", "mesh": "16x16",
+                     "skipped": "full attention"})
+        assert r["dominant"] == "skipped"

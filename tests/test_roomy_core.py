@@ -1,0 +1,228 @@
+"""Tier J Roomy structures vs in-RAM oracles, incl. hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import array as RA
+from repro.core import hashtable as HT
+from repro.core import rlist as RL
+from repro.core import types as T
+
+SENT = 0xFFFFFFFF
+
+
+def rows_strategy(width=2, max_n=40, max_val=30):
+    # max_val small → plenty of duplicates; sentinel excluded by bound
+    return st.lists(
+        st.tuples(*([st.integers(0, max_val)] * width)),
+        min_size=0, max_size=max_n)
+
+
+def as_np(rows, width=2):
+    if not rows:
+        return np.zeros((0, width), np.uint32)
+    return np.array(rows, np.uint32)
+
+
+class TestRoomyList:
+    @settings(max_examples=30, deadline=None)
+    @given(rows_strategy())
+    def test_remove_dupes_matches_set(self, rows):
+        arr = as_np(rows)
+        rl = RL.from_rows(jnp.asarray(arr), capacity=64)
+        rd = RL.remove_dupes(rl)
+        got = sorted(map(tuple, RL.to_numpy(rd).tolist()))
+        assert got == sorted(set(map(tuple, arr.tolist())))
+
+    @settings(max_examples=30, deadline=None)
+    @given(rows_strategy(), rows_strategy())
+    def test_remove_all_multiset(self, a_rows, b_rows):
+        a, b = as_np(a_rows), as_np(b_rows)
+        rl_a = RL.from_rows(jnp.asarray(a), capacity=64)
+        rl_b = RL.from_rows(jnp.asarray(b), capacity=64)
+        out = RL.remove_all(rl_a, rl_b)
+        bset = set(map(tuple, b.tolist()))
+        want = sorted(t for t in map(tuple, a.tolist()) if t not in bset)
+        assert sorted(map(tuple, RL.to_numpy(out).tolist())) == want
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows_strategy(), rows_strategy())
+    def test_member_mask(self, a_rows, q_rows):
+        a, q = as_np(a_rows), as_np(q_rows)
+        if q.shape[0] == 0:
+            return
+        rl = RL.from_rows(jnp.asarray(a), capacity=64)
+        got = np.asarray(RL.member_mask(rl, jnp.asarray(q)))
+        aset = set(map(tuple, a.tolist()))
+        want = np.array([tuple(r) in aset for r in q.tolist()])
+        assert np.array_equal(got, want)
+
+    def test_add_overflow_flag(self):
+        rl = RL.make(4, 1)
+        rl, ov = RL.add(rl, jnp.arange(3, dtype=jnp.uint32)[:, None])
+        assert not bool(ov)
+        rl, ov = RL.add(rl, jnp.arange(3, dtype=jnp.uint32)[:, None])
+        assert bool(ov)
+        assert int(rl.count) == 4          # clamped, no corruption
+
+    def test_reduce_and_predicate(self):
+        vals = np.array([[1], [2], [2], [5]], np.uint32)
+        rl = RL.from_rows(jnp.asarray(vals), capacity=8)
+        s = RL.reduce(rl, lambda r: r[0].astype(jnp.uint32),
+                      lambda a, b: a + b, jnp.uint32(0))
+        assert int(s) == 10
+        assert int(RL.predicate_count(rl, lambda r: r[0] == 2)) == 2
+
+
+class TestRoomyArray:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 15), st.integers(-50, 50)),
+                    min_size=0, max_size=30))
+    def test_scatter_add_sync_matches_numpy(self, updates):
+        base = np.arange(16, dtype=np.int32)
+        ra = RA.make(jnp.asarray(base), queue_capacity=32,
+                     payload_dtype=jnp.int32)
+        if updates:
+            idx = jnp.array([u[0] for u in updates], jnp.int32)
+            pay = jnp.array([u[1] for u in updates], jnp.int32)
+            ra, ov = RA.update(ra, idx, pay)
+            assert not bool(ov)
+        ra = RA.sync(ra, combine=lambda a, b: a + b,
+                     apply=lambda old, agg: old + agg)
+        want = base.copy()
+        for i, v in updates:
+            want[i] += v
+        assert np.array_equal(np.asarray(ra.data), want)
+
+    def test_queue_order_independence(self):
+        """combine is assoc+comm → any issue order gives the same sync."""
+        base = jnp.zeros(8, jnp.int32)
+        idx = jnp.array([3, 1, 3, 3, 1], jnp.int32)
+        pay = jnp.array([1, 10, 2, 3, 20], jnp.int32)
+        ra1 = RA.make(base, 8, payload_dtype=jnp.int32)
+        ra1, _ = RA.update(ra1, idx, pay)
+        perm = jnp.array([4, 2, 0, 1, 3])
+        ra2 = RA.make(base, 8, payload_dtype=jnp.int32)
+        ra2, _ = RA.update(ra2, idx[perm], pay[perm])
+        f = lambda ra: RA.sync(ra, lambda a, b: a + b,
+                               lambda o, g: o + g).data
+        assert np.array_equal(np.asarray(f(ra1)), np.asarray(f(ra2)))
+
+    def test_incremental_predicate_count(self):
+        pred = lambda x: x > 5
+        ra = RA.make(jnp.arange(8, dtype=jnp.int32), 8,
+                     payload_dtype=jnp.int32, pred=pred)
+        assert int(ra.pcount) == 2             # 6, 7
+        ra, _ = RA.update(ra, jnp.array([0, 7], jnp.int32),
+                          jnp.array([100, -100], jnp.int32))
+        ra = RA.sync(ra, lambda a, b: a + b, lambda o, g: o + g, pred=pred)
+        assert int(ra.pcount) == 2             # 0→100 in, 7→-93 out
+
+
+class TestRoomyHashTable:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 20), st.integers(0, 100)),
+                    min_size=0, max_size=30))
+    def test_insert_sum_matches_dict(self, pairs):
+        ht = HT.make(capacity=64, key_width=1, queue_capacity=64,
+                     val_dtype=jnp.int32)
+        want = {}
+        for k, v in pairs:
+            want[k] = want.get(k, 0) + v
+        if pairs:
+            keys = jnp.array([[k] for k, _ in pairs], jnp.uint32)
+            vals = jnp.array([v for _, v in pairs], jnp.int32)
+            ht, _ = HT.insert(ht, keys, vals)
+        ht, ov = HT.sync(ht, combine=lambda a, b: a + b,
+                         apply=lambda old, agg, p: jnp.where(p, old + agg,
+                                                             agg))
+        assert not bool(ov)
+        assert int(ht.count) == len(want)
+        if want:
+            q = jnp.array([[k] for k in want], jnp.uint32)
+            got_v, got_f = HT.lookup(ht, q)
+            assert bool(jnp.all(got_f))
+            for (k, v), gv in zip(want.items(), np.asarray(got_v)):
+                assert v == gv
+        # absent key
+        _, f = HT.lookup(ht, jnp.array([[999]], jnp.uint32))
+        assert not bool(f[0])
+
+    def test_remove_tombstone_wins(self):
+        ht = HT.make(16, 1, 16, val_dtype=jnp.int32)
+        ht, _ = HT.insert(ht, jnp.array([[7]], jnp.uint32),
+                          jnp.array([1], jnp.int32))
+        ht, _ = HT.remove(ht, jnp.array([[7]], jnp.uint32))
+        ht, _ = HT.sync(ht)
+        _, f = HT.lookup(ht, jnp.array([[7]], jnp.uint32))
+        assert not bool(f[0])
+        assert int(ht.count) == 0
+
+
+class TestHelpers:
+    @settings(max_examples=20, deadline=None)
+    @given(rows_strategy(width=3, max_n=20))
+    def test_lexsort_rows(self, rows):
+        arr = as_np(rows, 3)
+        if arr.shape[0] == 0:
+            return
+        perm = T.lexsort_rows(jnp.asarray(arr))
+        got = arr[np.asarray(perm)]
+        want = np.array(sorted(map(tuple, arr.tolist())), np.uint32)
+        assert np.array_equal(got, want)
+
+    def test_tree_reduce_identity_law(self):
+        vals = jnp.arange(7, dtype=jnp.int32)
+        assert int(T.tree_reduce(vals, jnp.maximum, -2**31)) == 6
+        assert int(T.tree_reduce(vals, lambda a, b: a + b, 0)) == 21
+
+
+class TestRoomySet:
+    """Native RoomySet — the paper's named future work, as a primitive.
+
+    One-pass union/intersection/difference must match python sets AND the
+    paper's 3-temporary RoomyList recipes (cross-validated)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sets(st.integers(0, 40)), st.sets(st.integers(0, 40)))
+    def test_native_ops_match_python_sets(self, a, b):
+        from repro.core import rset as RS
+
+        def mk(s):
+            rows = (jnp.array(sorted(s), jnp.uint32)[:, None]
+                    if s else jnp.zeros((0, 1), jnp.uint32))
+            return RS.from_rows(rows, capacity=max(len(s), 1))
+        A, B = mk(a), mk(b)
+        got_u = sorted(x[0] for x in RS.to_numpy(RS.union(A, B)).tolist())
+        got_i = sorted(x[0] for x in
+                       RS.to_numpy(RS.intersection(A, B)).tolist())
+        got_d = sorted(x[0] for x in
+                       RS.to_numpy(RS.difference(A, B)).tolist())
+        assert got_u == sorted(a | b)
+        assert got_i == sorted(a & b)
+        assert got_d == sorted(a - b)
+
+    def test_matches_list_recipe(self):
+        """Native intersection == the paper's (A+B)−(A−B)−(B−A) recipe."""
+        from repro.core import constructs as C
+        from repro.core import rset as RS
+        import numpy as np
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 60, 40).astype(np.uint32)
+        b = rng.integers(0, 60, 30).astype(np.uint32)
+        A_l = RL.remove_dupes(RL.from_rows(jnp.asarray(a)[:, None], 64))
+        B_l = RL.remove_dupes(RL.from_rows(jnp.asarray(b)[:, None], 64))
+        recipe = sorted(x[0] for x in
+                        RL.to_numpy(C.set_intersection(A_l, B_l)).tolist())
+        A_s = RS.from_rows(jnp.asarray(a)[:, None], 64)
+        B_s = RS.from_rows(jnp.asarray(b)[:, None], 64)
+        native = sorted(x[0] for x in
+                        RS.to_numpy(RS.intersection(A_s, B_s)).tolist())
+        assert native == recipe
+
+    def test_dedup_on_build(self):
+        from repro.core import rset as RS
+        s = RS.from_rows(jnp.array([[7], [7], [7]], jnp.uint32), capacity=4)
+        assert int(s.count) == 1
