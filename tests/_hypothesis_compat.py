@@ -1,0 +1,36 @@
+"""Hypothesis import shim: degrade @given tests to individual skips.
+
+A module-level ``pytest.importorskip("hypothesis")`` would skip entire
+modules — dropping the plain oracle tests that live alongside the
+property tests. Importing ``given``/``settings``/``st`` from here keeps
+those running: with hypothesis installed this re-exports the real thing;
+without it, @given-decorated tests skip one by one and everything else
+collects and runs normally.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # minimal CI image
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Accepts any strategy expression at decoration time."""
+
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _Strategies()
