@@ -9,25 +9,49 @@ Rows are compared lexicographically. For streaming comparisons we view each
 row as a big-endian byte string (``void`` scalar): bytewise order of
 big-endian unsigned words == numeric lexicographic order, so np.searchsorted
 on the void keys gives us merge boundaries for free.
+
+Sort-once engine
+----------------
+Every full sort pass is counted in :data:`STATS`, and every function that
+emits sorted output records the fact on the destination store
+(``mark_sorted``).  Consumers honour the invariant: :func:`external_sort`
+degrades to a copy (or a one-pass :func:`stream_dedupe`) when its input is
+already sorted, and :class:`MembershipProbe` answers sorted-membership
+queries against a sorted store while pruning chunks whose manifest key
+range cannot intersect the query window.  The k-way merge itself is a
+``heapq`` of ``(head_key, run_index)`` entries — O(log k) per block
+selection instead of the O(k) argmin scan over all run heads.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterator, List, Optional
+import heapq
+from typing import Iterator, List, Optional
 
 import numpy as np
 
-from .store import ChunkStore
+from .store import ChunkStore, row_keys
+
+__all__ = [
+    "STATS", "reset_stats", "row_keys", "sort_rows", "RunBuilder",
+    "make_runs", "iter_merged", "merge_runs", "external_sort",
+    "stream_dedupe", "MembershipProbe", "merge_difference",
+]
 
 
-def row_keys(rows: np.ndarray) -> np.ndarray:
-    """(n,) fixed-length byte keys whose order == lexicographic row order.
+# Pass counters for the sort-once engine. ``sort_passes`` counts full
+# sort passes (each make_runs / in-RAM sort of a dataset is one pass);
+# ``rows_sorted`` the rows that went through them — the invariant tests
+# assert a fused BFS level sorts exactly the raw frontier, once, and never
+# the visited set. ``merge_passes`` counts streaming merges (reads, not
+# sorts); ``sorts_skipped`` counts sorts avoided via the sorted invariant;
+# ``chunks_pruned`` counts visited-set chunks skipped via manifest ranges.
+STATS = {"sort_passes": 0, "rows_sorted": 0, "merge_passes": 0,
+         "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0}
 
-    Big-endian unsigned words compared bytewise == numeric lexicographic
-    order; numpy's 'S' dtype is ordered and searchsorted/isin-compatible.
-    """
-    w = rows.shape[1]
-    be = np.ascontiguousarray(rows, dtype=">u4")
-    return be.view(np.dtype(("S", 4 * w))).reshape(-1)
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
 
 
 def sort_rows(rows: np.ndarray) -> np.ndarray:
@@ -72,55 +96,109 @@ class _RunCursor:
         return out
 
 
-def make_runs(src: ChunkStore, tmp_dir: str, run_rows: int) -> List[ChunkStore]:
-    """Phase 1: cut src into sorted runs of ≤ run_rows rows each."""
-    runs: List[ChunkStore] = []
-    buf: List[np.ndarray] = []
-    nbuf = 0
+class RunBuilder:
+    """Phase 1 as a sink: feed rows in, get sorted runs of ≤ run_rows out.
 
-    def emit():
-        nonlocal buf, nbuf
-        if not nbuf:
-            return
-        rows = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
-        run = ChunkStore(f"{tmp_dir}/run{len(runs):04d}", src.width,
-                         src.dtype, src.chunk_rows, fresh=True)
-        run.append(sort_rows(np.asarray(rows)))
-        run.flush()
-        runs.append(run)
-        buf, nbuf = [], 0
-
-    for chunk in src.iter_chunks():
-        start = 0
-        while start < chunk.shape[0]:
-            take = min(run_rows - nbuf, chunk.shape[0] - start)
-            buf.append(np.asarray(chunk[start:start + take]))
-            nbuf += take
-            start += take
-            if nbuf >= run_rows:
-                emit()
-    emit()
-    return runs
-
-
-def merge_runs(runs: List[ChunkStore], out: ChunkStore,
-               dedupe: bool = False) -> None:
-    """Phase 2: blocked k-way merge of sorted runs into ``out``.
-
-    With dedupe=True, equal rows collapse to one (needs a carry of the last
-    emitted key across block boundaries).
+    Streaming producers (e.g. the fused BFS expansion) push rows directly —
+    the frontier is sorted run-at-a-time *as it is generated*, never
+    written unsorted to disk and read back. This whole builder accounts as
+    ONE sort pass over the rows it saw (counted at finish()).
     """
+
+    def __init__(self, tmp_dir: str, width: int, dtype="uint32",
+                 chunk_rows: int = 1 << 16, run_rows: int = 1 << 18):
+        self.tmp_dir = tmp_dir
+        self.width = width
+        self.dtype = dtype
+        self.chunk_rows = chunk_rows
+        self.run_rows = run_rows
+        self.runs: List[ChunkStore] = []
+        self._buf: List[np.ndarray] = []
+        self._nbuf = 0
+        self._total = 0
+
+    def add(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows).reshape(-1, self.width)
+        self._buf.append(rows)
+        self._nbuf += rows.shape[0]
+        self._total += rows.shape[0]
+        while self._nbuf >= self.run_rows:
+            self._emit(self.run_rows)
+
+    def _emit(self, nrows: int) -> None:
+        buf = (np.concatenate(self._buf, axis=0)
+               if len(self._buf) > 1 else self._buf[0])
+        take, rest = buf[:nrows], buf[nrows:]
+        run = ChunkStore(f"{self.tmp_dir}/run{len(self.runs):04d}", self.width,
+                         self.dtype, self.chunk_rows, fresh=True)
+        run.append(sort_rows(np.asarray(take)))
+        run.flush(mark_sorted=True)
+        self.runs.append(run)
+        self._buf = [rest] if rest.shape[0] else []
+        self._nbuf = rest.shape[0]
+
+    def finish(self) -> List[ChunkStore]:
+        if self._nbuf:
+            self._emit(self._nbuf)
+        if self._total:                 # an empty pass sorted nothing
+            STATS["sort_passes"] += 1
+            STATS["rows_sorted"] += self._total
+        return self.runs
+
+
+def make_runs(src: ChunkStore, tmp_dir: str, run_rows: int) -> List[ChunkStore]:
+    """Phase 1: cut src into sorted runs of ≤ run_rows rows each.
+
+    This is the ONE sort pass the sort-once engine allows per dataset;
+    it is counted in STATS and each emitted run is marked sorted.
+    """
+    builder = RunBuilder(tmp_dir, src.width, src.dtype, src.chunk_rows,
+                         run_rows)
+    for chunk in src.iter_chunks():
+        builder.add(np.asarray(chunk))
+    return builder.finish()
+
+
+def iter_merged(runs: List[ChunkStore],
+                dedupe: bool = False) -> Iterator[np.ndarray]:
+    """Blocked k-way merge of sorted runs, yielding globally sorted blocks.
+
+    A heap of (head_key, run_index) picks the cursor with the globally
+    smallest head; that cursor's current *block max* becomes the batch
+    bound. Every cursor whose head is ≤ the bound contributes its ≤-bound
+    prefix (one searchsorted slice each), and the concatenated batch is
+    sorted in RAM. Batches are therefore chunk-sized — heavily interleaved
+    runs cost one vectorized sort per chunk, not one Python iteration per
+    row (the naive emit-up-to-next-head merge degenerates to ~1-row blocks
+    on uniformly interleaved runs). RAM stays O(k · chunk).
+
+    With dedupe=True, equal rows collapse to one (a carry of the last
+    emitted key crosses batch boundaries).
+    """
+    STATS["merge_passes"] += 1
     cursors = [_RunCursor(r) for r in runs]
+    heap = [(c.head, i) for i, c in enumerate(cursors) if c.alive]
+    heapq.heapify(heap)
     last_key = None
-    while True:
-        alive = [c for c in cursors if c.alive]
-        if not alive:
-            break
-        i = int(np.argmin([c.head for c in alive])) if len(alive) > 1 else 0
-        src = alive[i]
-        others = [c.head for j, c in enumerate(alive) if j != i]
-        bound = min(others) if others else src.keys[-1]
-        block = src.take_until(bound)
+    while heap:
+        # Candidates: every cursor whose head could fall in this batch.
+        _, i0 = heapq.heappop(heap)
+        cand = [i0]
+        while heap and heap[0][0] <= cursors[i0].keys[-1]:
+            cand.append(heapq.heappop(heap)[1])
+        # The batch bound is the smallest candidate block-max: each
+        # candidate's ≤-bound prefix then lies entirely inside its current
+        # block, so nothing below the bound can surface in a later batch,
+        # and the min-block-max cursor drains a whole block (progress).
+        bound = min(cursors[i].keys[-1] for i in cand)
+        parts = [cursors[i].take_until(bound)
+                 for i in cand if cursors[i].head <= bound]
+        for i in cand:
+            if cursors[i].alive:
+                heapq.heappush(heap, (cursors[i].head, i))
+        block = (np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0])
+        if len(parts) > 1:
+            block = sort_rows(block)
         if dedupe:
             keys = row_keys(block)
             keep = np.ones(block.shape[0], bool)
@@ -130,12 +208,43 @@ def merge_runs(runs: List[ChunkStore], out: ChunkStore,
             if block.shape[0]:
                 last_key = keys[-1]
             block = block[keep]
+        if block.shape[0]:
+            yield block
+
+
+def merge_runs(runs: List[ChunkStore], out: ChunkStore,
+               dedupe: bool = False) -> None:
+    """Phase 2: k-way merge of sorted runs into ``out`` (marked sorted)."""
+    for block in iter_merged(runs, dedupe=dedupe):
         out.append(block)
-    out.flush()
+    out.flush(mark_sorted=True)
+
+
+def stream_dedupe(src_sorted: ChunkStore, out: ChunkStore) -> None:
+    """One streaming pass collapsing equal adjacent rows of a sorted store.
+
+    A 1-run merge: iter_merged already owns the dedupe carry logic, and
+    routing through it keeps the STATS merge-pass accounting uniform.
+    """
+    merge_runs([src_sorted], out, dedupe=True)
 
 
 def external_sort(src: ChunkStore, out: ChunkStore, tmp_dir: str,
                   run_rows: int = 1 << 18, dedupe: bool = False) -> None:
+    """Sort src into out — skipped entirely when src already claims sorted.
+
+    The sorted-input path is a streaming copy (or one dedupe pass), no
+    comparison sort at all; the skip is counted in STATS["sorts_skipped"].
+    """
+    if src.sorted:
+        STATS["sorts_skipped"] += 1
+        if dedupe:
+            stream_dedupe(src, out)
+        else:
+            for chunk in src.iter_chunks():
+                out.append(np.asarray(chunk))
+            out.flush(mark_sorted=True)
+        return
     runs = make_runs(src, tmp_dir, run_rows)
     try:
         merge_runs(runs, out, dedupe=dedupe)
@@ -144,32 +253,84 @@ def external_sort(src: ChunkStore, out: ChunkStore, tmp_dir: str,
             r.destroy()
 
 
+class MembershipProbe:
+    """Streaming membership tester against one sorted store.
+
+    ``contains(qkeys)`` answers which of the (ascending) query keys occur
+    in the store. Successive calls must present *disjoint, ascending*
+    key windows: every key of call N+1 must be ≥ every key of call N —
+    exactly the batches a merge pass emits. (Merely non-decreasing window
+    *starts* are NOT enough: once a chunk falls wholly below a window it
+    is skipped forever, so a later query reaching back below the previous
+    window's end would silently miss.) The store is walked strictly
+    forward and each chunk is loaded at most once per pass. Chunks whose
+    manifest ``[min, max]`` range cannot intersect the current window are
+    skipped without touching disk (STATS["chunks_pruned"]).
+    """
+
+    def __init__(self, store: ChunkStore):
+        assert store.sorted, "MembershipProbe requires a sorted store"
+        assert store._buf_rows == 0, "flush the store before probing"
+        # row_keys views rows as big-endian uint32 words; any other dtype
+        # would get silently truncated/misordered keys, so reject it.
+        assert store.dtype.kind == "u" and store.dtype.itemsize == 4, \
+            "MembershipProbe requires a 4-byte unsigned (keyed) store"
+        self.store = store
+        self._i = 0
+        self._cached_i = -1
+        self._cached_keys: Optional[np.ndarray] = None
+
+    def _keys(self, i: int) -> np.ndarray:
+        if self._cached_i != i:
+            self._cached_keys = row_keys(np.asarray(self.store.load_chunk(i)))
+            self._cached_i = i
+            STATS["chunks_probed"] += 1
+        return self._cached_keys
+
+    def _range(self, i: int):
+        return self.store.chunk_range(i)    # always present: keyed store
+
+    def contains(self, qkeys: np.ndarray) -> np.ndarray:
+        member = np.zeros(qkeys.shape[0], bool)
+        if not qkeys.shape[0]:
+            return member
+        lo, hi = bytes(qkeys[0]), bytes(qkeys[-1])
+        n = self.store.n_chunks
+        while self._i < n:
+            rmin, rmax = self._range(self._i)
+            if rmax < lo:                   # chunk wholly below the window:
+                if self._cached_i != self._i:
+                    STATS["chunks_pruned"] += 1
+                self._i += 1                # queries only ascend — done with it
+                continue
+            if rmin > hi:                   # chunk wholly above: later windows
+                break
+            # Both sides are sorted: binary-search membership, no re-sorting
+            # (np.isin would sort both arrays on every call).
+            ck = self._keys(self._i)
+            pos = np.searchsorted(ck, qkeys)
+            inb = pos < ck.shape[0]
+            member[inb] |= ck[pos[inb]] == qkeys[inb]
+            if rmax >= hi:                  # chunk may overlap the next window
+                break
+            self._i += 1
+        return member
+
+
 def merge_difference(a_sorted: ChunkStore, b_sorted: ChunkStore,
                      out: ChunkStore) -> None:
     """out = rows of a not present in b (multiset removeAll; inputs sorted).
 
-    Blocked merge-join: for each a-block, membership against the b-stream is
-    decided with two searchsorted calls per overlapping b-block.
+    One streaming pass over a; b is walked forward once via MembershipProbe,
+    loading only b-chunks whose key range intersects a's. Output inherits
+    a's sorted order.
     """
-    b_cur = _RunCursor(b_sorted)
-    b_tail_keys: Optional[np.ndarray] = None
-
+    STATS["merge_passes"] += 1
+    probe = MembershipProbe(b_sorted)
     for a_block in a_sorted.iter_chunks():
         a_block = np.asarray(a_block)
         if not a_block.shape[0]:
             continue
-        a_keys = row_keys(a_block)
-        member = np.zeros(a_block.shape[0], bool)
-        # Pull b blocks while they can still overlap this a block.
-        while True:
-            if b_tail_keys is not None:
-                member |= np.isin(a_keys, b_tail_keys)
-                if b_tail_keys.size and b_tail_keys[-1] >= a_keys[-1]:
-                    break
-                b_tail_keys = None
-            if not b_cur.alive:
-                break
-            blk = b_cur.take_until(b_cur.keys[-1])   # whole current block
-            b_tail_keys = row_keys(np.asarray(blk))
+        member = probe.contains(row_keys(a_block))
         out.append(a_block[~member])
-    out.flush()
+    out.flush(mark_sorted=a_sorted.sorted)
