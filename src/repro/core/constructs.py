@@ -136,12 +136,79 @@ class BFSResult:
         self.levels_run: int = 0
 
 
+def dedupe_subtract_fold(nxt_rows: jax.Array, nxt_valid: jax.Array,
+                         all_lst: RL.RoomyList, next_cap: int):
+    """Fused removeDupes ∘ removeAll ∘ addAll — ONE lexsort (sort-once, Tier J).
+
+    One lexsort over the tagged concatenation ``[nxt_raw; all]`` decides all
+    three at once: within an equal-run, any member tagged "old" kills the run
+    (visited-set subtraction), otherwise the first member survives
+    (intra-level dedup); survivors — already in sorted order — are compacted
+    with a boolean argsort and folded into ``all`` with one scatter.
+
+    The reference composition (remove_dupes → remove_all → add_all) costs 2
+    lexsorts + 2 boolean compactions over the same data; property tests
+    assert element-wise equivalence (tests/test_sort_once.py).
+
+    Returns (nxt, all2, overflow) like the composition it replaces.
+    """
+    m, w = nxt_rows.shape
+    na = all_lst.capacity
+    all_valid = RL.valid_mask(all_lst)
+    # Mask BOTH sides to sentinel outside their valid ranges: append_block's
+    # contract allows garbage (not just sentinel) beyond count, and unmasked
+    # garbage rows would be resurrected as phantom frontier states.
+    rows = jnp.concatenate(
+        [jnp.where(nxt_valid[:, None], nxt_rows.astype(jnp.uint32),
+                   T.sentinel_rows(m, w)),
+         jnp.where(all_valid[:, None], all_lst.data,
+                   T.sentinel_rows(na, w))], axis=0)
+    is_old = jnp.concatenate([jnp.zeros((m,), bool), all_valid])
+    perm = T.lexsort_rows(rows)
+    rows_s = rows[perm]
+    old_s = is_old[perm]
+    rid = T.run_ids(rows_s)
+    run_has_old = jax.ops.segment_max(old_s.astype(jnp.int32), rid,
+                                      num_segments=m + na)
+    keep = (T.first_of_run(rows_s) & T.rows_valid(rows_s)
+            & (run_has_old[rid] == 0))
+    rows_c, count = T.compact_valid_first(rows_s, keep)   # stays sorted
+    if next_cap <= m + na:
+        nxt_data = rows_c[:next_cap]
+    else:
+        nxt_data = jnp.concatenate(
+            [rows_c, T.sentinel_rows(next_cap - (m + na), w)], axis=0)
+    nxt = RL.RoomyList(nxt_data, jnp.minimum(count, next_cap))
+    all2, ov2 = RL.add(all_lst, nxt_data, jnp.arange(next_cap) < count)
+    return nxt, all2, (count > next_cap) | ov2
+
+
 def _bfs_level(cur: RL.RoomyList, all_lst: RL.RoomyList, gen_next: Callable,
                fanout: int, next_cap: int):
-    """One level: expand cur, dedup within level, dedup against all, fold in.
+    """One level: expand cur, then one fused dedupe/subtract/fold pass.
 
     gen_next(row) -> (rows (fanout, w), valid (fanout,)). Jitted per shape.
+
+    The raw expansion is capacity·fanout rows, mostly invalid slots; a
+    scatter-compact into the next_cap buffer first (RL.add — no sort) keeps
+    the fused lexsort at next_cap + all_cap rows instead of sorting every
+    dead slot of the expansion.
     """
+    nbr_rows, nbr_valid = jax.vmap(gen_next)(cur.data)
+    nbr_valid = nbr_valid & RL.valid_mask(cur)[:, None]
+    staged = RL.make(next_cap, cur.width)
+    staged, overflow = RL.add(staged, nbr_rows.reshape(-1, cur.width),
+                              nbr_valid.reshape(-1))
+    nxt, all2, ov2 = dedupe_subtract_fold(
+        staged.data, RL.valid_mask(staged), all_lst, next_cap)
+    return nxt, all2, overflow | ov2
+
+
+def _bfs_level_reference(cur: RL.RoomyList, all_lst: RL.RoomyList,
+                         gen_next: Callable, fanout: int, next_cap: int):
+    """Unfused reference level (2 lexsorts + 2 boolean compactions) — kept
+    for equivalence tests and the sorts-per-level benchmark; semantics
+    identical to _bfs_level."""
     nbr_rows, nbr_valid = jax.vmap(gen_next)(cur.data)
     nbr_valid = nbr_valid & RL.valid_mask(cur)[:, None]
     nxt = RL.make(next_cap, cur.width)
@@ -161,12 +228,15 @@ def breadth_first_search(
     all_capacity: int,
     level_capacity: int,
     max_levels: int = 1_000,
+    fused: bool = True,
 ) -> BFSResult:
     """Paper §3 BFS over an implicit graph, with capacity growth on overflow.
 
     The per-level step is jitted; capacities double (Python level) whenever
     a level overflows — the static-shape equivalent of Roomy's dynamically
-    sized lists.
+    sized lists. fused=True (default) runs the one-lexsort
+    dedupe_subtract_fold level; fused=False the 3-lexsort reference
+    composition (for equivalence tests and benchmarks).
     """
     start_rows = jnp.asarray(start_rows, jnp.uint32).reshape(-1, width)
     all_lst = RL.make(all_capacity, width)
@@ -174,7 +244,8 @@ def breadth_first_search(
     cur = RL.make(level_capacity, width)
     cur, _ = RL.add(cur, start_rows)
 
-    step = jax.jit(functools.partial(_bfs_level, gen_next=gen_next,
+    level_fn = _bfs_level if fused else _bfs_level_reference
+    step = jax.jit(functools.partial(level_fn, gen_next=gen_next,
                                      fanout=fanout),
                    static_argnames=("next_cap",))
 

@@ -3,15 +3,18 @@
 Real chunked disk files, streaming passes, external merge sort; see
 DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 """
-from .bfs import breadth_first_search
+from .bfs import breadth_first_search, level_step
 from .darray import DiskArray
 from .dhash import DiskHashTable
 from .dlist import DiskList
-from .extsort import external_sort, merge_difference, row_keys, sort_rows
+from .extsort import (MembershipProbe, external_sort, merge_difference,
+                      row_keys, sort_rows, stream_dedupe)
+from .lsm import SortedRunSet
 from .store import ChunkStore
 
 __all__ = [
     "ChunkStore", "DiskArray", "DiskHashTable", "DiskList",
-    "breadth_first_search", "external_sort", "merge_difference",
-    "row_keys", "sort_rows",
+    "MembershipProbe", "SortedRunSet", "breadth_first_search",
+    "external_sort", "level_step", "merge_difference", "row_keys",
+    "sort_rows", "stream_dedupe",
 ]

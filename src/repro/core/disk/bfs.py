@@ -1,17 +1,93 @@
 """Out-of-core breadth-first search (Tier D) — the paper's flagship loop.
 
-Identical structure to the paper's §3 listing: expand the current level
-into ``next`` via a user generator, removeDupes within the level, removeAll
-against ``all``, addAll into ``all``, rotate. Every phase is a streaming
-disk pass; RAM stays O(chunk) regardless of frontier size.
+Same structure as the paper's §3 listing — expand, removeDupes, removeAll,
+addAll, rotate — but run through the sort-once engine: the three per-level
+list operations are fused into :func:`level_step`, a single streaming pass
+that sorts the raw frontier ONCE (chunk-sized in-RAM runs), k-way merges
+the runs with dedupe, subtracts the visited set via forward-walking
+membership probes (manifest key ranges prune non-overlapping chunks), and
+emits the surviving rows as a sorted run. That output *is* the new visited
+run — fold-in is free — so the visited set (an LSM-style
+:class:`~repro.core.disk.lsm.SortedRunSet`) is never re-sorted; it is only
+geometrically re-merged every ``max_runs`` levels.
+
+Pass accounting per level (asserted in tests/test_sort_once.py):
+  sort passes            1      (the raw frontier, once)
+  visited rows sorted    0      (probes read, never sort)
+
+The unfused reference composition (``fused=False``) is retained for
+equivalence tests and benchmarking; with the DiskList sortedness
+invariant it pays 2 external sort passes per level, one of which
+re-sorts the entire visited set.
 """
 from __future__ import annotations
 
+import os
+import shutil
 from typing import Callable, List
 
 import numpy as np
 
+from . import extsort
 from .dlist import DiskList
+from .lsm import SortedRunSet
+from .store import ChunkStore, row_keys
+
+
+def level_step(raw: ChunkStore, all_runs: List[ChunkStore], out: ChunkStore,
+               tmp_dir: str, run_rows: int = 1 << 18,
+               probe_rows: int = 1 << 14) -> None:
+    """Fused removeDupes → removeAll → addAll: one sort pass over ``raw``.
+
+    raw:      unsorted frontier expansion (consumed read-only).
+    all_runs: sorted visited-set runs (read forward once each, with
+              chunk-range pruning; never sorted).
+    out:      receives the deduped, unvisited frontier — sorted and marked
+              so, ready to be add_run() into the visited SortedRunSet.
+
+    Merged blocks are accumulated to ~probe_rows before the visited-set
+    probes run: the k-way merge can emit tiny blocks when runs interleave
+    heavily, and probing per tiny block would swamp the fusion win with
+    per-call overhead. Batching keeps the probes' windows non-decreasing,
+    so the forward-only walk still holds.
+    """
+    runs = extsort.make_runs(raw, tmp_dir, run_rows)
+    try:
+        _merge_subtract(runs, all_runs, out, probe_rows)
+    finally:
+        for r in runs:
+            r.destroy()
+
+
+def _merge_subtract(frontier_runs: List[ChunkStore],
+                    all_runs: List[ChunkStore], out: ChunkStore,
+                    probe_rows: int = 1 << 14) -> None:
+    """Merge+dedupe the frontier runs, subtracting the visited runs in
+    stream; emits sorted unique unvisited rows into ``out``."""
+    probes = [extsort.MembershipProbe(r) for r in all_runs]
+    batch: List[np.ndarray] = []
+    batch_rows = 0
+
+    def subtract_emit():
+        nonlocal batch, batch_rows
+        if not batch_rows:
+            return
+        rows = np.concatenate(batch, axis=0) if len(batch) > 1 else batch[0]
+        batch, batch_rows = [], 0
+        member = np.zeros(rows.shape[0], bool)
+        if probes:
+            keys = row_keys(rows)
+            for p in probes:
+                member |= p.contains(keys)
+        out.append(rows[~member])
+
+    for block in extsort.iter_merged(frontier_runs, dedupe=True):
+        batch.append(block)
+        batch_rows += block.shape[0]
+        if batch_rows >= probe_rows:
+            subtract_emit()
+    subtract_emit()
+    out.flush(mark_sorted=True)
 
 
 def breadth_first_search(
@@ -21,12 +97,86 @@ def breadth_first_search(
     width: int,
     chunk_rows: int = 1 << 16,
     max_levels: int = 10_000,
+    fused: bool = True,
+    run_rows: int = 1 << 18,
+    max_runs: int = 8,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
 
-    Returns (level_sizes, all_list).
+    Returns (level_sizes, all). With fused=True (default), ``all`` is the
+    visited SortedRunSet; with fused=False (the reference composition used
+    by equivalence tests/benchmarks), a DiskList. Both expose
+    size/read_all/destroy. start_rows are treated as a set (duplicate
+    seeds collapse) on both paths.
     """
+    if not fused:
+        return _breadth_first_search_unfused(
+            workdir, start_rows, gen_next, width, chunk_rows, max_levels)
+
     start_rows = np.asarray(start_rows, np.uint32).reshape(-1, width)
+    # One scratch dir for every level's sort runs (run stores are destroyed
+    # each level; reusing the parent avoids leaking one empty dir per level).
+    tmp_dir = os.path.join(workdir, "bfs_tmp")
+    seed = ChunkStore(os.path.join(workdir, "bfs_seed"), width,
+                      chunk_rows=chunk_rows, fresh=True)
+    seed.append(start_rows)
+    seed.flush()
+    cur = ChunkStore(os.path.join(workdir, "bfs_lev0"), width,
+                     chunk_rows=chunk_rows, fresh=True)
+    extsort.external_sort(seed, cur, tmp_dir, run_rows=run_rows, dedupe=True)
+    seed.destroy()
+
+    all_runs = SortedRunSet(workdir, width, chunk_rows, max_runs=max_runs,
+                            name="bfs_all")
+    all_runs.add_run(cur)
+
+    level_sizes: List[int] = [cur.size]
+    if cur.size == 0:
+        shutil.rmtree(tmp_dir, ignore_errors=True)
+        return [], all_runs
+    for lev in range(1, max_levels + 1):
+        # Expansion streams straight into sorted run construction: the raw
+        # frontier is never written unsorted to disk and read back (the one
+        # sort pass happens as the neighbours are generated).
+        builder = extsort.RunBuilder(tmp_dir, width, chunk_rows=chunk_rows,
+                                     run_rows=run_rows)
+        for chunk in cur.iter_chunks():
+            builder.add(gen_next(np.asarray(chunk)))
+        runs = builder.finish()
+        # cur is fully consumed; compaction may now merge (and destroy) it.
+        all_runs.maybe_compact()
+        nxt = ChunkStore(os.path.join(workdir, f"bfs_lev{lev}"), width,
+                         chunk_rows=chunk_rows, fresh=True)
+        try:
+            _merge_subtract(runs, all_runs.runs, nxt)
+        finally:
+            for r in runs:
+                r.destroy()
+        if nxt.size == 0:
+            nxt.destroy()
+            break
+        all_runs.add_run(nxt)
+        cur = nxt
+        level_sizes.append(cur.size)
+    shutil.rmtree(tmp_dir, ignore_errors=True)
+    return level_sizes, all_runs
+
+
+def _breadth_first_search_unfused(
+    workdir: str,
+    start_rows: np.ndarray,
+    gen_next: Callable[[np.ndarray], np.ndarray],
+    width: int,
+    chunk_rows: int = 1 << 16,
+    max_levels: int = 10_000,
+):
+    """Reference path: the paper's literal removeDupes/removeAll/addAll
+    composition (2 sort passes per level, visited set re-sorted each
+    level)."""
+    start_rows = np.asarray(start_rows, np.uint32).reshape(-1, width)
+    # Seed treated as a set, matching the fused path (which dedupes via its
+    # initial external sort) so the two are element-wise equivalent.
+    start_rows = np.unique(start_rows, axis=0)
     all_lst = DiskList(workdir, width, chunk_rows, name="bfs_all")
     cur = DiskList(workdir, width, chunk_rows, name="bfs_lev0")
     all_lst.add(start_rows)

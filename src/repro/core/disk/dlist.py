@@ -53,10 +53,18 @@ class DiskList:
         self.store = new_store
 
     # --------------------------------------------------------- mutators
+    #
+    # Sort-once: every mutator records sorted output on its result store
+    # (via extsort) and consults the invariant on its inputs — a second
+    # remove_dupes, or a remove_all after a remove_dupes, performs zero
+    # comparison sorts (streaming passes only).
+
     def remove_dupes(self, run_rows: int = 1 << 18) -> None:
         self.store.flush()
         out = self._fresh("dedup")
         tmp = os.path.join(self.workdir, f"{self.name}.sorttmp")
+        # external_sort degrades to a one-pass stream_dedupe when the store
+        # already claims sorted.
         extsort.external_sort(self.store, out, tmp, run_rows=run_rows,
                               dedupe=True)
         self._swap(out)
@@ -65,18 +73,26 @@ class DiskList:
         """Remove every occurrence of each element of other (multiset)."""
         self.store.flush()
         other.store.flush()
-        a_sorted = self._fresh("asort")
-        b_sorted = self._fresh("bsort")
-        extsort.external_sort(self.store, a_sorted,
-                              os.path.join(self.workdir, f"{self.name}.t1"),
-                              run_rows=run_rows)
-        extsort.external_sort(other.store, b_sorted,
-                              os.path.join(self.workdir, f"{self.name}.t2"),
-                              run_rows=run_rows, dedupe=True)
+        if self.store.sorted:                 # invariant: skip the a-sort
+            a_sorted = self.store
+        else:
+            a_sorted = self._fresh("asort")
+            extsort.external_sort(self.store, a_sorted,
+                                  os.path.join(self.workdir, f"{self.name}.t1"),
+                                  run_rows=run_rows)
+        if other.store.sorted:                # invariant: skip the b-sort
+            b_sorted = other.store
+        else:
+            b_sorted = self._fresh("bsort")
+            extsort.external_sort(other.store, b_sorted,
+                                  os.path.join(self.workdir, f"{self.name}.t2"),
+                                  run_rows=run_rows, dedupe=True)
         out = self._fresh("diff")
         extsort.merge_difference(a_sorted, b_sorted, out)
-        a_sorted.destroy()
-        b_sorted.destroy()
+        if a_sorted is not self.store:
+            a_sorted.destroy()
+        if b_sorted is not other.store:
+            b_sorted.destroy()
         self._swap(out)
 
     def remove(self, rows: np.ndarray) -> None:

@@ -1,0 +1,84 @@
+"""LSM-style collection of sorted runs — the sort-once visited set.
+
+The naive BFS loop re-sorts the entire visited set ``all`` on every level
+(``remove_all`` externally sorts both operands), paying O(levels × |all|)
+redundant sort work. A :class:`SortedRunSet` instead keeps ``all`` as a
+stack of sorted, mutually disjoint runs — one per BFS level — and only
+merges them *geometrically*: when the run count exceeds ``max_runs`` the
+runs are k-way merged (a read pass, never a comparison sort) into a single
+run. Amortized, each element is merged O(levels / max_runs) times instead
+of being re-sorted every level.
+
+Runs are appended via :meth:`add_run` and must individually satisfy the
+ChunkStore sortedness invariant (``store.sorted``); ownership transfers to
+the run set (compaction and :meth:`destroy` will destroy them).
+"""
+from __future__ import annotations
+
+import os
+import uuid
+from typing import Iterator, List
+
+import numpy as np
+
+from . import extsort
+from .store import ChunkStore
+
+
+class SortedRunSet:
+    def __init__(self, workdir: str, width: int, chunk_rows: int = 1 << 16,
+                 max_runs: int = 8, name: str | None = None):
+        self.workdir = workdir
+        self.width = width
+        self.chunk_rows = chunk_rows
+        self.max_runs = max_runs
+        self.name = name or f"runset_{uuid.uuid4().hex[:8]}"
+        self.runs: List[ChunkStore] = []
+        self._seq = 0
+
+    # ---------------------------------------------------------- mutation
+    def add_run(self, store: ChunkStore) -> None:
+        """Fold a sorted run in (ownership moves here). O(1) — no merge."""
+        assert store.sorted, "SortedRunSet.add_run requires a sorted store"
+        self.runs.append(store)
+
+    def maybe_compact(self) -> bool:
+        """Geometric merge: collapse all runs into one when count > max_runs.
+
+        A k-way merge pass (dedupe=True — runs are sets), not a sort; the
+        invariant tests assert STATS["sort_passes"] stays 0 here. Returns
+        True if a compaction happened (callers holding references to member
+        runs must re-read self.runs afterwards).
+        """
+        if len(self.runs) <= self.max_runs:
+            return False
+        merged = ChunkStore(
+            os.path.join(self.workdir, f"{self.name}.compact{self._seq}"),
+            self.width, chunk_rows=self.chunk_rows, fresh=True)
+        self._seq += 1
+        extsort.merge_runs(self.runs, merged, dedupe=True)
+        for r in self.runs:
+            r.destroy()
+        self.runs = [merged]
+        return True
+
+    # -------------------------------------------------------------- read
+    def size(self) -> int:
+        """Total rows across runs (exact when runs are disjoint, as in BFS)."""
+        return sum(r.size for r in self.runs)
+
+    def iter_sorted(self) -> Iterator[np.ndarray]:
+        """Globally sorted, deduped blocks across all runs (one merge pass)."""
+        return extsort.iter_merged(self.runs, dedupe=True)
+
+    def read_all(self) -> np.ndarray:
+        """Materialize the merged unique rows (tests/small data only)."""
+        blocks = list(self.iter_sorted())
+        if not blocks:
+            return np.zeros((0, self.width), np.uint32)
+        return np.concatenate(blocks, axis=0)
+
+    def destroy(self) -> None:
+        for r in self.runs:
+            r.destroy()
+        self.runs = []

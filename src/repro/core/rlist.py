@@ -74,11 +74,6 @@ def add_all(dst: RoomyList, src: RoomyList):
     return add(dst, src.data, valid_mask(src))
 
 
-def _compact(rl: RoomyList, keep: jax.Array) -> RoomyList:
-    data, count = T.compact_valid_first(rl.data, keep & valid_mask(rl))
-    return RoomyList(data, count)
-
-
 def remove(rl: RoomyList, rows: jax.Array, valid: jax.Array | None = None) -> RoomyList:
     """Remove all occurrences of each given row — paper's delayed remove."""
     if valid is None:
@@ -89,7 +84,12 @@ def remove(rl: RoomyList, rows: jax.Array, valid: jax.Array | None = None) -> Ro
 
 
 def remove_all(a: RoomyList, b: RoomyList) -> RoomyList:
-    """a -= b: drop every a-row that occurs (at least once) in b."""
+    """a -= b: drop every a-row that occurs (at least once) in b.
+
+    Sort-once: the survivors are compacted directly in sorted order
+    (boolean argsort) instead of being scattered back to a's slot order and
+    re-partitioned — the list is unordered, so no information is lost.
+    """
     na, nb = a.capacity, b.capacity
     rows = jnp.concatenate([a.data, b.data], axis=0)
     tag_b = jnp.concatenate([jnp.zeros((na,), bool), valid_mask(b)])
@@ -102,18 +102,25 @@ def remove_all(a: RoomyList, b: RoomyList) -> RoomyList:
         tag_s.astype(jnp.int32), rid, num_segments=na + nb
     )
     keep_s = from_a_s & (run_has_b[rid] == 0)
-    # Map keep decision back to a's slots.
-    keep = jnp.zeros((na + nb,), bool).at[perm].set(keep_s)[:na]
-    return _compact(a, keep)
+    data, count = T.compact_valid_first(rows_s, keep_s)
+    return RoomyList(data[:na], count)
 
 
 def remove_dupes(rl: RoomyList) -> RoomyList:
-    """Collapse the multiset to a set — paper's removeDupes."""
-    perm = T.lexsort_rows(rl.data)
-    rows_s = rl.data[perm]
+    """Collapse the multiset to a set — paper's removeDupes.
+
+    Sort-once: one lexsort, then a boolean-argsort compaction of the
+    already-sorted survivors (no scatter-back + re-partition round trip).
+    Slots beyond count are masked to sentinel first: append_block's
+    contract permits garbage there, which must not surface as elements.
+    """
+    rows = jnp.where(valid_mask(rl)[:, None], rl.data,
+                     T.sentinel_rows(rl.capacity, rl.width))
+    perm = T.lexsort_rows(rows)
+    rows_s = rows[perm]
     keep_s = T.first_of_run(rows_s) & T.rows_valid(rows_s)
-    keep = jnp.zeros((rl.capacity,), bool).at[perm].set(keep_s)
-    return _compact(rl, keep)
+    data, count = T.compact_valid_first(rows_s, keep_s)
+    return RoomyList(data, count)
 
 
 def member_mask(rl: RoomyList, queries: jax.Array) -> jax.Array:

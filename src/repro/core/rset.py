@@ -41,16 +41,18 @@ class RoomySet(NamedTuple):
 
 
 def _normalize(rows: jax.Array, valid: jax.Array) -> RoomySet:
-    """Sort, dedup, compact — establish the invariant."""
-    n, w = rows.shape
-    rows = jnp.where(valid[:, None], rows, T.sentinel_rows(n, w))
+    """Sort, dedup, compact — establish the invariant (ONE lexsort).
+
+    The kept rows are already in sorted order, so the compaction is a
+    stable boolean argsort (compact_valid_first), not a second lexsort —
+    the sortedness invariant at work.
+    """
+    rows = jnp.where(valid[:, None], rows, T.sentinel_rows(*rows.shape))
     perm = T.lexsort_rows(rows)
     rows_s = rows[perm]
     keep = T.first_of_run(rows_s) & T.rows_valid(rows_s)
-    rows_u = jnp.where(keep[:, None], rows_s, T.sentinel_rows(n, w))
-    # already sorted with sentinels interleaved → stable re-sort compacts
-    perm2 = T.lexsort_rows(rows_u)
-    return RoomySet(rows_u[perm2], jnp.sum(keep.astype(jnp.int32)))
+    data, count = T.compact_valid_first(rows_s, keep)
+    return RoomySet(data, count)
 
 
 def make(capacity: int, width: int) -> RoomySet:
@@ -97,10 +99,10 @@ def _merge(a: RoomySet, b: RoomySet, keep_rule: str) -> RoomySet:
         keep = first & (in_a[rid] == 1) & (in_b[rid] == 0)
     else:
         raise ValueError(keep_rule)
-    out = jnp.where(keep[:, None], rows_s, T.sentinel_rows(nseg, a.width))
-    perm2 = T.lexsort_rows(out)
-    return RoomySet(out[perm2][:max(na, nb) if keep_rule != "any" else nseg],
-                    jnp.sum(keep.astype(jnp.int32)))
+    # Kept rows are sorted already: compact with a boolean argsort instead
+    # of a second lexsort (sort-once — every set op is ONE lexsort pass).
+    data, count = T.compact_valid_first(rows_s, keep)
+    return RoomySet(data[:max(na, nb) if keep_rule != "any" else nseg], count)
 
 
 def union(a: RoomySet, b: RoomySet) -> RoomySet:

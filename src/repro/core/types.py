@@ -17,6 +17,17 @@ import jax.numpy as jnp
 
 UINT32_MAX = jnp.uint32(0xFFFFFFFF)
 
+# Trace-time sort accounting for the sort-once engine. Because the heavy
+# paths run under jit, the counter measures how many multi-key lexsort OPS a
+# traced computation contains (incremented when lexsort_rows is traced), not
+# per-step executions — which is exactly the pass-count the paper's cost
+# model cares about. Tests call the un-jitted functions and assert deltas.
+SORT_STATS = {"lexsorts": 0}
+
+
+def reset_sort_stats() -> None:
+    SORT_STATS["lexsorts"] = 0
+
 
 def sentinel_rows(n: int, width: int) -> jax.Array:
     """(n, width) block of sentinel (all-ones) rows."""
@@ -38,6 +49,7 @@ def lexsort_rows(rows: jax.Array) -> jax.Array:
     ``jnp.lexsort`` treats the *last* key as primary, so feed words in
     reverse order.  Stable, so equal rows keep their relative order.
     """
+    SORT_STATS["lexsorts"] += 1
     w = rows.shape[-1]
     return jnp.lexsort(tuple(rows[:, j] for j in range(w - 1, -1, -1)))
 
@@ -82,7 +94,10 @@ def hash_rows(rows: jax.Array, seed: int = 0x9E3779B9) -> jax.Array:
 def compact_valid_first(rows: jax.Array, valid: jax.Array):
     """Stable-partition rows so valid ones come first; invalid→sentinel.
 
-    Returns (rows, count). Order of the valid rows is preserved.
+    Returns (rows, count). Order of the valid rows is preserved — in
+    particular, compacting already-lexsorted rows keeps them sorted, so this
+    single-key boolean argsort replaces a second full lexsort everywhere the
+    sort-once engine holds the sortedness invariant (rset/rlist/constructs).
     """
     perm = jnp.argsort(~valid, stable=True)
     rows = rows[perm]

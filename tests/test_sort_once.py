@@ -1,0 +1,341 @@
+"""Sort-once engine invariants (both tiers).
+
+Deliberately hypothesis-free (seeded numpy randomness) so these run even in
+the minimal CI image: they are the guard rails for the fused BFS paths.
+
+Covers:
+  * ChunkStore sortedness invariant + manifest key ranges + meta-on-flush
+  * extsort: heapq k-way merge, duplicates spanning run boundaries under
+    dedupe=True, sorted-input sort skip, membership-probe chunk pruning
+  * Tier D fused level_step ≡ remove_dupes → remove_all composition, and
+    the pass-counter contract (ONE sort pass over the frontier, visited
+    set never sorted)
+  * Tier J dedupe_subtract_fold ≡ remove_dupes → remove_all → add_all,
+    and its one-lexsort trace
+  * fused vs unfused BFS end-to-end equivalence on both tiers
+"""
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constructs as C
+from repro.core import rlist as RL
+from repro.core import types as T
+from repro.core.disk import (ChunkStore, DiskList, MembershipProbe,
+                             SortedRunSet, breadth_first_search, extsort,
+                             level_step, row_keys)
+
+
+@pytest.fixture
+def wd(tmp_path):
+    return str(tmp_path)
+
+
+def _rand_rows(rng, n, width=2, lo=0, hi=50):
+    return rng.integers(lo, hi, size=(n, width)).astype(np.uint32)
+
+
+def _as_sorted_tuples(arr):
+    return sorted(map(tuple, np.asarray(arr).tolist()))
+
+
+# ------------------------------------------------------------ ChunkStore
+
+class TestSortednessInvariant:
+    def test_external_sort_marks_and_append_clears(self, wd):
+        rng = np.random.default_rng(0)
+        src = ChunkStore(f"{wd}/src", width=2, chunk_rows=16)
+        src.append(_rand_rows(rng, 100))
+        src.flush()
+        assert not src.sorted
+        out = ChunkStore(f"{wd}/out", width=2, chunk_rows=16)
+        extsort.external_sort(src, out, f"{wd}/tmp", run_rows=32)
+        assert out.sorted
+        out.append(_rand_rows(rng, 4))
+        assert not out.sorted            # any append invalidates the claim
+
+    def test_sorted_flag_and_ranges_persist_on_reopen(self, wd):
+        rng = np.random.default_rng(1)
+        src = ChunkStore(f"{wd}/src", width=1, chunk_rows=8)
+        src.append(_rand_rows(rng, 60, width=1))
+        src.flush()
+        out = ChunkStore(f"{wd}/s", width=1, chunk_rows=8)
+        extsort.external_sort(src, out, f"{wd}/tmp", run_rows=16)
+        re = ChunkStore(f"{wd}/s", width=1, chunk_rows=8)
+        assert re.sorted
+        assert re.n_chunks == out.n_chunks
+        for i in range(re.n_chunks):
+            lo, hi = re.chunk_range(i)
+            keys = row_keys(np.asarray(re.load_chunk(i)))
+            assert lo == bytes(keys[0]) and hi == bytes(keys[-1])
+
+    def test_mark_sorted_rejects_unsorted_chunks(self, wd):
+        s = ChunkStore(f"{wd}/u", width=1, chunk_rows=4)
+        s.append(np.arange(10, 20, dtype=np.uint32)[:, None])
+        s.append(np.arange(0, 4, dtype=np.uint32)[:, None])   # below chunk 0
+        s.flush()
+        with pytest.raises(ValueError):
+            s.mark_sorted()
+
+    def test_meta_written_only_on_flush(self, wd):
+        s = ChunkStore(f"{wd}/m", width=1, chunk_rows=8)
+        s.append(np.arange(100, dtype=np.uint32)[:, None])    # 12 chunk files
+        assert s.n_chunks == 12
+        # Meta is lazy: nothing persisted until flush() despite 12 chunk
+        # writes (in-memory state is authoritative between flushes).
+        assert not os.path.exists(os.path.join(s.path, "meta.json"))
+        s.flush()
+        with open(os.path.join(s.path, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["n_chunks"] == 13 and meta["total_rows"] == 100
+
+
+# --------------------------------------------------------------- extsort
+
+class TestExtsortEdges:
+    def test_dupes_spanning_run_boundaries_dedupe(self, wd):
+        # 3 distinct values, each repeated far beyond run_rows, so every
+        # run boundary splits a duplicate group — the dedupe carry must
+        # hold across runs, not just across blocks.
+        vals = np.repeat(np.array([7, 3, 9], np.uint32), 40)[:, None]
+        src = ChunkStore(f"{wd}/src", width=1, chunk_rows=8)
+        src.append(vals)
+        src.flush()
+        out = ChunkStore(f"{wd}/out", width=1, chunk_rows=8)
+        extsort.external_sort(src, out, f"{wd}/tmp", run_rows=16, dedupe=True)
+        assert out.read_all()[:, 0].tolist() == [3, 7, 9]
+        assert out.sorted
+
+    def test_heap_merge_matches_oracle(self, wd):
+        rng = np.random.default_rng(2)
+        data = _rand_rows(rng, 500, width=2, hi=40)
+        src = ChunkStore(f"{wd}/src", width=2, chunk_rows=32)
+        src.append(data)
+        src.flush()
+        out = ChunkStore(f"{wd}/out", width=2, chunk_rows=32)
+        extsort.external_sort(src, out, f"{wd}/tmp", run_rows=64)
+        got = out.read_all()
+        want = data[np.argsort(row_keys(data), kind="stable")]
+        assert np.array_equal(got, want)
+
+    def test_sorted_input_skips_sort(self, wd):
+        rng = np.random.default_rng(3)
+        src = ChunkStore(f"{wd}/src", width=1, chunk_rows=16)
+        src.append(_rand_rows(rng, 200, width=1))
+        src.flush()
+        mid = ChunkStore(f"{wd}/mid", width=1, chunk_rows=16)
+        extsort.external_sort(src, mid, f"{wd}/t1", run_rows=64)
+        extsort.reset_stats()
+        out = ChunkStore(f"{wd}/out", width=1, chunk_rows=16)
+        extsort.external_sort(mid, out, f"{wd}/t2", run_rows=64, dedupe=True)
+        assert extsort.STATS["sort_passes"] == 0
+        assert extsort.STATS["sorts_skipped"] == 1
+        assert out.read_all()[:, 0].tolist() == sorted(
+            set(mid.read_all()[:, 0].tolist()))
+
+    def test_membership_probe_prunes_disjoint_chunks(self, wd):
+        lo_rows = np.arange(0, 64, dtype=np.uint32)[:, None]
+        hi_rows = np.arange(10_000, 10_064, dtype=np.uint32)[:, None]
+        src = ChunkStore(f"{wd}/src", width=1, chunk_rows=8)
+        src.append(np.concatenate([lo_rows, hi_rows]))
+        src.flush()
+        b = ChunkStore(f"{wd}/b", width=1, chunk_rows=8)
+        extsort.external_sort(src, b, f"{wd}/t", run_rows=256)
+        extsort.reset_stats()
+        probe = MembershipProbe(b)
+        q = np.arange(10_000, 10_032, dtype=np.uint32)[:, None]
+        member = probe.contains(row_keys(q))
+        assert member.all()
+        assert extsort.STATS["chunks_pruned"] >= 8   # low chunks never loaded
+
+
+# -------------------------------------------------- Tier D fused level
+
+def _build_frontier_and_visited(wd, rng, n_raw=300, n_visited=200, width=2):
+    raw = ChunkStore(f"{wd}/raw", width=width, chunk_rows=16)
+    raw.append(_rand_rows(rng, n_raw, width=width))
+    raw.flush()
+    run_set = SortedRunSet(wd, width, chunk_rows=16, name="vis")
+    visited = _rand_rows(rng, n_visited, width=width)
+    for i, part in enumerate(np.array_split(visited, 3)):
+        src = ChunkStore(f"{wd}/vsrc{i}", width=width, chunk_rows=16)
+        src.append(part)
+        src.flush()
+        run = ChunkStore(f"{wd}/vrun{i}", width=width, chunk_rows=16)
+        extsort.external_sort(src, run, f"{wd}/vt{i}", run_rows=64,
+                              dedupe=True)
+        src.destroy()
+        run_set.add_run(run)
+    return raw, run_set, visited
+
+
+class TestLevelStepFusion:
+    def test_matches_reference_composition(self, wd):
+        rng = np.random.default_rng(4)
+        raw, run_set, visited = _build_frontier_and_visited(wd, rng)
+        raw_rows = raw.read_all()
+        out = ChunkStore(f"{wd}/out", width=2, chunk_rows=16)
+        level_step(raw, run_set.runs, out, f"{wd}/lt", run_rows=64)
+        got = _as_sorted_tuples(out.read_all())
+
+        # Reference: the paper's literal composition on DiskList.
+        ref = DiskList(wd, width=2, chunk_rows=16)
+        ref.add(raw_rows)
+        ref.remove_dupes(run_rows=64)
+        vis = DiskList(wd, width=2, chunk_rows=16)
+        vis.add(visited)
+        ref.remove_all(vis, run_rows=64)
+        want = _as_sorted_tuples(ref.read_all())
+        assert got == want
+
+        # Oracle for good measure.
+        vis_set = set(map(tuple, visited.tolist()))
+        oracle = sorted({tuple(r) for r in raw_rows.tolist()} - vis_set)
+        assert got == oracle
+        assert out.sorted                 # ready to fold into the run set
+
+    def test_one_sort_pass_never_sorts_visited(self, wd):
+        rng = np.random.default_rng(5)
+        raw, run_set, _ = _build_frontier_and_visited(
+            wd, rng, n_raw=400, n_visited=600)
+        extsort.reset_stats()
+        out = ChunkStore(f"{wd}/out", width=2, chunk_rows=16)
+        level_step(raw, run_set.runs, out, f"{wd}/lt", run_rows=64)
+        # Exactly ONE sort pass, covering exactly the raw frontier rows;
+        # the visited runs are only read (merge/probe), never sorted.
+        assert extsort.STATS["sort_passes"] == 1
+        assert extsort.STATS["rows_sorted"] == 400
+
+    def test_runset_compaction_is_merge_not_sort(self, wd):
+        rng = np.random.default_rng(6)
+        rs = SortedRunSet(wd, 1, chunk_rows=16, max_runs=2, name="rs")
+        for i in range(3):
+            src = ChunkStore(f"{wd}/s{i}", width=1, chunk_rows=16)
+            src.append(_rand_rows(rng, 50, width=1, hi=1000))
+            src.flush()
+            run = ChunkStore(f"{wd}/r{i}", width=1, chunk_rows=16)
+            extsort.external_sort(src, run, f"{wd}/t{i}", run_rows=32,
+                                  dedupe=True)
+            src.destroy()
+            rs.add_run(run)
+        union = sorted({int(x) for r in rs.runs for x in r.read_all()[:, 0]})
+        extsort.reset_stats()
+        assert rs.maybe_compact()
+        assert len(rs.runs) == 1
+        assert extsort.STATS["sort_passes"] == 0      # merge pass only
+        assert rs.runs[0].read_all()[:, 0].tolist() == union
+        rs.destroy()
+
+
+class TestDiskBFSFusedVsUnfused:
+    def test_pancake_n5_equivalent(self, wd):
+        n = 5
+
+        def gen_next(chunk):
+            codes = chunk[:, 0]
+            perms = np.stack([(codes >> (4 * i)) & 0xF for i in range(n)],
+                             axis=1).astype(np.int64)
+            outs = []
+            for k in range(2, n + 1):
+                flipped = np.concatenate(
+                    [perms[:, :k][:, ::-1], perms[:, k:]], axis=1)
+                code = np.zeros(chunk.shape[0], np.uint32)
+                for i in range(n):
+                    code |= flipped[:, i].astype(np.uint32) << np.uint32(4 * i)
+                outs.append(code)
+            return np.concatenate(outs)[:, None]
+
+        start = np.array([[sum(i << (4 * i) for i in range(n))]], np.uint32)
+        sizes_f, all_f = breadth_first_search(
+            f"{wd}/f", start, gen_next, width=1, chunk_rows=32, max_runs=2)
+        sizes_u, all_u = breadth_first_search(
+            f"{wd}/u", start, gen_next, width=1, chunk_rows=32, fused=False)
+        assert sizes_f == sizes_u
+        assert sum(sizes_f) == math.factorial(n)
+        got_f = _as_sorted_tuples(all_f.read_all())
+        got_u = _as_sorted_tuples(all_u.read_all())
+        assert got_f == got_u
+        all_f.destroy()
+        all_u.destroy()
+
+
+# -------------------------------------------------- Tier J fused level
+
+def _reference_dsf(nxt_rows, nxt_valid, all_lst, next_cap):
+    nxt = RL.make(next_cap, nxt_rows.shape[1])
+    nxt, overflow = RL.add(nxt, nxt_rows, nxt_valid)
+    nxt = RL.remove_dupes(nxt)
+    nxt = RL.remove_all(nxt, all_lst)
+    all2, ov2 = RL.add_all(all_lst, nxt)
+    return nxt, all2, overflow | ov2
+
+
+class TestTierJFusedLevel:
+    def test_dedupe_subtract_fold_matches_reference(self):
+        rng = np.random.default_rng(7)
+        for case in range(20):
+            m = int(rng.integers(1, 40))
+            na = int(rng.integers(1, 30))
+            width = int(rng.integers(1, 3))
+            nxt_rows = jnp.asarray(_rand_rows(rng, m, width=width, hi=20))
+            nxt_valid = jnp.asarray(rng.random(m) < 0.8)
+            all_rows = np.unique(_rand_rows(rng, na, width=width, hi=20),
+                                 axis=0)
+            all_lst = RL.from_rows(jnp.asarray(all_rows),
+                                   capacity=na + 8)
+            next_cap = m + 4
+            got_n, got_a, got_ov = C.dedupe_subtract_fold(
+                nxt_rows, nxt_valid, all_lst, next_cap)
+            want_n, want_a, want_ov = _reference_dsf(
+                nxt_rows, nxt_valid, all_lst, next_cap)
+            assert (_as_sorted_tuples(RL.to_numpy(got_n))
+                    == _as_sorted_tuples(RL.to_numpy(want_n))), case
+            assert (_as_sorted_tuples(RL.to_numpy(got_a))
+                    == _as_sorted_tuples(RL.to_numpy(want_a))), case
+            assert bool(got_ov) == bool(want_ov), case
+
+    def test_fused_level_traces_one_lexsort(self):
+        all_lst = RL.from_rows(jnp.array([[1], [2]], jnp.uint32), capacity=16)
+        rows = jnp.array([[2], [3], [3], [4]], jnp.uint32)
+        valid = jnp.ones((4,), bool)
+        T.reset_sort_stats()
+        C.dedupe_subtract_fold(rows, valid, all_lst, 8)
+        assert T.SORT_STATS["lexsorts"] == 1
+        T.reset_sort_stats()
+        _reference_dsf(rows, valid, all_lst, 8)
+        assert T.SORT_STATS["lexsorts"] >= 2      # the fusion's savings
+
+    def test_bfs_fused_matches_reference_pancake(self):
+        n = 5
+
+        def gen_next(row):
+            code = row[0]
+            perm = jnp.stack(
+                [(code >> jnp.uint32(4 * i)) & jnp.uint32(0xF)
+                 for i in range(n)]).astype(jnp.int32)
+            outs = []
+            for k in range(2, n + 1):
+                flipped = jnp.concatenate([perm[:k][::-1], perm[k:]])
+                acc = jnp.uint32(0)
+                for i in range(n):
+                    acc = acc | (flipped[i].astype(jnp.uint32)
+                                 << jnp.uint32(4 * i))
+                outs.append(acc)
+            return jnp.stack(outs)[:, None], jnp.ones((n - 1,), bool)
+
+        start = np.array([[sum(i << (4 * i) for i in range(n))]], np.uint32)
+        total = math.factorial(n)
+        res_f = C.breadth_first_search(start, gen_next, fanout=n - 1, width=1,
+                                       all_capacity=total + 8,
+                                       level_capacity=total + 8)
+        res_r = C.breadth_first_search(start, gen_next, fanout=n - 1, width=1,
+                                       all_capacity=total + 8,
+                                       level_capacity=total + 8, fused=False)
+        assert res_f.level_sizes == res_r.level_sizes
+        assert sum(res_f.level_sizes) == total
+        assert (_as_sorted_tuples(RL.to_numpy(res_f.all))
+                == _as_sorted_tuples(RL.to_numpy(res_r.all)))
