@@ -10,35 +10,61 @@ Prints ``name,us_per_call,derived`` CSV (the harness contract). Sections:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=("constructs", "pancake", "disk",
-                                       "moe", "lm"))
+    ap.add_argument("--only", choices=("constructs", "pancake", "bfs",
+                                       "disk", "moe", "lm"))
     ap.add_argument("--pancake-n", type=int, default=7)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump results as JSON (the BENCH trajectory "
+                         "record: {section: [{name, us_per_call, derived}]})")
     args = ap.parse_args()
 
     from . import constructs, disk_tier, lm_step, moe_dispatch, pancake
 
+    def bench_bfs_section():
+        # Imported lazily: bfs pulls in examples/cayley_bfs.py via a path
+        # hack, and an import failure there must not take down the other
+        # sections (the try/except below only guards section execution).
+        from . import bfs
+        return bfs.bench_bfs(args.pancake_n)
+
     sections = {
         "constructs": lambda: constructs.bench_constructs(),
         "pancake": lambda: pancake.bench_pancake(args.pancake_n),
+        "bfs": bench_bfs_section,
         "disk": lambda: disk_tier.bench_disk(),
         "moe": lambda: moe_dispatch.bench_moe_dispatch(),
         "lm": lambda: lm_step.bench_lm_steps(),
     }
+    # Schema: sections always maps to a LIST of row dicts (empty on
+    # failure); errors live in a separate map so consumers can iterate
+    # sections uniformly.
+    record = {"timestamp": time.time(), "sections": {}, "errors": {}}
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
                 sys.stdout.flush()
+            record["sections"][name] = [
+                {"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                for r in rows]
         except Exception as e:                # a failed section must not
             print(f"{name}_FAILED,0,{e!r}")   # hide the others
+            record["sections"][name] = []
+            record["errors"][name] = repr(e)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
     return None
 
 
