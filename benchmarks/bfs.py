@@ -1,22 +1,23 @@
-"""BFS level-throughput benchmarks — the sort-once engine's scoreboard.
+"""BFS level-throughput benchmarks — the two engines' scoreboard.
 
 Pancake (the paper's flagship app) and the S_n bubble-sort Cayley graph,
-each on both tiers, fused vs unfused:
+each on both tiers, fused vs unfused, plus **implicit vs sorted**:
 
   tier D   fused level pipeline (one sort pass streamed out of the
            expansion + LSM visited set) vs the literal removeDupes →
-           removeAll → addAll composition
+           removeAll → addAll composition, vs the implicit bit-array
+           engine (rank-indexed 2-bit DiskBitArray, zero sorts)
   tier J   dedupe_subtract_fold (one lexsort/level) vs the 3-lexsort
-           reference composition
+           reference composition, vs constructs.implicit_bfs
 
-Level throughput is the paper's cost model: the per-level *list
-operations* (sort/merge/dedupe/subtract/fold), so the user generator's
-compute — identical in both paths — is timed separately and subtracted.
-The derived column reports states/s through the level pipeline, wall
-time, and sorts-per-level from the extsort pass counters (Tier D) / the
-lexsort trace counter (Tier J), so the BENCH trajectory records the
-pass-count reduction, not just wall time. The acceptance bar for the
-sort-once PR is fused ≥ 2× unfused level throughput on pancake, tier D.
+Level throughput is the paper's cost model: the per-level *list/array
+operations*, so the user generator's compute — identical across paths —
+is timed separately and subtracted.  The derived column reports states/s
+through the level pipeline plus the engine's unit of I/O cost:
+sorts-per-level / lexsorts-per-level for the sorted engines, and **bytes
+touched per level** for both (exact from bitarray.STATS on the implicit
+side; rows-streamed × row-bytes on the sorted side) — the paper's
+4·N/16-bytes-vs-frontier-size trade-off, recorded per PR.
 """
 from __future__ import annotations
 
@@ -34,15 +35,20 @@ sys.path.append(os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "examples"))
 
 from repro.core import constructs as C
+from repro.core import ranking as R
 from repro.core import rlist as RL
 from repro.core import types as T
+from repro.core.disk import bitarray as DBA
 from repro.core.disk import breadth_first_search as disk_bfs
 from repro.core.disk import extsort
+from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
 from .pancake import _gen_next_jnp, _gen_next_np, _start, oracle_levels
 from cayley_bfs import gen_next_jnp as cayley_gen_jnp
 from cayley_bfs import gen_next_np as cayley_gen_np
 from cayley_bfs import mahonian
+from pancake_bits import neighbor_jnp as bits_neighbor_jnp
+from pancake_bits import neighbors_np as bits_neighbors_np
 
 
 class _TimedGen:
@@ -112,6 +118,33 @@ def _lexsorts_per_level(fused: bool) -> int:
     return T.SORT_STATS["lexsorts"]
 
 
+def _bench_disk_implicit(n: int, want: List[int], n_total: int,
+                         chunk_elems: int, repeats: int = 2):
+    """Implicit (bit-array) Tier D engine: states/s through the level
+    passes and exact bytes touched per level (bitarray.STATS)."""
+    levels = len(want) - 1
+    start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
+    best_wall, best_level, bytes_lvl = 1e18, 1e18, 0.0
+    for _ in range(repeats):
+        timed = _TimedGen(bits_neighbors_np(n))
+        with tempfile.TemporaryDirectory() as wd:
+            DBA.reset_stats()
+            t0 = time.perf_counter()
+            sizes, bits = disk_implicit_bfs(wd, n_total, [start_rank], timed,
+                                            chunk_elems=chunk_elems)
+            wall = time.perf_counter() - t0
+            assert sizes == want, (sizes, want)
+            bits.destroy()
+        best_wall = min(best_wall, wall)
+        best_level = min(best_level, wall - timed.t)
+        bytes_lvl = (DBA.STATS["bytes_read"]
+                     + DBA.STATS["bytes_written"]) / (levels + 1)
+    return ((f"bfs_pancake{n}_tierD_implicit", best_wall * 1e6,
+             f"{n_total/best_level:.3g} level states/s "
+             f"bytes/level={bytes_lvl:.3g} sorts/expansion=0.00"),
+            best_level)
+
+
 def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
               ) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
@@ -120,14 +153,29 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
     total = math.factorial(n)
     want = oracle_levels(n)
     start = _start(n)
+    levels = len(want) - 1
 
     fused_row, t_f = _bench_disk(f"pancake{n}", _gen_next_np(n), start, want,
                                  total, chunk_rows, fused=True)
+    # Bytes touched per level by the sorted engine: rows streamed through
+    # sort passes plus visited-set chunks probed, at 4·width bytes/row
+    # (STATS reflect the last repeat — representative, the runs are
+    # identical). The implicit row reports its exact analogue.
+    sorted_bytes_lvl = 4 * (extsort.STATS["rows_sorted"]
+                            + extsort.STATS["chunks_probed"] * chunk_rows
+                            ) / (levels + 1)
     unfused_row, t_u = _bench_disk(f"pancake{n}", _gen_next_np(n), start,
                                    want, total, chunk_rows, fused=False)
     rows.append((fused_row[0], fused_row[1],
-                 fused_row[2] + f" speedup_vs_unfused={t_u/t_f:.2f}x"))
+                 fused_row[2] + f" bytes/level={sorted_bytes_lvl:.3g}"
+                 f" speedup_vs_unfused={t_u/t_f:.2f}x"))
     rows.append(unfused_row)
+
+    # ------------------------------------- implicit vs sorted (tier D)
+    imp_row, t_i = _bench_disk_implicit(n, want, total,
+                                        chunk_elems=chunk_rows * 4)
+    rows.append((imp_row[0], imp_row[1],
+                 imp_row[2] + f" speedup_vs_sorted={t_f/t_i:.2f}x"))
 
     for fused in (True, False):
         t0 = time.perf_counter()
@@ -141,6 +189,17 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
         rows.append((f"bfs_pancake{n}_tierJ_{'fused' if fused else 'unfused'}",
                      dt * 1e6,
                      f"{total/dt:.3g} states/s lexsorts/level={spl}"))
+
+    t0 = time.perf_counter()
+    sizes, bits = C.implicit_bfs(total, [int(R.rank_np(
+        np.arange(n)[None, :])[0])], bits_neighbor_jnp(n))
+    dt = time.perf_counter() - t0
+    assert sizes == want
+    # Bytes touched per level: the packed array read+written once per level
+    # (mark pass + rotate pass), n/8 bytes each way.
+    rows.append((f"bfs_pancake{n}_tierJ_implicit", dt * 1e6,
+                 f"{total/dt:.3g} states/s lexsorts/level=0 "
+                 f"bytes/level={2 * bits.data.nbytes:.3g}"))
 
     # ----------------------------------------------------------- cayley
     cn = max(5, n - 1)

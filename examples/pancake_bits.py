@@ -1,0 +1,133 @@
+"""Pancake numbers via the implicit bit-array BFS — the paper's Table 1.
+
+The paper's flagship result (pancake-number upper bounds) is NOT computed
+with sorted lists: each permutation's Myrvold–Ruskey rank indexes a
+RoomyArray of 2-bit elements, and a BFS level is two streaming passes over
+that array — no sorting, no duplicate elimination.  This example reproduces
+the Table-1-style level counts (flip-distance histogram) with that engine:
+
+  PYTHONPATH=src python examples/pancake_bits.py --n 9 --tier disk
+  PYTHONPATH=src python examples/pancake_bits.py --n 7 --tier j
+  PYTHONPATH=src python examples/pancake_bits.py --n 7 --check   # vs sorted
+
+``--check`` cross-validates against the sorted-list engine
+(disk.breadth_first_search), which is limited to n ≤ 8 by its single-word
+4-bit state packing — the bit-array engine has no such limit (rank rows
+are 1 uint32 word up to n=12, 2 words to n=20), which is exactly the
+ROADMAP "scale past 8!" item.  Known diameters (OEIS A058986):
+4→4 5→5 6→7 7→8 8→9 9→10 10→11.
+"""
+import argparse
+import math
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constructs as C
+from repro.core import ranking as R
+from repro.core.disk import bitarray as DBA
+from repro.core.disk import breadth_first_search as disk_bfs
+from repro.core.disk import implicit_bfs as disk_implicit_bfs
+
+
+def neighbors_np(n: int):
+    """(m,) int64 ranks → (m, n-1) int64 neighbor ranks (all prefix flips)."""
+    def gen(idx: np.ndarray) -> np.ndarray:
+        perms = R.unrank_np(n, np.asarray(idx, np.uint64))
+        outs = []
+        for k in range(2, n + 1):
+            flipped = np.concatenate([perms[:, :k][:, ::-1], perms[:, k:]],
+                                     axis=1)
+            outs.append(R.rank_np(flipped).astype(np.int64))
+        return np.stack(outs, axis=1)
+    return gen
+
+
+def neighbor_jnp(n: int):
+    """Rank → (n-1,) int32 neighbor ranks, single-word (Tier J fits RAM,
+    so n ≤ 12 always holds there)."""
+    assert n <= R.MAX_N_1WORD
+
+    def nf(i):
+        perm = R.unrank_jnp(n, i.reshape(1, 1).astype(jnp.uint32))[0]
+        outs = []
+        for k in range(2, n + 1):
+            flipped = jnp.concatenate([perm[:k][::-1], perm[k:]])
+            outs.append(R.rank_jnp(flipped[None, :], width=1)[0, 0])
+        return jnp.stack(outs).astype(jnp.int32)
+    return nf
+
+
+def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
+    """Oracle: the sorted-list engine on the 4-bit row encoding (n ≤ 8).
+
+    The generator comes from the sibling sorted-engine example — one copy
+    of the packed-pancake expansion, so the oracle can't drift from it.
+    """
+    assert n <= 8, "single-word 4-bit row packing stops at 8!"
+    from pancake_bfs import gen_next_np, start_code
+    with tempfile.TemporaryDirectory() as wd:
+        sizes, all_obj = disk_bfs(wd, np.array([[start_code(n)]], np.uint32),
+                                  gen_next_np(n), width=1,
+                                  chunk_rows=chunk_rows)
+        all_obj.destroy()
+    return sizes
+
+
+def run(n: int, tier: str, chunk_elems: int, check: bool):
+    total = math.factorial(n)
+    start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
+    print(f"pancake n={n}: {total} states, tier={tier}, "
+          f"bit array = {-(-total // 4)} bytes packed")
+
+    DBA.reset_stats()
+    t0 = time.perf_counter()
+    if tier == "j":
+        sizes, jbits = C.implicit_bfs(total, [start_rank], neighbor_jnp(n))
+        # HBM analogue of the disk byte counters: the packed array is read
+        # and written once per level (mark pass + rotate pass).
+        io_line = (f"bytes/level: {2 * jbits.data.nbytes} "
+                   f"(packed array, read+written)")
+    else:
+        with tempfile.TemporaryDirectory() as wd:
+            sizes, bits = disk_implicit_bfs(
+                wd, total, [start_rank], neighbors_np(n),
+                chunk_elems=chunk_elems)
+            hist = bits.count_values()
+            assert hist[0] == 0, "unreached states — graph not connected?"
+            bits.destroy()
+        io_line = (f"bytes touched: {DBA.STATS['bytes_read']} read "
+                   f"{DBA.STATS['bytes_written']} written")
+    dt = time.perf_counter() - t0
+
+    assert sum(sizes) == total, "did not enumerate the full graph!"
+    print(f"{'flips':>6} {'states':>12} {'cumulative':>12}")
+    cum = 0
+    for lev, c in enumerate(sizes):
+        cum += c
+        print(f"{lev:>6} {c:>12} {cum:>12}")
+    print(f"diameter (pancake number): {len(sizes) - 1}")
+    print(f"{total / dt:.0f} states/s ({dt:.2f}s)  {io_line}")
+
+    if check:
+        want = sorted_list_levels(n)
+        assert sizes == want, (sizes, want)
+        print("check: matches sorted-list BFS level counts exactly")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=9)
+    ap.add_argument("--tier", choices=("j", "disk"), default="disk")
+    ap.add_argument("--chunk-elems", type=int, default=1 << 20)
+    ap.add_argument("--check", action="store_true",
+                    help="cross-validate vs the sorted-list engine (n<=8)")
+    args = ap.parse_args()
+    assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
+    run(args.n, args.tier, args.chunk_elems, args.check)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,17 +6,20 @@ See DESIGN.md. Submodules:
   rlist       RoomyList        (unordered multiset)
   rset        RoomySet         (native sorted-unique set — paper's §3 roadmap)
   array       RoomyArray       (delayed access/update + sync)
+  bitarray    RoomyBitArray    (packed 2-bit elements, delayed marks —
+                                the implicit-BFS representation)
   hashtable   RoomyHashTable   (delayed insert/remove/update + sync)
+  ranking     Myrvold–Ruskey permutation rank/unrank (state ↔ index)
   delayed     BucketExchange — delayed-op engine over a mesh axis
   constructs  map/reduce/set-ops/chain/prefix/pair/BFS (paper §3)
   sharding    owner maps + mesh placement helpers
   paged       Roomy paged-KV store for long-context decode
   disk        Tier D — the paper-faithful out-of-core implementation
 """
-from . import (array, constructs, delayed, hashtable, paged, rlist, rset,
-               sharding, types)
+from . import (array, bitarray, constructs, delayed, hashtable, paged,
+               ranking, rlist, rset, sharding, types)
 
 __all__ = [
-    "array", "constructs", "delayed", "hashtable", "paged", "rlist",
-    "rset", "sharding", "types",
+    "array", "bitarray", "constructs", "delayed", "hashtable", "paged",
+    "ranking", "rlist", "rset", "sharding", "types",
 ]

@@ -1,0 +1,244 @@
+"""RoomyBitArray — packed 2-bit-element RoomyArray (Tier J).
+
+The device twin of disk/bitarray.py: 16 two-bit elements per uint32 word,
+so N states cost N/8 bytes of HBM — the representation behind the paper's
+pancake result, where a permutation's Myrvold–Ruskey rank (ranking.py) IS
+its index and the element value is a BFS mark (UNSEEN/CUR/NEXT/DONE).
+
+Two delayed-update routes, matching the repo's two execution shapes:
+
+  * single device — ``update`` queues (index, value) ops like array.py;
+    ``sync(combine, apply)`` sorts the queue by index, segment-combines,
+    and applies through a **disjoint-bit packed scatter**: per touched
+    element a clear mask ``3 << shift`` and a value mask ``val << shift``
+    are scatter-added per word (distinct elements of one word occupy
+    disjoint bits, so add == or), then ``data & ~clr | set`` — no unpacked
+    (8× larger) copy of the array is ever materialized.
+
+  * sharded — ``sharded_mark_sync`` is called inside ``jax.shard_map``:
+    ops are binned by owner shard and routed through ONE all_to_all
+    (delayed.BucketExchange), then applied on the owner with the masked
+    ``.at[].set`` mark (or the bitpack Pallas kernel on TPU).
+
+``mark_packed`` / ``rotate_count`` are the implicit-BFS hot paths
+(constructs.implicit_bfs), dispatching to kernels/bitpack.py via ops.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import delayed as D
+from . import types as T
+from ..kernels import ops as K
+
+FIELDS_PER_WORD = 16
+
+# BFS mark values — single definition shared with Tier D (UNSEEN is 0: a
+# fresh array is all-unseen for free).
+from .disk.bitarray import CUR, DONE, NEXT, UNSEEN  # noqa: E402
+
+# LUT for the per-level rotate: CUR→DONE, NEXT→CUR, others fixed.
+ROTATE_LUT = (UNSEEN << (2 * UNSEEN)) | (DONE << (2 * CUR)) \
+    | (CUR << (2 * NEXT)) | (DONE << (2 * DONE))
+
+
+class RoomyBitArray(NamedTuple):
+    data: jax.Array    # (nwords,) uint32 — packed 2-bit elements
+    q_idx: jax.Array   # (qcap,) int32 — element index, == capacity if empty
+    q_val: jax.Array   # (qcap,) uint32 — queued 2-bit values
+    q_n: jax.Array     # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0] * FIELDS_PER_WORD
+
+    @property
+    def queue_capacity(self) -> int:
+        return self.q_idx.shape[0]
+
+
+def n_words(n: int) -> int:
+    return -(-n // FIELDS_PER_WORD)
+
+
+def make(n: int, queue_capacity: int = 0) -> RoomyBitArray:
+    w = n_words(n)
+    cap = w * FIELDS_PER_WORD
+    return RoomyBitArray(
+        data=jnp.zeros((w,), jnp.uint32),
+        q_idx=jnp.full((queue_capacity,), cap, jnp.int32),
+        q_val=jnp.zeros((queue_capacity,), jnp.uint32),
+        q_n=jnp.zeros((), jnp.int32),
+    )
+
+
+# ------------------------------------------------------------ pack codec
+
+def pack_values(vals: jax.Array) -> jax.Array:
+    """(k,) values 0..3 → (ceil(k/16),) uint32 (tail fields padded 0)."""
+    k = vals.shape[0]
+    pad = (-k) % FIELDS_PER_WORD
+    v = jnp.concatenate([vals.astype(jnp.uint32),
+                         jnp.zeros((pad,), jnp.uint32)])
+    v = v.reshape(-1, FIELDS_PER_WORD) & 3
+    shifts = (jnp.arange(FIELDS_PER_WORD, dtype=jnp.uint32) * 2)[None, :]
+    return jnp.sum(v << shifts, axis=1).astype(jnp.uint32)  # disjoint bits
+
+
+def unpack_values(data: jax.Array) -> jax.Array:
+    """(w,) uint32 → (w·16,) uint32 values 0..3."""
+    shifts = (jnp.arange(FIELDS_PER_WORD, dtype=jnp.uint32) * 2)[None, :]
+    return ((data[:, None] >> shifts) & 3).reshape(-1)
+
+
+def get(ba: RoomyBitArray, idx: jax.Array) -> jax.Array:
+    """Batched random read of 2-bit elements (resolved delayed access)."""
+    return get_packed(ba.data, idx)
+
+
+def get_packed(data: jax.Array, idx: jax.Array) -> jax.Array:
+    idx = idx.astype(jnp.int32)
+    word = data[jnp.clip(idx // FIELDS_PER_WORD, 0, data.shape[0] - 1)]
+    sh = (2 * (idx % FIELDS_PER_WORD)).astype(jnp.uint32)
+    return (word >> sh) & 3
+
+
+# ------------------------------------------------------------ delayed ops
+
+def update(ba: RoomyBitArray, idx: jax.Array, vals: jax.Array,
+           valid: jax.Array | None = None):
+    """Queue delayed writes vals∈0..3 at idx. Returns (array, overflow)."""
+    if valid is None:
+        valid = jnp.ones(idx.shape, bool)
+    qcap = ba.queue_capacity
+    dest = ba.q_n + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dest = jnp.where(valid, dest, qcap)
+    q_idx = ba.q_idx.at[dest].set(idx.astype(jnp.int32), mode="drop")
+    q_val = ba.q_val.at[dest].set(vals.astype(jnp.uint32) & 3, mode="drop")
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    overflow = ba.q_n + nvalid > qcap
+    q_n = jnp.minimum(ba.q_n + nvalid, qcap)
+    return ba._replace(q_idx=q_idx, q_val=q_val, q_n=q_n), overflow
+
+
+def _packed_write(data: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    """Scatter 2-bit vals at UNIQUE element indices (cap ⇒ drop) without
+    unpacking: disjoint-bit clear/set masks accumulated per word."""
+    nw = data.shape[0]
+    cap = nw * FIELDS_PER_WORD
+    word = jnp.where(idx < cap, idx // FIELDS_PER_WORD, nw)
+    sh = (2 * (idx % FIELDS_PER_WORD)).astype(jnp.uint32)
+    clr = jnp.zeros((nw,), jnp.uint32).at[word].add(
+        jnp.uint32(3) << sh, mode="drop")
+    setm = jnp.zeros((nw,), jnp.uint32).at[word].add(
+        (vals.astype(jnp.uint32) & 3) << sh, mode="drop")
+    return (data & ~clr) | setm
+
+
+def sync(ba: RoomyBitArray, combine: Optional[Callable] = None,
+         apply: Optional[Callable] = None) -> RoomyBitArray:
+    """Execute queued updates in one batch (array.py's sync contract).
+
+    combine(p1, p2): associative merge of values aimed at one index
+    (default bitwise OR); apply(old, agg) -> new values at touched
+    indices (default overwrite).  The index sort is an integer argsort,
+    never a row lexsort — rank indexing is what removed the row keys.
+    """
+    if combine is None:
+        combine = jnp.bitwise_or
+    if apply is None:
+        apply = lambda old, agg: agg
+    cap = ba.capacity
+    qcap = ba.queue_capacity
+    if qcap == 0:               # nothing can be queued: sync is a no-op
+        return ba
+    in_q = jnp.arange(qcap) < ba.q_n
+    idx = jnp.where(in_q, ba.q_idx, cap)
+    order = jnp.argsort(idx, stable=True)
+    idx_s = idx[order]
+    val_s = ba.q_val[order]
+    starts = jnp.concatenate([jnp.ones((1,), bool), idx_s[1:] != idx_s[:-1]])
+    agg = T.segmented_reduce_last(val_s, starts, combine)
+    last = jnp.concatenate([idx_s[1:] != idx_s[:-1], jnp.ones((1,), bool)])
+    target = jnp.where(last & (idx_s < cap), idx_s, cap)
+    old = get_packed(ba.data, jnp.minimum(target, cap - 1))
+    new = apply(old, agg)
+    data = _packed_write(ba.data, target, new)
+    return RoomyBitArray(data, jnp.full((qcap,), cap, jnp.int32),
+                         jnp.zeros((qcap,), jnp.uint32),
+                         jnp.zeros((), jnp.int32))
+
+
+# ------------------------------------------------------- BFS hot paths
+
+def mark_packed(data: jax.Array, idx: jax.Array,
+                valid: jax.Array | None = None, *, mark: int = NEXT,
+                only_if: int = UNSEEN, impl: str = "auto") -> jax.Array:
+    """data[idx] ← mark where the element holds only_if — the delayed-mark
+    apply.  Safe under duplicate indices (all writers agree); invalid /
+    out-of-range indices drop.  Dispatches to the bitpack Pallas kernel."""
+    cap = data.shape[0] * FIELDS_PER_WORD
+    idx = idx.astype(jnp.int32)
+    if valid is not None:
+        idx = jnp.where(valid, idx, cap)
+    return K.bitpack_scatter_mark(data, idx, mark=mark, only_if=only_if,
+                                  impl=impl)
+
+
+def rotate_count(data: jax.Array, n: int, *, lut: int = ROTATE_LUT,
+                 count_val: int = CUR, impl: str = "auto"):
+    """Map every element through the 4-entry lut and count elements that
+    map to count_val among the first n — the fused per-level rotate+count
+    pass.  Returns (new_data, count)."""
+    new, cnt = K.bitpack_lut_count(data, lut, count_val, impl=impl)
+    pad = data.shape[0] * FIELDS_PER_WORD - n
+    if pad and (lut & 3) == count_val:  # padding fields hold 0 → lut[0]
+        cnt = cnt - pad
+    return new, cnt
+
+
+def count_value(ba: RoomyBitArray, value: int, n: int | None = None) -> jax.Array:
+    """predicateCount for one 2-bit value over the first n elements."""
+    vals = unpack_values(ba.data)
+    n = ba.capacity if n is None else n
+    hit = (vals == value) & (jnp.arange(ba.capacity) < n)
+    return jnp.sum(hit.astype(jnp.int32))
+
+
+# ---------------------------------------------------------- sharded sync
+
+def sharded_mark_sync(
+    data_local: jax.Array,   # (nwords_local,) uint32 — this shard's slice
+    idx: jax.Array,          # (m,) global element indices
+    valid: jax.Array,        # (m,) bool
+    axis_name: str,
+    nshards: int,
+    capacity: int,           # per-(src,dst) bucket capacity
+    *,
+    mark: int = NEXT,
+    only_if: int = UNSEEN,
+    impl: str = "auto",
+):
+    """Delayed mark sync over a mesh axis — call inside ``jax.shard_map``.
+
+    Elements are sharded contiguously: shard s owns global indices
+    [s·E, (s+1)·E) with E = nwords_local·16.  Ops are binned by owner
+    (bin_by_dest), exchanged with one all_to_all, and applied on the owner
+    with the masked set.  Returns (new_data_local, dropped) — ``dropped``
+    counts ops that overflowed their bucket (size capacity accordingly).
+    """
+    elems_local = data_local.shape[0] * FIELDS_PER_WORD
+    idx = idx.astype(jnp.int32)
+    dest = idx // elems_local
+    local = idx % elems_local
+    valid = valid & (dest >= 0) & (dest < nshards)
+
+    def owner_apply(state, flat_local, flat_valid):
+        return mark_packed(state, flat_local, flat_valid, mark=mark,
+                           only_if=only_if, impl=impl)
+
+    return D.bucket_sync_update(dest, local, valid, axis_name, nshards,
+                                capacity, owner_apply, data_local)

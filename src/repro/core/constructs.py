@@ -11,6 +11,9 @@ map / reduce are primitives (rlist.py, array.py); here we provide:
   BFS               level-synchronous frontier expansion with the paper's
                     exact dedup loop, plus Python-level capacity growth
                     (the static-shape adaptation of "dynamically sized")
+  implicit BFS      the paper's second engine: rank-indexed 2-bit array
+                    with delayed marks — no frontier lists, no sorting
+                    (bitarray.py + ranking.py; the pancake construction)
 
 Everything below is jit-compatible except the BFS driver loop, which is a
 Python loop over levels (level count is data-dependent) — the same
@@ -25,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from . import array as RA
+from . import bitarray as BA
 from . import rlist as RL
 from . import types as T
 
@@ -218,6 +222,59 @@ def _bfs_level_reference(cur: RL.RoomyList, all_lst: RL.RoomyList,
     nxt = RL.remove_all(nxt, all_lst)          # dedup against previous levels
     all2, ov2 = RL.add_all(all_lst, nxt)       # record new elements
     return nxt, all2, overflow | ov2
+
+
+def _implicit_level(data, *, n_states: int, neighbor_fn: Callable,
+                    impl: str):
+    """One implicit-BFS level over the packed 2-bit array: mark every
+    neighbor of a CUR state NEXT-if-UNSEEN (the delayed-update batch — a
+    masked scatter, duplicates and visited states absorb silently), then
+    rotate CUR→DONE / NEXT→CUR and count the new frontier in one fused
+    LUT pass (kernels/bitpack.py).  No sort of any kind."""
+    cap = data.shape[0] * BA.FIELDS_PER_WORD
+    vals = BA.unpack_values(data)[:n_states]
+    cur = vals == BA.CUR
+    nbr = jax.vmap(neighbor_fn)(jnp.arange(n_states, dtype=jnp.int32))
+    tgt = jnp.where(cur[:, None], nbr.astype(jnp.int32), cap).reshape(-1)
+    data = BA.mark_packed(data, tgt, impl=impl)
+    return BA.rotate_count(data, n_states, impl=impl)
+
+
+def implicit_bfs(
+    n_states: int,
+    start_idx,
+    neighbor_fn: Callable,
+    max_levels: int = 1_000,
+    impl: str = "auto",
+):
+    """The paper's *second* BFS engine on Tier J: implicit search over a
+    2-bit RoomyBitArray indexed by state rank (ranking.py), the device twin
+    of ``disk.implicit_bfs``.
+
+    neighbor_fn(i int32) -> (fanout,) int32 neighbor indices; it is vmapped
+    over the whole index space each level — the static-shape adaptation of
+    "expand the CUR states" (non-CUR rows are masked out of the mark), so a
+    level costs O(n_states) regardless of frontier size but needs no
+    frontier list, no sorting and no duplicate elimination.
+
+    Returns (level_sizes, bits: RoomyBitArray) — all reached states end
+    DONE in ``bits``.
+    """
+    ba = BA.make(n_states)
+    start = jnp.asarray(start_idx, jnp.int32).reshape(-1)
+    data = BA.mark_packed(ba.data, start, mark=BA.CUR, only_if=BA.UNSEEN,
+                          impl=impl)
+    level_sizes: List[int] = [int(jnp.sum(
+        (BA.unpack_values(data)[:n_states] == BA.CUR).astype(jnp.int32)))]
+    step = jax.jit(functools.partial(_implicit_level, n_states=n_states,
+                                     neighbor_fn=neighbor_fn, impl=impl))
+    for _ in range(max_levels):
+        data, cnt = step(data)
+        c = int(cnt)
+        if c == 0:
+            break
+        level_sizes.append(c)
+    return level_sizes, ba._replace(data=data)
 
 
 def breadth_first_search(

@@ -3,7 +3,8 @@
 Real chunked disk files, streaming passes, external merge sort; see
 DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 """
-from .bfs import breadth_first_search, level_step
+from .bfs import breadth_first_search, implicit_bfs, level_step
+from .bitarray import DiskBitArray
 from .darray import DiskArray
 from .dhash import DiskHashTable
 from .dlist import DiskList
@@ -13,8 +14,8 @@ from .lsm import SortedRunSet
 from .store import ChunkStore
 
 __all__ = [
-    "ChunkStore", "DiskArray", "DiskHashTable", "DiskList",
+    "ChunkStore", "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
     "MembershipProbe", "SortedRunSet", "breadth_first_search",
-    "external_sort", "level_step", "merge_difference", "row_keys",
-    "sort_rows", "stream_dedupe",
+    "external_sort", "implicit_bfs", "level_step", "merge_difference",
+    "row_keys", "sort_rows", "stream_dedupe",
 ]

@@ -19,6 +19,12 @@ The unfused reference composition (``fused=False``) is retained for
 equivalence tests and benchmarking; with the DiskList sortedness
 invariant it pays 2 external sort passes per level, one of which
 re-sorts the entire visited set.
+
+A second, rank-indexed engine lives in :func:`implicit_bfs`: states are
+indices into a 2-bit :class:`~repro.core.disk.bitarray.DiskBitArray`
+(UNSEEN/CUR/NEXT/DONE) and a level is two streaming passes with no sorting
+at all — the paper's actual pancake construction.  See ROADMAP "Two BFS
+representations" for when each engine wins.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ from typing import Callable, List
 import numpy as np
 
 from . import extsort
+from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .dlist import DiskList
 from .lsm import SortedRunSet
 from .store import ChunkStore, row_keys
@@ -100,6 +107,8 @@ def breadth_first_search(
     fused: bool = True,
     run_rows: int = 1 << 18,
     max_runs: int = 8,
+    compaction: str = "full",
+    size_ratio: int = 2,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
 
@@ -107,7 +116,9 @@ def breadth_first_search(
     visited SortedRunSet; with fused=False (the reference composition used
     by equivalence tests/benchmarks), a DiskList. Both expose
     size/read_all/destroy. start_rows are treated as a set (duplicate
-    seeds collapse) on both paths.
+    seeds collapse) on both paths. ``compaction``/``size_ratio`` select the
+    visited-set compaction policy (lsm.py: "full" re-merges everything,
+    "tiered" only comparable-size runs).
     """
     if not fused:
         return _breadth_first_search_unfused(
@@ -127,7 +138,8 @@ def breadth_first_search(
     seed.destroy()
 
     all_runs = SortedRunSet(workdir, width, chunk_rows, max_runs=max_runs,
-                            name="bfs_all")
+                            name="bfs_all", policy=compaction,
+                            size_ratio=size_ratio)
     all_runs.add_run(cur)
 
     level_sizes: List[int] = [cur.size]
@@ -160,6 +172,79 @@ def breadth_first_search(
         level_sizes.append(cur.size)
     shutil.rmtree(tmp_dir, ignore_errors=True)
     return level_sizes, all_runs
+
+
+def implicit_bfs(
+    workdir: str,
+    n_states: int,
+    start_idx,
+    gen_neighbors: Callable[[np.ndarray], np.ndarray],
+    chunk_elems: int = 1 << 22,
+    max_levels: int = 10_000,
+    expand_batch: int = 1 << 16,
+    log_buf_rows: int = 1 << 20,
+):
+    """The paper's *second* BFS engine: implicit search over a 2-bit array.
+
+    Instead of sorted frontier lists keyed by state rows, every state is an
+    index into a :class:`DiskBitArray` of ``n_states`` 2-bit elements
+    (UNSEEN/CUR/NEXT/DONE) — for permutation state spaces the index is the
+    Myrvold–Ruskey rank (core/ranking.py).  A level is two streaming passes
+    and ZERO sorts or duplicate-elimination passes:
+
+      expand   read pass: scan chunks for CUR elements, generate their
+               neighbor indices, queue delayed updates NEXT (batched to
+               owner chunks by the bit array, spilled to disk past
+               ``log_buf_rows``)
+      sync     read-write pass: apply queued marks (UNSEEN→NEXT — any
+               other state absorbs the mark, which *is* the duplicate /
+               visited elimination), then rotate CUR→DONE, NEXT→CUR and
+               count the new frontier, fused into the same pass
+
+    gen_neighbors(idx (m,) int64) -> (m, fanout) int64 neighbor indices.
+
+    Memory is O(chunk + expand_batch·fanout) regardless of frontier size;
+    disk is n_states/4 bytes + queued marks.  Wins over the sorted-list
+    engine when levels are a large fraction of the state space (see
+    ROADMAP "Two BFS representations"); completes 9! states where the
+    single-word sorted encodings stop at 8!.
+
+    Returns (level_sizes, bits) — ``bits`` holds the final DONE marks
+    (distance parity is not recoverable; level_sizes is the histogram).
+    """
+    bits = DiskBitArray(workdir, n_states, chunk_elems=chunk_elems,
+                        name="bfs_bits", log_buf_rows=log_buf_rows)
+    start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
+    assert start.size and start.min() >= 0 and start.max() < n_states
+    bits.update(start, np.full(start.shape, CUR, np.uint8))
+    bits.sync()                                   # overwrite: seeds → CUR
+    level_sizes: List[int] = [int(start.size)]
+
+    def expand(chunk_start: int, vals: np.ndarray) -> None:
+        (cur_pos,) = np.nonzero(vals == CUR)
+        for lo in range(0, cur_pos.size, expand_batch):
+            idx = chunk_start + cur_pos[lo:lo + expand_batch].astype(np.int64)
+            nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
+            bits.update(nbrs, np.full(nbrs.shape, NEXT, np.uint8))
+
+    for _ in range(max_levels):
+        bits.map_chunks(expand)
+        nxt_count = 0
+
+        def mark_rotate(chunk_start: int, vals: np.ndarray) -> np.ndarray:
+            nonlocal nxt_count
+            vals = np.where(vals == CUR, np.uint8(DONE), vals)
+            vals = np.where(vals == NEXT, np.uint8(CUR), vals)
+            nxt_count += int(np.count_nonzero(vals == CUR))
+            return vals
+
+        bits.sync(combine=lambda p, q: p,          # every mark payload == NEXT
+                  apply=lambda old, agg: np.where(old == UNSEEN, agg, old),
+                  transform=mark_rotate)
+        if nxt_count == 0:
+            break
+        level_sizes.append(nxt_count)
+    return level_sizes, bits
 
 
 def _breadth_first_search_unfused(

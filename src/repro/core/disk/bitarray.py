@@ -1,0 +1,273 @@
+"""DiskBitArray — the paper's 2-bit RoomyArray on real disk (Tier D).
+
+This is the structure behind the paper's flagship pancake result: a packed
+array of 2-bit elements indexed by permutation rank (core/ranking.py), with
+*delayed* random-access updates batched into streaming passes.  Four
+elements pack into each uint8, so N states cost N/4 bytes on disk — the
+4·N/16-byte budget the paper quotes for its two 2-bit arrays.
+
+The log/sync contract mirrors darray.py exactly: ``update(idx, vals)``
+appends (idx, val) to the op log of the chunk that owns idx (bucketed
+immediately, spilled to disk past ``log_buf_rows`` so queued updates never
+outgrow RAM), and ``sync(combine, apply)`` streams each chunk once:
+
+    load packed chunk, unpack → load its op log, sort ops by index,
+    segment-combine, vals[uniq] = apply(old, agg) → [transform] → pack,
+    write back, clear log.
+
+``transform`` (optional) runs on EVERY chunk of the same pass — the fused
+mark-then-rotate step of the implicit BFS (disk/bfs.py:implicit_bfs) rides
+it, so one level costs one read pass (expand) plus one read-write pass
+(sync+rotate+count), never a sort.
+
+STATS counts bytes streamed so benchmarks can report bytes-touched-per-
+level next to the sorted-list engine's rows-sorted numbers.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import uuid
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .extsort import segment_combine_ordered
+
+VALS_PER_BYTE = 4
+
+# The 2-bit BFS mark encoding — canonical definition for BOTH tiers
+# (disk/bfs.py and core/bitarray.py import these; UNSEEN must be 0 so a
+# fresh zeroed array is all-unseen for free).
+UNSEEN, CUR, NEXT, DONE = 0, 1, 2, 3
+
+# Pass/byte accounting (benchmarks/bfs.py reports bytes touched per level).
+STATS = {"bytes_read": 0, "bytes_written": 0, "sync_passes": 0,
+         "scan_passes": 0, "ops_applied": 0}
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+# (256, 4) lookup: _BYTE_COUNTS[b, v] = how many of byte b's four 2-bit
+# fields equal v — turns count_values into one np.bincount + matmul.
+_BYTE_COUNTS = np.zeros((256, 4), np.int64)
+for _b in range(256):
+    for _j in range(4):
+        _BYTE_COUNTS[_b, (_b >> (2 * _j)) & 3] += 1
+
+
+def pack2(vals: np.ndarray) -> np.ndarray:
+    """(k,) values in 0..3 → (ceil(k/4),) uint8; tail fields padded with 0."""
+    vals = np.asarray(vals, np.uint8).reshape(-1)
+    pad = (-vals.shape[0]) % VALS_PER_BYTE
+    if pad:
+        vals = np.concatenate([vals, np.zeros(pad, np.uint8)])
+    v = vals.reshape(-1, VALS_PER_BYTE)
+    return (v[:, 0] | (v[:, 1] << 2) | (v[:, 2] << 4) | (v[:, 3] << 6)).astype(np.uint8)
+
+
+def unpack2(packed: np.ndarray, count: int) -> np.ndarray:
+    """(b,) uint8 → (count,) uint8 values in 0..3."""
+    packed = np.asarray(packed, np.uint8)
+    out = np.empty((packed.shape[0], VALS_PER_BYTE), np.uint8)
+    for j in range(VALS_PER_BYTE):
+        out[:, j] = (packed >> (2 * j)) & 3
+    return out.reshape(-1)[:count]
+
+
+class DiskBitArray:
+    """Chunked packed 2-bit array with per-chunk delayed-update op logs."""
+
+    def __init__(self, workdir: str, n: int, chunk_elems: int = 1 << 22,
+                 name: str | None = None, log_buf_rows: int = 1 << 20):
+        assert chunk_elems % VALS_PER_BYTE == 0
+        self.n = int(n)
+        self.chunk_elems = int(chunk_elems)
+        self.n_chunks = -(-self.n // self.chunk_elems)
+        self.log_buf_rows = int(log_buf_rows)
+        name = name or f"dbits_{uuid.uuid4().hex[:8]}"
+        self.path = os.path.join(workdir, name)
+        if os.path.isdir(self.path):
+            shutil.rmtree(self.path)
+        os.makedirs(self.path)
+        for c in range(self.n_chunks):
+            rows = self._chunk_rows(c)
+            np.save(self._chunk_path(c),
+                    np.zeros(-(-rows // VALS_PER_BYTE), np.uint8))
+        self._log_bufs: List[List[np.ndarray]] = [[] for _ in range(self.n_chunks)]
+        self._log_buffered = 0
+
+    # ----------------------------------------------------------- layout
+    def _chunk_rows(self, c: int) -> int:
+        return min(self.chunk_elems, self.n - c * self.chunk_elems)
+
+    def _chunk_path(self, c: int) -> str:
+        return os.path.join(self.path, f"b{c:06d}.npy")
+
+    def _log_path(self, c: int) -> str:
+        # Raw append-mode int64 (idx, val) pairs — NOT .npy: spills append
+        # O(spill) bytes instead of rewriting the whole accumulated log.
+        return os.path.join(self.path, f"log{c:06d}.bin")
+
+    @property
+    def nbytes(self) -> int:
+        """Total packed bytes on disk (the 2·N-bit budget)."""
+        return sum(-(-self._chunk_rows(c) // VALS_PER_BYTE)
+                   for c in range(self.n_chunks))
+
+    # ------------------------------------------------------ delayed ops
+    def update(self, idx: np.ndarray, vals: np.ndarray) -> None:
+        """Queue delayed writes vals∈0..3 at idx (bucketed to owner chunks).
+
+        Like darray.update, ops are binned to their owner chunk immediately;
+        unlike darray the in-RAM log is bounded: once ``log_buf_rows`` ops
+        are buffered they spill to the per-chunk log files, so a BFS level
+        whose expansion exceeds RAM still works (the whole point).
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        vals = np.asarray(vals, np.uint8).reshape(-1)
+        assert idx.shape == vals.shape
+        ok = (idx >= 0) & (idx < self.n)
+        if not ok.all():        # drop out-of-range, like the Tier J mark
+            idx, vals = idx[ok], vals[ok]
+        if not idx.shape[0]:
+            return
+        chunk_of = idx // self.chunk_elems
+        order = np.argsort(chunk_of, kind="stable")
+        idx, vals, chunk_of = idx[order], vals[order], chunk_of[order]
+        bounds = np.searchsorted(chunk_of, np.arange(self.n_chunks + 1))
+        for c in range(self.n_chunks):
+            lo, hi = bounds[c], bounds[c + 1]
+            if hi > lo:
+                rec = np.empty((hi - lo, 2), np.int64)
+                rec[:, 0] = idx[lo:hi]
+                rec[:, 1] = vals[lo:hi]
+                self._log_bufs[c].append(rec)
+        self._log_buffered += idx.shape[0]
+        if self._log_buffered >= self.log_buf_rows:
+            self._flush_logs()
+
+    def _flush_logs(self) -> None:
+        for c, buf in enumerate(self._log_bufs):
+            if not buf:
+                continue
+            rec = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+            with open(self._log_path(c), "ab") as f:
+                f.write(np.ascontiguousarray(rec, np.int64).tobytes())
+            STATS["bytes_written"] += rec.nbytes
+            self._log_bufs[c] = []
+        self._log_buffered = 0
+
+    # -------------------------------------------------------------- sync
+    def sync(self, combine: Optional[Callable] = None,
+             apply: Optional[Callable] = None,
+             transform: Optional[Callable] = None) -> None:
+        """Execute all queued updates in one streaming pass (darray contract).
+
+        combine(p1, p2): associative merge of two values aimed at one index
+            (default: bitwise OR — the natural monoid of mark bits).
+        apply(old_vals, agg_vals) -> new_vals at the touched indices
+            (default: overwrite with the aggregate).
+        transform(start, vals) -> vals: if given, runs on EVERY chunk after
+            its updates apply (forcing a full read-write pass even over
+            log-less chunks) — the fusion hook for mark-then-rotate steps.
+        """
+        if combine is None:
+            combine = np.bitwise_or
+        if apply is None:
+            apply = lambda old, agg: agg
+        self._flush_logs()
+        STATS["sync_passes"] += 1
+        for c in range(self.n_chunks):
+            lp = self._log_path(c)
+            has_log = os.path.exists(lp)
+            if not has_log and transform is None:
+                continue
+            rows = self._chunk_rows(c)
+            packed = np.load(self._chunk_path(c))
+            STATS["bytes_read"] += packed.nbytes
+            vals = unpack2(packed, rows)
+            if has_log:
+                log = np.fromfile(lp, dtype=np.int64).reshape(-1, 2)
+                os.remove(lp)
+                STATS["bytes_read"] += log.nbytes
+                if log.shape[0]:
+                    local = log[:, 0] - c * self.chunk_elems
+                    pay = log[:, 1].astype(np.uint8)
+                    order = np.argsort(local, kind="stable")
+                    uniq, agg = segment_combine_ordered(
+                        local[order], pay[order], combine)
+                    vals[uniq] = apply(vals[uniq], agg)
+                    STATS["ops_applied"] += int(log.shape[0])
+            if transform is not None:
+                vals = np.asarray(transform(c * self.chunk_elems, vals),
+                                  np.uint8)
+                assert vals.shape[0] == rows
+            out = pack2(vals)
+            np.save(self._chunk_path(c), out)
+            STATS["bytes_written"] += out.nbytes
+
+    # -------------------------------------------------------- streaming
+    def map_chunks(self, fn: Callable[[int, np.ndarray], None]) -> None:
+        """Read-only streaming scan: fn(start_index, values)."""
+        STATS["scan_passes"] += 1
+        for c in range(self.n_chunks):
+            packed = np.load(self._chunk_path(c))
+            STATS["bytes_read"] += packed.nbytes
+            fn(c * self.chunk_elems, unpack2(packed, self._chunk_rows(c)))
+
+    def map_update(self, fn: Callable[[int, np.ndarray], np.ndarray]) -> None:
+        """In-place streaming transform: vals = fn(start, vals)."""
+        STATS["scan_passes"] += 1
+        for c in range(self.n_chunks):
+            rows = self._chunk_rows(c)
+            packed = np.load(self._chunk_path(c))
+            STATS["bytes_read"] += packed.nbytes
+            vals = np.asarray(fn(c * self.chunk_elems,
+                                 unpack2(packed, rows)), np.uint8)
+            assert vals.shape[0] == rows
+            out = pack2(vals)
+            np.save(self._chunk_path(c), out)
+            STATS["bytes_written"] += out.nbytes
+
+    def count_values(self) -> np.ndarray:
+        """(4,) histogram of element values — one byte-histogram pass, no
+        unpacking (the paper's predicateCount for 2-bit arrays)."""
+        counts = np.zeros(4, np.int64)
+        pad = 0
+        for c in range(self.n_chunks):
+            packed = np.load(self._chunk_path(c))
+            STATS["bytes_read"] += packed.nbytes
+            counts += np.bincount(packed, minlength=256) @ _BYTE_COUNTS
+            pad += packed.shape[0] * VALS_PER_BYTE - self._chunk_rows(c)
+        counts[0] -= pad            # pack2 pads tail fields with value 0
+        return counts
+
+    # ------------------------------------------------------------- read
+    def get(self, idx: np.ndarray) -> np.ndarray:
+        """Random read (tests/debug — production access is via sync/map)."""
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        out = np.empty(idx.shape[0], np.uint8)
+        chunk_of = idx // self.chunk_elems
+        for c in np.unique(chunk_of):
+            sel = chunk_of == c
+            packed = np.load(self._chunk_path(int(c)), mmap_mode="r")
+            local = idx[sel] - int(c) * self.chunk_elems
+            byte = np.asarray(packed[local // VALS_PER_BYTE])
+            out[sel] = (byte >> (2 * (local % VALS_PER_BYTE)).astype(np.uint8)) & 3
+        return out
+
+    def read_all(self) -> np.ndarray:
+        """(n,) values — tests/small data only."""
+        parts = []
+        for c in range(self.n_chunks):
+            parts.append(unpack2(np.load(self._chunk_path(c)),
+                                 self._chunk_rows(c)))
+        return (np.concatenate(parts) if parts else np.zeros(0, np.uint8))
+
+    def destroy(self) -> None:
+        self._log_bufs = [[] for _ in range(self.n_chunks)]
+        shutil.rmtree(self.path, ignore_errors=True)

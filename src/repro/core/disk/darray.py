@@ -20,6 +20,8 @@ from typing import Callable
 
 import numpy as np
 
+from .extsort import segment_combine_ordered
+
 
 class DiskArray:
     def __init__(self, workdir: str, n: int, width: int = 1,
@@ -94,25 +96,8 @@ class DiskArray:
             local = (log[:, 0] - c * self.chunk_rows).astype(np.int64)
             pay = log[:, 1:].astype(self.dtype)
             order = np.argsort(local, kind="stable")
-            local, pay = local[order], pay[order]
-            # segment-combine runs of equal index
-            starts = np.ones(local.shape[0], bool)
-            starts[1:] = local[1:] != local[:-1]
-            seg_ids = np.cumsum(starts) - 1
-            uniq = local[starts]
-            agg = pay[starts].copy()
-            # sequential combine within runs (runs are short in practice;
-            # vectorized via sorted order + reduceat when combine is add)
-            for k in range(1, int(np.max(np.bincount(seg_ids))) if local.size else 1):
-                sel = np.zeros(local.shape[0], bool)
-                # k-th element of each run
-                run_pos = np.arange(local.shape[0]) - np.maximum.accumulate(
-                    np.where(starts, np.arange(local.shape[0]), 0))
-                sel = run_pos == k
-                if not sel.any():
-                    break
-                agg_idx = seg_ids[sel]
-                agg[agg_idx] = combine(agg[agg_idx], pay[sel])
+            uniq, agg = segment_combine_ordered(local[order], pay[order],
+                                                combine)
             chunk[uniq] = apply(chunk[uniq], agg)
             np.save(self._chunk_path(c), chunk)
 

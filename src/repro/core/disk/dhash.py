@@ -77,7 +77,16 @@ class DiskHashTable:
 
     def sync(self, combine: Callable = None, apply: Callable = None) -> None:
         """combine(v1, v2) merges queued payloads per key; apply(old, agg,
-        present_mask) produces the stored value. Defaults: overwrite."""
+        present_mask) produces the stored value. Defaults: overwrite.
+
+        Op-log ORDER is honoured per key (the queue's stable sort keeps
+        issue order within a key): a DEL wipes the key *and every earlier
+        queued PUT*, and PUTs after the last DEL resurrect the key — their
+        combine-fold applies against ``present=False`` (the old value is
+        gone). A key whose last op is DEL is removed. This is exactly
+        sequential execution of the log; Tier J's hashtable.py still uses
+        the coarser any-DEL-wins rule (see ROADMAP open item).
+        """
         if combine is None:
             combine = lambda a, b: b
         if apply is None:
@@ -99,19 +108,28 @@ class DiskHashTable:
             starts = np.ones(kk.shape[0], bool)
             starts[1:] = kk[1:] != kk[:-1]
             seg = np.cumsum(starts) - 1
+            nseg = int(starts.sum())
             uniq_k = qk[starts]
-            # tombstone wins if any DEL in the key's batch (same rule as Tier J)
-            deleted = np.zeros(starts.sum(), bool)
-            np.logical_or.at(deleted, seg, qo == self.OP_DEL)
-            agg = qv[starts].copy()
             run_pos = np.arange(kk.shape[0]) - np.maximum.accumulate(
                 np.where(starts, np.arange(kk.shape[0]), 0))
-            kmax = int(run_pos.max()) if run_pos.size else 0
-            for k in range(1, kmax + 1):
-                sel = run_pos == k
-                if not sel.any():
-                    break
-                agg[seg[sel]] = combine(agg[seg[sel]], qv[sel])
+            # Position of each key's last DEL (-1 if none): PUTs strictly
+            # after it are "live"; everything at or before it is wiped.
+            is_del = qo == self.OP_DEL
+            last_del = np.full(nseg, -1, np.int64)
+            np.maximum.at(last_del, seg, np.where(is_del, run_pos, -1))
+            had_del = last_del >= 0
+            live_op = (~is_del) & (run_pos > last_del[seg])
+            # A key with no surviving PUT is deleted (it must have a DEL:
+            # no-DEL keys keep all their PUTs).
+            deleted = np.bincount(seg, weights=live_op.astype(np.int64),
+                                  minlength=nseg) == 0
+            # combine-fold over the live PUTs only, in issue order.
+            from .extsort import segment_combine_ordered
+            agg = np.zeros_like(qv[:nseg])
+            if live_op.any():
+                uniq_seg, agg_l = segment_combine_ordered(
+                    seg[live_op], qv[live_op], combine)
+                agg[uniq_seg] = agg_l
 
             # merge with table bucket
             tkk = row_keys(tk) if tk.shape[0] else np.zeros(0, row_keys(uniq_k).dtype)
@@ -120,9 +138,12 @@ class DiskHashTable:
             present = np.zeros(ukk.shape[0], bool)
             inb = pos < tkk.shape[0]
             present[inb] = tkk[pos[inb]] == ukk[inb]
+            # A DEL before the surviving PUTs wiped the stored value: the
+            # resurrecting fold applies as an insert, not an update.
+            present_eff = present & ~had_del
             old = np.zeros_like(agg)
-            old[present] = tv[pos[present]]
-            newv = apply(old, agg, present)
+            old[present_eff] = tv[pos[present_eff]]
+            newv = apply(old, agg, present_eff)
 
             keep_tab = np.ones(tk.shape[0], bool)
             keep_tab[pos[present]] = False       # replaced or deleted

@@ -35,6 +35,7 @@ __all__ = [
     "STATS", "reset_stats", "row_keys", "sort_rows", "RunBuilder",
     "make_runs", "iter_merged", "merge_runs", "external_sort",
     "stream_dedupe", "MembershipProbe", "merge_difference",
+    "segment_combine_ordered",
 ]
 
 
@@ -56,6 +57,33 @@ def reset_stats() -> None:
 
 def sort_rows(rows: np.ndarray) -> np.ndarray:
     return rows[np.argsort(row_keys(rows), kind="stable")]
+
+
+def segment_combine_ordered(ids: np.ndarray, vals: np.ndarray, combine):
+    """Ordered combine-fold over runs of equal ids (ids non-decreasing).
+
+    Returns (uniq_ids, agg) with agg[j] = the in-row-order fold of the vals
+    whose id == uniq_ids[j] — the shared op-log merge kernel of the delayed
+    syncs (darray/dhash/bitarray).  Runs are short in practice: the loop is
+    over the longest run, each step a vectorized combine of every run's
+    k-th element.
+    """
+    n = ids.shape[0]
+    if n == 0:
+        return ids[:0], vals[:0]
+    starts = np.ones(n, bool)
+    starts[1:] = ids[1:] != ids[:-1]
+    seg = np.cumsum(starts) - 1
+    uniq = ids[starts]
+    agg = vals[starts].copy()
+    pos = np.arange(n)
+    run_pos = pos - np.maximum.accumulate(np.where(starts, pos, 0))
+    for k in range(1, int(run_pos.max()) + 1):
+        sel = run_pos == k
+        if not sel.any():       # no gaps: run lengths only shrink with k
+            break
+        agg[seg[sel]] = combine(agg[seg[sel]], vals[sel])
+    return uniq, agg
 
 
 class _RunCursor:

@@ -12,6 +12,17 @@ of being re-sorted every level.
 Runs are appended via :meth:`add_run` and must individually satisfy the
 ChunkStore sortedness invariant (``store.sorted``); ownership transfers to
 the run set (compaction and :meth:`destroy` will destroy them).
+
+Compaction policies (the ROADMAP follow-up):
+
+  ``full``    (default) collapse ALL runs into one — every element pays
+              one merge per compaction, including the big old runs.
+  ``tiered``  size-ratio compaction: merge only the smallest runs — at
+              least enough to get back under ``max_runs``, then keep
+              absorbing the next-smallest run while it is no bigger than
+              ``size_ratio`` × the accumulated merge. Large settled runs
+              are left untouched, cutting re-merge write amplification
+              from O(levels/max_runs) per element toward O(log levels).
 """
 from __future__ import annotations
 
@@ -27,11 +38,15 @@ from .store import ChunkStore
 
 class SortedRunSet:
     def __init__(self, workdir: str, width: int, chunk_rows: int = 1 << 16,
-                 max_runs: int = 8, name: str | None = None):
+                 max_runs: int = 8, name: str | None = None,
+                 policy: str = "full", size_ratio: int = 2):
+        assert policy in ("full", "tiered"), policy
         self.workdir = workdir
         self.width = width
         self.chunk_rows = chunk_rows
         self.max_runs = max_runs
+        self.policy = policy
+        self.size_ratio = size_ratio
         self.name = name or f"runset_{uuid.uuid4().hex[:8]}"
         self.runs: List[ChunkStore] = []
         self._seq = 0
@@ -43,23 +58,40 @@ class SortedRunSet:
         self.runs.append(store)
 
     def maybe_compact(self) -> bool:
-        """Geometric merge: collapse all runs into one when count > max_runs.
+        """Geometric merge past max_runs, per the configured policy.
 
-        A k-way merge pass (dedupe=True — runs are sets), not a sort; the
-        invariant tests assert STATS["sort_passes"] stays 0 here. Returns
-        True if a compaction happened (callers holding references to member
-        runs must re-read self.runs afterwards).
+        Always a k-way merge pass (dedupe=True — runs are sets), never a
+        sort; the invariant tests assert STATS["sort_passes"] stays 0 here.
+        Returns True if a compaction happened (callers holding references
+        to member runs must re-read self.runs afterwards).
         """
         if len(self.runs) <= self.max_runs:
             return False
+        if self.policy == "full":
+            victims = list(self.runs)
+        else:
+            # Tiered: merge the smallest runs — at least enough to drop back
+            # to max_runs, then absorb the next while it is ≤ size_ratio ×
+            # the accumulated merge (runs of comparable size merge together;
+            # settled big runs stay put).
+            by_size = sorted(self.runs, key=lambda r: r.size)
+            k = len(self.runs) - self.max_runs + 1
+            acc = sum(r.size for r in by_size[:k])
+            while (k < len(by_size)
+                   and by_size[k].size <= self.size_ratio * max(acc, 1)):
+                acc += by_size[k].size
+                k += 1
+            victims = by_size[:k]
         merged = ChunkStore(
             os.path.join(self.workdir, f"{self.name}.compact{self._seq}"),
             self.width, chunk_rows=self.chunk_rows, fresh=True)
         self._seq += 1
-        extsort.merge_runs(self.runs, merged, dedupe=True)
-        for r in self.runs:
+        extsort.merge_runs(victims, merged, dedupe=True)
+        victim_ids = {id(r) for r in victims}
+        survivors = [r for r in self.runs if id(r) not in victim_ids]
+        for r in victims:
             r.destroy()
-        self.runs = [merged]
+        self.runs = survivors + [merged]
         return True
 
     # -------------------------------------------------------------- read

@@ -8,6 +8,8 @@
   paged_decode         flash-decoding over Roomy KV pages (scalar-prefetch
                        page-table DMA indexing — the serving hot loop)
   bucket_scatter       segment scatter-add — the Roomy sync apply phase
+  bitpack              2-bit packed-array LUT-rotate/count + masked mark
+                       scatter — the implicit-BFS per-level hot paths
 
 ref.py also hosts the mamba2 SSD (chunked matmul) form — pure-jnp but
 MXU-shaped, the §Perf cell-C optimization. Each kernel has a pure-jnp
@@ -16,7 +18,8 @@ TPU-target and validated in interpret mode on CPU (tests/test_kernels.py
 sweeps shapes × dtypes; backward vs jax.grad of the naive oracle).
 """
 from . import ops, ref
-from .ops import bucket_scatter_add, flash_attention, mamba_scan
+from .ops import (bitpack_lut_count, bitpack_scatter_mark,
+                  bucket_scatter_add, flash_attention, mamba_scan)
 
-__all__ = ["ops", "ref", "bucket_scatter_add", "flash_attention",
-           "mamba_scan"]
+__all__ = ["ops", "ref", "bitpack_lut_count", "bitpack_scatter_mark",
+           "bucket_scatter_add", "flash_attention", "mamba_scan"]

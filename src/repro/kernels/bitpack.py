@@ -1,0 +1,190 @@
+"""Pallas TPU kernels for the 2-bit packed arrays (core/bitarray.py).
+
+The implicit BFS engine stores 16 two-bit elements per uint32 word; its two
+per-level hot paths are pure bit manipulation over the packed words, which
+is exactly VPU-shaped work:
+
+  bitpack_lut_count     the fused rotate+count pass: unpack each word's 16
+                        fields, map them through a 4-entry LUT (encoded in
+                        one uint32 scalar), repack, and count fields that
+                        map to a target value — one streaming read-write
+                        pass over the packed array, no unpacked (8× larger)
+                        intermediate ever hits HBM.
+
+  bitpack_scatter_mark  the sync apply phase: a batch of element indices
+                        whose 2-bit field must become ``mark`` iff it
+                        currently holds ``only_if`` (the OR-style visited
+                        test of the BFS — marks on non-UNSEEN states are
+                        absorbed).  Sequential read-modify-write per op,
+                        same trash-row convention as bucket_scatter.py; the
+                        packed table must fit VMEM (callers tile by shard,
+                        which the Roomy layout already provides).
+
+Both have pure-jnp oracles in ref.py and interpret-mode CPU validation in
+tests/test_kernels.py; ops.py hosts the dispatching wrappers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells it TPUCompilerParams; keep both working.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+FIELDS_PER_WORD = 16
+LANES = 128
+DEFAULT_BW = 8           # words-per-block rows (uint32 tile is (8, 128))
+DEFAULT_BM = 256         # scatter ops per block
+
+
+def make_lut(table) -> int:
+    """Encode a 4-entry value map [new0, new1, new2, new3] into one uint32
+    scalar: entry v occupies bits [2v, 2v+2)."""
+    assert len(table) == 4 and all(0 <= v <= 3 for v in table)
+    return sum(int(v) << (2 * i) for i, v in enumerate(table))
+
+
+# ---------------------------------------------------------- lut + count
+
+def _lut_count_kernel(p_ref, o_ref, cnt_ref, *, lut: int, count_val: int):
+    blk = pl.program_id(0)
+    w = p_ref[...]
+    acc = jnp.zeros_like(w)
+    total = jnp.zeros((), jnp.int32)
+    for j in range(FIELDS_PER_WORD):
+        f = (w >> (2 * j)) & 3
+        nf = (jnp.uint32(lut) >> (2 * f)) & 3
+        acc = acc | (nf << (2 * j))
+        total = total + jnp.sum((nf == count_val).astype(jnp.int32))
+    o_ref[...] = acc
+
+    @pl.when(blk == 0)
+    def _init():
+        cnt_ref[0, 0] = jnp.int32(0)
+
+    cnt_ref[0, 0] = cnt_ref[0, 0] + total
+
+
+def bitpack_lut_count(
+    packed: jax.Array,       # (W,) uint32
+    lut: int,                # make_lut(...) scalar (static)
+    count_val: int,          # field value to count after mapping (static)
+    *,
+    block_w: int = DEFAULT_BW,
+    interpret: bool = False,
+):
+    """Map every 2-bit field through ``lut`` and count resulting fields ==
+    ``count_val``.  Returns (new_packed (W,) uint32, count () int32).
+
+    Padding note: the grid pads W up to whole (block_w, 128) tiles with
+    zero words; that tile padding is corrected below, so the count covers
+    exactly the W·16 fields of the input words.  Callers owning fewer than
+    W·16 logical elements correct for THEIR tail fields themselves (see
+    core/bitarray.py rotate_count).
+    """
+    w = packed.shape[0]
+    rows = -(-w // LANES)
+    rows_pad = -(-rows // block_w) * block_w
+    p2 = jnp.zeros((rows_pad * LANES,), jnp.uint32).at[:w].set(packed)
+    p2 = p2.reshape(rows_pad, LANES)
+
+    kernel = functools.partial(_lut_count_kernel, lut=lut,
+                               count_val=count_val)
+    out, cnt = pl.pallas_call(
+        kernel,
+        grid=(rows_pad // block_w,),
+        in_specs=[pl.BlockSpec((block_w, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_w, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_pad, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="roomy_bitpack_lut_count",
+    )(p2)
+    pad_fields = (rows_pad * LANES - w) * FIELDS_PER_WORD
+    lut0 = lut & 3
+    cnt_corr = cnt[0, 0] - (pad_fields if lut0 == count_val else 0)
+    return out.reshape(-1)[:w], cnt_corr
+
+
+# -------------------------------------------------------- scatter mark
+
+def _scatter_mark_kernel(idx_ref, tab_ref, out_ref, *, bm: int, n_words: int,
+                         mark: int, only_if: int):
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        out_ref[...] = tab_ref[...]
+
+    def body(i, _):
+        elt = idx_ref[i, 0]
+        word = jnp.where(elt >= 0, elt // FIELDS_PER_WORD, n_words)
+        word = jnp.minimum(word, n_words)            # trash row for drops
+        sh = (2 * jnp.maximum(elt % FIELDS_PER_WORD, 0)).astype(jnp.uint32)
+        w = pl.load(out_ref, (pl.ds(word, 1), slice(None)))
+        field = (w >> sh) & jnp.uint32(3)
+        new_w = jnp.where(field == jnp.uint32(only_if),
+                          (w & ~(jnp.uint32(3) << sh))
+                          | (jnp.uint32(mark) << sh),
+                          w).astype(jnp.uint32)
+        pl.store(out_ref, (pl.ds(word, 1), slice(None)), new_w)
+        return 0
+
+    jax.lax.fori_loop(0, bm, body, 0)
+
+
+def bitpack_scatter_mark(
+    packed: jax.Array,       # (W,) uint32 — must fit VMEM as (W+1, 1)
+    idx: jax.Array,          # (M,) int32 element indices; OOB/negative drop
+    *,
+    mark: int = 2,           # value to write (static)
+    only_if: int = 0,        # write only where the field currently == this
+    block_m: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """packed[idx] ← mark where the 2-bit field holds ``only_if`` (the
+    delayed-mark apply of the implicit BFS).  Duplicate indices are safe —
+    the first mark wins and later ones see ``mark`` ≠ ``only_if``."""
+    n_words = packed.shape[0]
+    m = idx.shape[0]
+    bm = min(block_m, max(m, 1))
+    m_pad = -(-max(m, 1) // bm) * bm
+    cap = n_words * FIELDS_PER_WORD
+    idx = jnp.where((idx >= 0) & (idx < cap), idx, cap)
+    if m_pad != m:
+        idx = jnp.pad(idx, (0, m_pad - m), constant_values=cap)
+    idx = idx.astype(jnp.int32).reshape(m_pad, 1)
+    tab = jnp.concatenate([packed.astype(jnp.uint32),
+                           jnp.zeros((1,), jnp.uint32)]).reshape(-1, 1)
+
+    kernel = functools.partial(_scatter_mark_kernel, bm=bm, n_words=n_words,
+                               mark=mark, only_if=only_if)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n_words + 1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_words + 1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_words + 1, 1), jnp.uint32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="roomy_bitpack_scatter_mark",
+    )(idx, tab)
+    return out[:n_words, 0]

@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import bitpack as _bp
 from . import bucket_scatter as _bs
 from . import flash_attention as _fa
 from . import mamba_scan as _ms
@@ -121,3 +122,32 @@ def bucket_scatter_add(table, idx, payload, *, impl="auto", block_m=256):
         return _bs.bucket_scatter_add(table, idx, payload, block_m=block_m,
                                       interpret=(mode == "interpret"))
     return _ref.bucket_scatter_add_ref(table, idx, payload)
+
+
+# --------------------------------------------------------------- bitpack
+
+@functools.partial(jax.jit, static_argnames=("lut", "count_val", "impl",
+                                             "block_w"))
+def bitpack_lut_count(packed, lut, count_val, *, impl="auto", block_w=8):
+    """Map each 2-bit field of the packed words through the 4-entry LUT and
+    count fields that map to ``count_val`` (over ALL W·16 fields — callers
+    with fewer logical elements correct for their padding fields)."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _bp.bitpack_lut_count(packed, lut, count_val, block_w=block_w,
+                                     interpret=(mode == "interpret"))
+    return _ref.bitpack_lut_count_ref(packed, lut, count_val)
+
+
+@functools.partial(jax.jit, static_argnames=("mark", "only_if", "impl",
+                                             "block_m"))
+def bitpack_scatter_mark(packed, idx, *, mark=2, only_if=0, impl="auto",
+                         block_m=256):
+    """packed[idx]'s 2-bit field ← mark where it currently holds only_if;
+    out-of-range indices dropped, duplicates safe (first mark wins)."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _bp.bitpack_scatter_mark(packed, idx, mark=mark,
+                                        only_if=only_if, block_m=block_m,
+                                        interpret=(mode == "interpret"))
+    return _ref.bitpack_scatter_mark_ref(packed, idx, mark, only_if)

@@ -244,3 +244,30 @@ def bucket_scatter_add_ref(table, idx, payload):
     acc = table.astype(jnp.float32).at[idx].add(
         payload.astype(jnp.float32), mode="drop")
     return acc.astype(table.dtype)
+
+
+# --------------------------------------------------------------- bitpack
+
+def bitpack_lut_count_ref(packed, lut, count_val):
+    """Oracle of kernels/bitpack.py lut+count: unpack all 16 fields, map
+    through the scalar-encoded LUT, repack, count — over ALL W·16 fields."""
+    shifts = (jnp.arange(16, dtype=jnp.uint32) * 2)[None, :]
+    f = (packed.astype(jnp.uint32)[:, None] >> shifts) & 3
+    nf = (jnp.uint32(lut) >> (2 * f)) & 3
+    new = jnp.sum(nf << shifts, axis=1).astype(jnp.uint32)  # disjoint bits
+    cnt = jnp.sum((nf == count_val).astype(jnp.int32))
+    return new, cnt
+
+
+def bitpack_scatter_mark_ref(packed, idx, mark, only_if):
+    """Oracle of bitpack_scatter_mark: order-independent because a field is
+    marked iff it *initially* holds only_if (later duplicates no-op)."""
+    w = packed.shape[0]
+    cap = w * 16
+    shifts = (jnp.arange(16, dtype=jnp.uint32) * 2)[None, :]
+    fields = ((packed.astype(jnp.uint32)[:, None] >> shifts) & 3).reshape(-1)
+    idx = jnp.where((idx >= 0) & (idx < cap), idx, cap)
+    tgt_val = fields[jnp.minimum(idx, cap - 1)]
+    new_val = jnp.where(tgt_val == only_if, jnp.uint32(mark), tgt_val)
+    fields = fields.at[idx].set(new_val, mode="drop")
+    return jnp.sum(fields.reshape(w, 16) << shifts, axis=1).astype(jnp.uint32)

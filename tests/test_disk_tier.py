@@ -122,6 +122,60 @@ class TestDiskHashTable:
                               np.array([want[k] for k in sorted(want)]))
 
 
+class TestDiskHashTableOpOrder:
+    """Op-log ORDER within one sync window (dhash.py's merge order): the
+    log executes sequentially per key — DEL then PUT resurrects, PUT then
+    DEL removes."""
+
+    def test_del_then_put_resurrects(self, wd):
+        ht = DiskHashTable(wd, 1, 1, nbuckets=4)
+        ht.insert(np.array([[7]], np.uint32), np.array([[1]], np.int64))
+        ht.sync()
+        ht.remove(np.array([[7]], np.uint32))
+        ht.insert(np.array([[7]], np.uint32), np.array([[5]], np.int64))
+        ht.sync(combine=lambda a, b: a + b,
+                apply=lambda o, a, p: np.where(p[:, None], o + a, a))
+        v, f = ht.lookup(np.array([[7]], np.uint32))
+        assert f[0]
+        # the DEL wiped the stored 1: the PUT applies as a fresh insert
+        assert v[0, 0] == 5
+        assert ht.size() == 1
+        ht.destroy()
+
+    def test_put_then_del_removes(self, wd):
+        ht = DiskHashTable(wd, 1, 1, nbuckets=4)
+        ht.insert(np.array([[7]], np.uint32), np.array([[1]], np.int64))
+        ht.sync()
+        ht.insert(np.array([[7]], np.uint32), np.array([[9]], np.int64))
+        ht.remove(np.array([[7]], np.uint32))
+        ht.sync()
+        _, f = ht.lookup(np.array([[7]], np.uint32))
+        assert not f[0]
+        assert ht.size() == 0
+        ht.destroy()
+
+    def test_puts_after_del_combine_fresh(self, wd):
+        ht = DiskHashTable(wd, 1, 1, nbuckets=4)
+        ht.insert(np.array([[3]], np.uint32), np.array([[100]], np.int64))
+        ht.sync()
+        ht.remove(np.array([[3]], np.uint32))
+        ht.insert(np.array([[3], [3]], np.uint32),
+                  np.array([[2], [3]], np.int64))
+        ht.sync(combine=lambda a, b: a + b,
+                apply=lambda o, a, p: np.where(p[:, None], o + a, a))
+        v, f = ht.lookup(np.array([[3]], np.uint32))
+        assert f[0] and v[0, 0] == 5        # 2+3, NOT 105: the 100 is gone
+        ht.destroy()
+
+    def test_del_of_absent_key_is_noop(self, wd):
+        ht = DiskHashTable(wd, 1, 1, nbuckets=4)
+        ht.remove(np.array([[42]], np.uint32))
+        ht.sync()
+        _, f = ht.lookup(np.array([[42]], np.uint32))
+        assert not f[0] and ht.size() == 0
+        ht.destroy()
+
+
 class TestDiskBFS:
     def test_pancake_n6_matches_tier_j_and_oeis(self, wd):
         n = 6

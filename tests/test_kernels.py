@@ -160,6 +160,52 @@ class TestBucketScatter:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
+BITPACK_CASES = [
+    (100, 8),            # W words, block_w
+    (1024, 8),           # whole tiles
+    (1300, 16),          # ragged tail
+]
+
+
+class TestBitpack:
+    """2-bit packed-array kernels (the implicit-BFS hot paths) vs oracles."""
+
+    @pytest.mark.parametrize("case", BITPACK_CASES)
+    def test_lut_count_matches_ref(self, case):
+        w, bw = case
+        packed = jax.random.randint(jax.random.PRNGKey(0), (w,), 0,
+                                    1 << 30, dtype=jnp.int32).astype(jnp.uint32)
+        lut = 0 | (3 << 2) | (1 << 4) | (3 << 6)    # the BFS rotate LUT
+        got, gcnt = ops.bitpack_lut_count(packed, lut, 1, impl="interpret",
+                                          block_w=bw)
+        want, wcnt = ref.bitpack_lut_count_ref(packed, lut, 1)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        assert int(gcnt) == int(wcnt)
+
+    def test_lut_count_pad_collision(self):
+        # count_val == lut[0]: the kernel's tile padding maps to the counted
+        # value and must be corrected away.
+        packed = jnp.asarray([0, 0xFFFFFFFF, 5], jnp.uint32)
+        lut = 0 | (0 << 2) | (2 << 4) | (1 << 6)
+        got, gcnt = ops.bitpack_lut_count(packed, lut, 0, impl="interpret")
+        want, wcnt = ref.bitpack_lut_count_ref(packed, lut, 0)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        assert int(gcnt) == int(wcnt)
+
+    @pytest.mark.parametrize("bm", [4, 64])
+    def test_scatter_mark_matches_ref(self, bm):
+        w, m = 40, 200
+        packed = jax.random.randint(jax.random.PRNGKey(1), (w,), 0,
+                                    1 << 30, dtype=jnp.int32).astype(jnp.uint32)
+        # duplicates, OOB high, negative — all must behave
+        idx = jax.random.randint(jax.random.PRNGKey(2), (m,), -8,
+                                 w * 16 + 32, dtype=jnp.int32)
+        got = ops.bitpack_scatter_mark(packed, idx, impl="interpret",
+                                       block_m=bm)
+        want = ref.bitpack_scatter_mark_ref(packed, idx, 2, 0)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 class TestMamba2SSD:
     """Chunked SSD (matmul) form vs the recurrence oracles (§Perf cell C)."""
 

@@ -229,3 +229,60 @@ class TestRoomySet:
         from repro.core import rset as RS
         s = RS.from_rows(jnp.array([[7], [7], [7]], jnp.uint32), capacity=4)
         assert int(s.count) == 1
+
+
+class TestBinByDestOverflow:
+    """delayed.bin_by_dest drop accounting: ``dropped`` must equal EXACTLY
+    the number of valid items beyond per-bucket capacity."""
+
+    def _oracle_dropped(self, dest, valid, nbuckets, capacity):
+        counts = np.zeros(nbuckets, np.int64)
+        for d, v in zip(np.asarray(dest).tolist(), np.asarray(valid).tolist()):
+            if v and 0 <= d < nbuckets:
+                counts[d] += 1
+        return int(np.maximum(counts - capacity, 0).sum())
+
+    def test_dropped_matches_per_bucket_overflow(self):
+        from repro.core import delayed as D
+        rng = np.random.default_rng(0)
+        for seed in range(5):
+            rng = np.random.default_rng(seed)
+            m, nb, cap = 64, 4, 5
+            dest = jnp.asarray(rng.integers(0, nb, m).astype(np.int32))
+            valid = jnp.asarray(rng.random(m) < 0.7)
+            pay = jnp.asarray(rng.integers(0, 100, (m, 2)).astype(np.int32))
+            b = D.bin_by_dest(dest, pay, valid, nb, cap)
+            want = self._oracle_dropped(dest, valid, nb, cap)
+            assert int(b.dropped) == want
+            # and the kept count is consistent: valid slots == valid - dropped
+            nvalid = int(jnp.sum(valid.astype(jnp.int32)))
+            assert int(jnp.sum(b.valid.astype(jnp.int32))) == nvalid - want
+
+    def test_single_bucket_hotspot(self):
+        from repro.core import delayed as D
+        m, nb, cap = 32, 4, 3
+        dest = jnp.zeros((m,), jnp.int32)             # everyone → bucket 0
+        valid = jnp.ones((m,), bool)
+        pay = jnp.ones((m, 1), jnp.int32)
+        b = D.bin_by_dest(dest, pay, valid, nb, cap)
+        assert int(b.dropped) == m - cap
+
+    def test_all_invalid_drops_nothing(self):
+        from repro.core import delayed as D
+        m, nb, cap = 16, 4, 2
+        dest = jnp.zeros((m,), jnp.int32)
+        valid = jnp.zeros((m,), bool)
+        pay = jnp.ones((m, 1), jnp.int32)
+        b = D.bin_by_dest(dest, pay, valid, nb, cap)
+        assert int(b.dropped) == 0
+        assert int(jnp.sum(b.valid.astype(jnp.int32))) == 0
+
+    def test_zero_capacity_drops_all_valid(self):
+        from repro.core import delayed as D
+        m, nb = 10, 3
+        dest = jnp.asarray(np.arange(m) % nb, jnp.int32)
+        valid = jnp.asarray(np.arange(m) % 2 == 0)    # 5 valid
+        pay = jnp.ones((m, 1), jnp.int32)
+        b = D.bin_by_dest(dest, pay, valid, nb, 0)
+        assert int(b.dropped) == 5
+        assert b.payload.shape == (nb, 0, 1)

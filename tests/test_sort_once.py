@@ -43,6 +43,28 @@ def _as_sorted_tuples(arr):
     return sorted(map(tuple, np.asarray(arr).tolist()))
 
 
+def _pancake_gen_next(n):
+    """4-bit-packed pancake expansion (the sorted-list engines' encoding)."""
+    def gen(chunk):
+        codes = chunk[:, 0]
+        perms = np.stack([(codes >> (4 * i)) & 0xF for i in range(n)],
+                         axis=1).astype(np.int64)
+        outs = []
+        for k in range(2, n + 1):
+            flipped = np.concatenate(
+                [perms[:, :k][:, ::-1], perms[:, k:]], axis=1)
+            code = np.zeros(chunk.shape[0], np.uint32)
+            for i in range(n):
+                code |= flipped[:, i].astype(np.uint32) << np.uint32(4 * i)
+            outs.append(code)
+        return np.concatenate(outs)[:, None]
+    return gen
+
+
+def _pancake_start(n):
+    return np.uint32(sum(i << (4 * i) for i in range(n)))
+
+
 # ------------------------------------------------------------ ChunkStore
 
 class TestSortednessInvariant:
@@ -231,25 +253,83 @@ class TestLevelStepFusion:
         rs.destroy()
 
 
+class TestTieredCompaction:
+    """SortedRunSet policy knob: default 'full' behaviour is unchanged;
+    'tiered' merges only comparable-size runs."""
+
+    def _sorted_run(self, wd, rng, name, nrows):
+        src = ChunkStore(f"{wd}/{name}_src", width=1, chunk_rows=16)
+        src.append(_rand_rows(rng, nrows, width=1, hi=100_000))
+        src.flush()
+        run = ChunkStore(f"{wd}/{name}", width=1, chunk_rows=16)
+        extsort.external_sort(src, run, f"{wd}/{name}_t", run_rows=64,
+                              dedupe=True)
+        src.destroy()
+        return run
+
+    def test_default_policy_is_full_merge(self, wd):
+        rng = np.random.default_rng(7)
+        rs = SortedRunSet(wd, 1, chunk_rows=16, max_runs=2, name="rs")
+        assert rs.policy == "full"                  # default preserved
+        for i in range(4):
+            rs.add_run(self._sorted_run(wd, rng, f"r{i}", 40))
+        union = sorted({int(x) for r in rs.runs for x in r.read_all()[:, 0]})
+        assert rs.maybe_compact()
+        assert len(rs.runs) == 1                    # everything re-merged
+        assert rs.runs[0].read_all()[:, 0].tolist() == union
+        rs.destroy()
+
+    def test_tiered_leaves_big_runs_untouched(self, wd):
+        rng = np.random.default_rng(8)
+        rs = SortedRunSet(wd, 1, chunk_rows=16, max_runs=2, name="rs",
+                          policy="tiered", size_ratio=2)
+        big = self._sorted_run(wd, rng, "big", 2000)
+        rs.add_run(big)
+        for i in range(3):
+            rs.add_run(self._sorted_run(wd, rng, f"small{i}", 30))
+        union = sorted({int(x) for r in rs.runs for x in r.read_all()[:, 0]})
+        extsort.reset_stats()
+        assert rs.maybe_compact()
+        # the big settled run must survive identical; the smalls merged
+        assert any(r is big for r in rs.runs)
+        assert len(rs.runs) == 2
+        assert extsort.STATS["sort_passes"] == 0    # still merge, not sort
+        got = sorted({int(x) for r in rs.runs for x in r.read_all()[:, 0]})
+        assert got == union
+        rs.destroy()
+
+    def test_tiered_absorbs_comparable_sizes(self, wd):
+        rng = np.random.default_rng(9)
+        rs = SortedRunSet(wd, 1, chunk_rows=16, max_runs=2, name="rs",
+                          policy="tiered", size_ratio=2)
+        # all comparable → one merge collapses them all
+        for i in range(4):
+            rs.add_run(self._sorted_run(wd, rng, f"r{i}", 50))
+        assert rs.maybe_compact()
+        assert len(rs.runs) == 1
+        rs.destroy()
+
+    def test_bfs_tiered_knob_equivalent_levels(self, wd):
+        n = 5
+        gen_next = _pancake_gen_next(n)
+        start = _pancake_start(n)
+        sizes_full, all_full = breadth_first_search(
+            f"{wd}/full", np.array([[start]], np.uint32), gen_next,
+            width=1, chunk_rows=256, max_runs=2)
+        sizes_tier, all_tier = breadth_first_search(
+            f"{wd}/tier", np.array([[start]], np.uint32), gen_next,
+            width=1, chunk_rows=256, max_runs=2, compaction="tiered")
+        assert sizes_tier == sizes_full
+        assert np.array_equal(all_tier.read_all(), all_full.read_all())
+        all_full.destroy()
+        all_tier.destroy()
+
+
 class TestDiskBFSFusedVsUnfused:
     def test_pancake_n5_equivalent(self, wd):
         n = 5
-
-        def gen_next(chunk):
-            codes = chunk[:, 0]
-            perms = np.stack([(codes >> (4 * i)) & 0xF for i in range(n)],
-                             axis=1).astype(np.int64)
-            outs = []
-            for k in range(2, n + 1):
-                flipped = np.concatenate(
-                    [perms[:, :k][:, ::-1], perms[:, k:]], axis=1)
-                code = np.zeros(chunk.shape[0], np.uint32)
-                for i in range(n):
-                    code |= flipped[:, i].astype(np.uint32) << np.uint32(4 * i)
-                outs.append(code)
-            return np.concatenate(outs)[:, None]
-
-        start = np.array([[sum(i << (4 * i) for i in range(n))]], np.uint32)
+        gen_next = _pancake_gen_next(n)
+        start = np.array([[_pancake_start(n)]], np.uint32)
         sizes_f, all_f = breadth_first_search(
             f"{wd}/f", start, gen_next, width=1, chunk_rows=32, max_runs=2)
         sizes_u, all_u = breadth_first_search(
