@@ -51,6 +51,18 @@ from pancake_bits import neighbor_jnp as bits_neighbor_jnp
 from pancake_bits import neighbors_np as bits_neighbors_np
 
 
+def _best_of(repeats: int, fn) -> float:
+    """Min wall time of ``fn()`` over ``repeats`` runs — timing noise is
+    one-sided (slow), so the min converges to the true floor.  ``fn``
+    must self-check its result; only the time comes back."""
+    dt = 1e18
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        dt = min(dt, time.perf_counter() - t0)
+    return dt
+
+
 class _TimedGen:
     """Wraps a chunk generator, accumulating its own compute time so the
     benchmark can subtract it (it is identical in fused/unfused paths)."""
@@ -98,11 +110,13 @@ def _bench_disk(tag: str, gen_np, start: np.uint32, want: List[int],
     return row, best_level
 
 
-def _lexsorts_per_level(fused: bool) -> int:
-    """Exact lexsort op count of one Tier J level, measured by tracing the
-    un-jitted composition on a tiny input (the jitted driver reuses one
-    trace across levels, so dividing the global counter by levels_run
-    would understate the per-level op count)."""
+def _ops_per_level(fused: bool):
+    """Exact (lexsort, scatter) op counts of one Tier J level, measured by
+    tracing the un-jitted composition on a tiny input (the jitted driver
+    reuses one trace across levels, so dividing the global counter by
+    levels_run would understate the per-level op count).  The fused level
+    folds the expansion-scatter staging into its lexsort, so it traces
+    1 lexsort + 1 scatter; the reference composition traces 2 + 2."""
     all_small = RL.from_rows(jnp.array([[1]], jnp.uint32), capacity=4)
     nrows = jnp.array([[2], [3]], jnp.uint32)
     valid = jnp.ones((2,), bool)
@@ -115,23 +129,31 @@ def _lexsorts_per_level(fused: bool) -> int:
         nxt = RL.remove_dupes(nxt)
         nxt = RL.remove_all(nxt, all_small)
         RL.add_all(all_small, nxt)
-    return T.SORT_STATS["lexsorts"]
+    return T.SORT_STATS["lexsorts"], T.SORT_STATS["scatters"]
 
 
 def _bench_disk_implicit(n: int, want: List[int], n_total: int,
-                         chunk_elems: int, repeats: int = 2):
+                         chunk_elems: int, fused: bool = True,
+                         repeats: int = 2):
     """Implicit (bit-array) Tier D engine: states/s through the level
-    passes and exact bytes touched per level (bitarray.STATS)."""
+    passes and exact bytes touched per level (bitarray.STATS).
+
+    ``array_bytes/level`` isolates the packed-array traversals (total
+    bytes minus the op-log subset): the fused planner pass reads the
+    array ONCE per level where the unfused expand-then-sync composition
+    reads it twice — the ~2x drop this row exists to record."""
     levels = len(want) - 1
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
-    best_wall, best_level, bytes_lvl = 1e18, 1e18, 0.0
+    best_wall, best_level = 1e18, 1e18
+    bytes_lvl = arr_lvl = passes_lvl = 0.0
     for _ in range(repeats):
         timed = _TimedGen(bits_neighbors_np(n))
         with tempfile.TemporaryDirectory() as wd:
             DBA.reset_stats()
             t0 = time.perf_counter()
             sizes, bits = disk_implicit_bfs(wd, n_total, [start_rank], timed,
-                                            chunk_elems=chunk_elems)
+                                            chunk_elems=chunk_elems,
+                                            fused=fused)
             wall = time.perf_counter() - t0
             assert sizes == want, (sizes, want)
             bits.destroy()
@@ -139,9 +161,17 @@ def _bench_disk_implicit(n: int, want: List[int], n_total: int,
         best_level = min(best_level, wall - timed.t)
         bytes_lvl = (DBA.STATS["bytes_read"]
                      + DBA.STATS["bytes_written"]) / (levels + 1)
-    return ((f"bfs_pancake{n}_tierD_implicit", best_wall * 1e6,
+        arr_lvl = (DBA.STATS["bytes_read"] + DBA.STATS["bytes_written"]
+                   - DBA.STATS["log_bytes_read"]
+                   - DBA.STATS["log_bytes_written"]) / (levels + 1)
+        passes_lvl = (DBA.STATS["sync_passes"]
+                      + DBA.STATS["scan_passes"]) / (levels + 1)
+    name = (f"bfs_pancake{n}_tierD_implicit"
+            + ("" if fused else "_unfused"))
+    return ((name, best_wall * 1e6,
              f"{n_total/best_level:.3g} level states/s "
-             f"bytes/level={bytes_lvl:.3g} sorts/expansion=0.00"),
+             f"bytes/level={bytes_lvl:.3g} array_bytes/level={arr_lvl:.3g} "
+             f"passes/level={passes_lvl:.2f} sorts/expansion=0.00"),
             best_level)
 
 
@@ -154,9 +184,14 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
     want = oracle_levels(n)
     start = _start(n)
     levels = len(want) - 1
+    # Small presets (the CI gate runs n=5) have sub-100ms level times, so
+    # best-of-2 is noise-bound; more repeats converge the min to the true
+    # floor (noise only ever ADDS time) and keep the regression gate quiet.
+    repeats = 10 if n <= 5 else 2
 
     fused_row, t_f = _bench_disk(f"pancake{n}", _gen_next_np(n), start, want,
-                                 total, chunk_rows, fused=True)
+                                 total, chunk_rows, fused=True,
+                                 repeats=repeats)
     # Bytes touched per level by the sorted engine: rows streamed through
     # sort passes plus visited-set chunks probed, at 4·width bytes/row
     # (STATS reflect the last repeat — representative, the runs are
@@ -165,7 +200,8 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
                             + extsort.STATS["chunks_probed"] * chunk_rows
                             ) / (levels + 1)
     unfused_row, t_u = _bench_disk(f"pancake{n}", _gen_next_np(n), start,
-                                   want, total, chunk_rows, fused=False)
+                                   want, total, chunk_rows, fused=False,
+                                   repeats=repeats)
     rows.append((fused_row[0], fused_row[1],
                  fused_row[2] + f" bytes/level={sorted_bytes_lvl:.3g}"
                  f" speedup_vs_unfused={t_u/t_f:.2f}x"))
@@ -173,33 +209,53 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
 
     # ------------------------------------- implicit vs sorted (tier D)
     imp_row, t_i = _bench_disk_implicit(n, want, total,
-                                        chunk_elems=chunk_rows * 4)
+                                        chunk_elems=chunk_rows * 4,
+                                        repeats=repeats)
     rows.append((imp_row[0], imp_row[1],
                  imp_row[2] + f" speedup_vs_sorted={t_f/t_i:.2f}x"))
+    imp_u_row, t_iu = _bench_disk_implicit(n, want, total,
+                                           chunk_elems=chunk_rows * 4,
+                                           fused=False, repeats=repeats)
+    rows.append((imp_u_row[0], imp_u_row[1],
+                 imp_u_row[2] + f" speedup_vs_fused={t_i/t_iu:.2f}x"))
+
+    # Tier J rows are compile-dominated at small n (each repeat re-traces,
+    # so every sample measures the same compile+run quantity); best-of-N
+    # damps the transient slow windows the regression gate must not see.
+    repeats_j = 3 if n <= 5 else 1
 
     for fused in (True, False):
-        t0 = time.perf_counter()
-        res = C.breadth_first_search(
-            np.array([[start]], np.uint32), _gen_next_jnp(n), fanout=n - 1,
-            width=1, all_capacity=total + 8, level_capacity=total + 8,
-            fused=fused)
-        dt = time.perf_counter() - t0
-        assert res.level_sizes == want
-        spl = _lexsorts_per_level(fused)
+        def run_sorted(fused=fused):
+            res = C.breadth_first_search(
+                np.array([[start]], np.uint32), _gen_next_jnp(n),
+                fanout=n - 1, width=1, all_capacity=total + 8,
+                level_capacity=total + 8, fused=fused)
+            assert res.level_sizes == want
+        dt = _best_of(repeats_j, run_sorted)
+        spl, scl = _ops_per_level(fused)
         rows.append((f"bfs_pancake{n}_tierJ_{'fused' if fused else 'unfused'}",
                      dt * 1e6,
-                     f"{total/dt:.3g} states/s lexsorts/level={spl}"))
+                     f"{total/dt:.3g} states/s lexsorts/level={spl} "
+                     f"scatters/level={scl}"))
 
-    t0 = time.perf_counter()
-    sizes, bits = C.implicit_bfs(total, [int(R.rank_np(
-        np.arange(n)[None, :])[0])], bits_neighbor_jnp(n))
-    dt = time.perf_counter() - t0
-    assert sizes == want
-    # Bytes touched per level: the packed array read+written once per level
-    # (mark pass + rotate pass), n/8 bytes each way.
-    rows.append((f"bfs_pancake{n}_tierJ_implicit", dt * 1e6,
-                 f"{total/dt:.3g} states/s lexsorts/level=0 "
-                 f"bytes/level={2 * bits.data.nbytes:.3g}"))
+    for fused in (True, False):
+        nbytes = 4 * ((total + 15) // 16)     # uint32 words, 16 elems each
+
+        def run_implicit(fused=fused):
+            sizes, _bits = C.implicit_bfs(total, [int(R.rank_np(
+                np.arange(n)[None, :])[0])], bits_neighbor_jnp(n),
+                fused=fused)
+            assert sizes == want
+        dt = _best_of(repeats_j, run_implicit)
+        # Bytes touched per level: fused runs ONE kernel over the packed
+        # array (read + write = 2·nbytes); the unfused reference runs the
+        # mark scatter and the rotate LUT as separate kernels (4·nbytes).
+        per_level = (2 if fused else 4) * nbytes
+        name = f"bfs_pancake{n}_tierJ_implicit" + ("" if fused
+                                                   else "_unfused")
+        rows.append((name, dt * 1e6,
+                     f"{total/dt:.3g} states/s lexsorts/level=0 "
+                     f"bytes/level={per_level:.3g}"))
 
     # ----------------------------------------------------------- cayley
     cn = max(5, n - 1)
@@ -207,15 +263,19 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
     cwant = mahonian(cn)
     cstart = np.uint32(sum(i << (4 * i) for i in range(cn)))
 
+    crepeats = 10 if cn <= 5 else 2
+    crepeats_j = 3 if cn <= 5 else 1
     crow, _ = _bench_disk(f"cayley{cn}", cayley_gen_np(cn), cstart, cwant,
-                          ctotal, chunk_rows, fused=True)
+                          ctotal, chunk_rows, fused=True, repeats=crepeats)
     rows.append(crow)
-    t0 = time.perf_counter()
-    res = C.breadth_first_search(
-        np.array([[cstart]], np.uint32), cayley_gen_jnp(cn), fanout=cn - 1,
-        width=1, all_capacity=ctotal + 8, level_capacity=ctotal + 8)
-    dt = time.perf_counter() - t0
-    assert res.level_sizes == cwant
+
+    def run_cayley_j():
+        res = C.breadth_first_search(
+            np.array([[cstart]], np.uint32), cayley_gen_jnp(cn),
+            fanout=cn - 1, width=1, all_capacity=ctotal + 8,
+            level_capacity=ctotal + 8)
+        assert res.level_sizes == cwant
+    dt = _best_of(crepeats_j, run_cayley_j)
     rows.append((f"bfs_cayley{cn}_tierJ_fused", dt * 1e6,
                  f"{ctotal/dt:.3g} states/s"))
     return rows

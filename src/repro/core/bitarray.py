@@ -20,8 +20,12 @@ Two delayed-update routes, matching the repo's two execution shapes:
     (delayed.BucketExchange), then applied on the owner with the masked
     ``.at[].set`` mark (or the bitpack Pallas kernel on TPU).
 
-``mark_packed`` / ``rotate_count`` are the implicit-BFS hot paths
-(constructs.implicit_bfs), dispatching to kernels/bitpack.py via ops.py.
+``mark_rotate_count`` is the implicit-BFS hot path (constructs.
+implicit_bfs): the delayed-mark scatter and the rotate+count LUT pass
+fused into one kernel — one HBM traversal of the packed words per BFS
+level, the device twin of the disk pass planner's fused level.
+``mark_packed`` / ``rotate_count`` are the unfused halves, kept as the
+reference composition.  All dispatch to kernels/bitpack.py via ops.py.
 """
 from __future__ import annotations
 
@@ -192,9 +196,43 @@ def rotate_count(data: jax.Array, n: int, *, lut: int = ROTATE_LUT,
                  count_val: int = CUR, impl: str = "auto"):
     """Map every element through the 4-entry lut and count elements that
     map to count_val among the first n — the fused per-level rotate+count
-    pass.  Returns (new_data, count)."""
-    new, cnt = K.bitpack_lut_count(data, lut, count_val, impl=impl)
+    pass.  Returns (new_data, count).
+
+    Arrays with tail padding (n < 16·words) require a zero-preserving
+    lut (lut[0] == 0, as ROTATE_LUT is): the tail-count correction
+    assumes padding fields hold 0, which only a zero-preserving lut
+    keeps true across calls."""
     pad = data.shape[0] * FIELDS_PER_WORD - n
+    assert pad == 0 or (lut & 3) == 0, \
+        "padded arrays need a zero-preserving lut (lut[0] == 0)"
+    new, cnt = K.bitpack_lut_count(data, lut, count_val, impl=impl)
+    if pad and (lut & 3) == count_val:  # padding fields hold 0 → lut[0]
+        cnt = cnt - pad
+    return new, cnt
+
+
+def mark_rotate_count(data: jax.Array, idx: jax.Array, n: int, *,
+                      lut: int = ROTATE_LUT, count_val: int = CUR,
+                      mark: int = NEXT, only_if: int = UNSEEN,
+                      impl: str = "auto"):
+    """Fused per-level pass: ``data[idx] ← mark`` where the element holds
+    ``only_if`` (the delayed-mark apply), THEN map every element through
+    the 4-entry lut and count elements mapping to ``count_val`` among the
+    first n — one kernel, one HBM read-write traversal of the packed
+    words, where mark_packed + rotate_count costs two
+    (kernels/bitpack.py bitpack_mark_rotate_count).  Returns
+    (new_data, count).
+
+    Arrays with tail padding require a zero-preserving lut (lut[0] == 0;
+    see rotate_count) and mark indices within [0, n) — a mark landing in
+    a padding field would also break the tail-count correction."""
+    cap = data.shape[0] * FIELDS_PER_WORD
+    pad = cap - n
+    assert pad == 0 or (lut & 3) == 0, \
+        "padded arrays need a zero-preserving lut (lut[0] == 0)"
+    new, cnt = K.bitpack_mark_rotate_count(
+        data, idx.astype(jnp.int32), lut, count_val, mark=mark,
+        only_if=only_if, impl=impl)
     if pad and (lut & 3) == count_val:  # padding fields hold 0 → lut[0]
         cnt = cnt - pad
     return new, cnt

@@ -142,7 +142,8 @@ class BFSResult:
 
 def dedupe_subtract_fold(nxt_rows: jax.Array, nxt_valid: jax.Array,
                          all_lst: RL.RoomyList, next_cap: int):
-    """Fused removeDupes ∘ removeAll ∘ addAll — ONE lexsort (sort-once, Tier J).
+    """Fused removeDupes ∘ removeAll ∘ addAll — ONE lexsort, ONE scatter
+    (sort-once, Tier J).
 
     One lexsort over the tagged concatenation ``[nxt_raw; all]`` decides all
     three at once: within an equal-run, any member tagged "old" kills the run
@@ -150,9 +151,14 @@ def dedupe_subtract_fold(nxt_rows: jax.Array, nxt_valid: jax.Array,
     (intra-level dedup); survivors — already in sorted order — are compacted
     with a boolean argsort and folded into ``all`` with one scatter.
 
-    The reference composition (remove_dupes → remove_all → add_all) costs 2
-    lexsorts + 2 boolean compactions over the same data; property tests
-    assert element-wise equivalence (tests/test_sort_once.py).
+    ``nxt_rows`` may be the RAW expansion (invalid slots included): invalid
+    rows are masked to sentinel and sort last, so the same lexsort also does
+    the staging compaction that used to cost a separate ``RL.add`` scatter
+    before the fold (_bfs_level) — the whole level is 1 lexsort + 1 scatter.
+
+    The reference composition (staged add → remove_dupes → remove_all →
+    add_all) costs 2 lexsorts + 2 scatters over the same data; property
+    tests assert element-wise equivalence (tests/test_sort_once.py).
 
     Returns (nxt, all2, overflow) like the composition it replaces.
     """
@@ -193,19 +199,19 @@ def _bfs_level(cur: RL.RoomyList, all_lst: RL.RoomyList, gen_next: Callable,
 
     gen_next(row) -> (rows (fanout, w), valid (fanout,)). Jitted per shape.
 
-    The raw expansion is capacity·fanout rows, mostly invalid slots; a
-    scatter-compact into the next_cap buffer first (RL.add — no sort) keeps
-    the fused lexsort at next_cap + all_cap rows instead of sorting every
-    dead slot of the expansion.
+    The raw expansion feeds dedupe_subtract_fold directly: its lexsort
+    masks invalid slots to sentinel (they sort last and drop), so the
+    staging scatter that used to compact the expansion into a next_cap
+    buffer first is folded into the sort the level already pays — one
+    lexsort + one scatter per level, asserted by the SORT_STATS trace
+    tests.  (The lexsort covers capacity·fanout + all_cap rows instead of
+    next_cap + all_cap; sorting the dead slots is cheaper than the extra
+    full-width scatter pass they used to cost.)
     """
     nbr_rows, nbr_valid = jax.vmap(gen_next)(cur.data)
     nbr_valid = nbr_valid & RL.valid_mask(cur)[:, None]
-    staged = RL.make(next_cap, cur.width)
-    staged, overflow = RL.add(staged, nbr_rows.reshape(-1, cur.width),
-                              nbr_valid.reshape(-1))
-    nxt, all2, ov2 = dedupe_subtract_fold(
-        staged.data, RL.valid_mask(staged), all_lst, next_cap)
-    return nxt, all2, overflow | ov2
+    return dedupe_subtract_fold(nbr_rows.reshape(-1, cur.width),
+                                nbr_valid.reshape(-1), all_lst, next_cap)
 
 
 def _bfs_level_reference(cur: RL.RoomyList, all_lst: RL.RoomyList,
@@ -225,17 +231,23 @@ def _bfs_level_reference(cur: RL.RoomyList, all_lst: RL.RoomyList,
 
 
 def _implicit_level(data, *, n_states: int, neighbor_fn: Callable,
-                    impl: str):
+                    impl: str, fused: bool = True):
     """One implicit-BFS level over the packed 2-bit array: mark every
     neighbor of a CUR state NEXT-if-UNSEEN (the delayed-update batch — a
     masked scatter, duplicates and visited states absorb silently), then
-    rotate CUR→DONE / NEXT→CUR and count the new frontier in one fused
-    LUT pass (kernels/bitpack.py).  No sort of any kind."""
+    rotate CUR→DONE / NEXT→CUR and count the new frontier.  With
+    ``fused=True`` the mark scatter and the LUT rotate+count run as ONE
+    kernel over the packed words (kernels/bitpack.py
+    bitpack_mark_rotate_count) — one HBM read-write traversal of the
+    array per level instead of two, the Tier J twin of the disk pass
+    planner's fused level.  No sort of any kind either way."""
     cap = data.shape[0] * BA.FIELDS_PER_WORD
     vals = BA.unpack_values(data)[:n_states]
     cur = vals == BA.CUR
     nbr = jax.vmap(neighbor_fn)(jnp.arange(n_states, dtype=jnp.int32))
     tgt = jnp.where(cur[:, None], nbr.astype(jnp.int32), cap).reshape(-1)
+    if fused:
+        return BA.mark_rotate_count(data, tgt, n_states, impl=impl)
     data = BA.mark_packed(data, tgt, impl=impl)
     return BA.rotate_count(data, n_states, impl=impl)
 
@@ -246,6 +258,7 @@ def implicit_bfs(
     neighbor_fn: Callable,
     max_levels: int = 1_000,
     impl: str = "auto",
+    fused: bool = True,
 ):
     """The paper's *second* BFS engine on Tier J: implicit search over a
     2-bit RoomyBitArray indexed by state rank (ranking.py), the device twin
@@ -258,7 +271,8 @@ def implicit_bfs(
     frontier list, no sorting and no duplicate elimination.
 
     Returns (level_sizes, bits: RoomyBitArray) — all reached states end
-    DONE in ``bits``.
+    DONE in ``bits``.  ``fused=False`` keeps the two-kernel reference
+    composition (mark scatter, then rotate+count) for equivalence tests.
     """
     ba = BA.make(n_states)
     start = jnp.asarray(start_idx, jnp.int32).reshape(-1)
@@ -267,7 +281,8 @@ def implicit_bfs(
     level_sizes: List[int] = [int(jnp.sum(
         (BA.unpack_values(data)[:n_states] == BA.CUR).astype(jnp.int32)))]
     step = jax.jit(functools.partial(_implicit_level, n_states=n_states,
-                                     neighbor_fn=neighbor_fn, impl=impl))
+                                     neighbor_fn=neighbor_fn, impl=impl,
+                                     fused=fused))
     for _ in range(max_levels):
         data, cnt = step(data)
         c = int(cnt)

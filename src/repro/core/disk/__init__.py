@@ -11,11 +11,12 @@ from .dlist import DiskList
 from .extsort import (MembershipProbe, external_sort, merge_difference,
                       row_keys, sort_rows, stream_dedupe)
 from .lsm import SortedRunSet
+from .passes import PassPlan
 from .store import ChunkStore
 
 __all__ = [
     "ChunkStore", "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
-    "MembershipProbe", "SortedRunSet", "breadth_first_search",
+    "MembershipProbe", "PassPlan", "SortedRunSet", "breadth_first_search",
     "external_sort", "implicit_bfs", "level_step", "merge_difference",
     "row_keys", "sort_rows", "stream_dedupe",
 ]

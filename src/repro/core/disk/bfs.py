@@ -22,9 +22,10 @@ re-sorts the entire visited set.
 
 A second, rank-indexed engine lives in :func:`implicit_bfs`: states are
 indices into a 2-bit :class:`~repro.core.disk.bitarray.DiskBitArray`
-(UNSEEN/CUR/NEXT/DONE) and a level is two streaming passes with no sorting
-at all — the paper's actual pancake construction.  See ROADMAP "Two BFS
-representations" for when each engine wins.
+(UNSEEN/CUR/NEXT/DONE) and a level is ONE fused read-write pass with no
+sorting at all — the expand read piggybacks on the mark/rotate write via
+the pass planner (passes.py) — the paper's actual pancake construction.
+See ROADMAP "Two BFS representations" for when each engine wins.
 """
 from __future__ import annotations
 
@@ -38,6 +39,7 @@ from . import extsort
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .dlist import DiskList
 from .lsm import SortedRunSet
+from .passes import PassPlan
 from .store import ChunkStore, row_keys
 
 
@@ -183,23 +185,31 @@ def implicit_bfs(
     max_levels: int = 10_000,
     expand_batch: int = 1 << 16,
     log_buf_rows: int = 1 << 20,
+    fused: bool = True,
 ):
     """The paper's *second* BFS engine: implicit search over a 2-bit array.
 
     Instead of sorted frontier lists keyed by state rows, every state is an
     index into a :class:`DiskBitArray` of ``n_states`` 2-bit elements
     (UNSEEN/CUR/NEXT/DONE) — for permutation state spaces the index is the
-    Myrvold–Ruskey rank (core/ranking.py).  A level is two streaming passes
+    Myrvold–Ruskey rank (core/ranking.py).  With ``fused=True`` (default) a
+    level is ONE fused read-write pass, planned through passes.PassPlan,
     and ZERO sorts or duplicate-elimination passes:
 
-      expand   read pass: scan chunks for CUR elements, generate their
-               neighbor indices, queue delayed updates NEXT (batched to
-               owner chunks by the bit array, spilled to disk past
-               ``log_buf_rows``)
-      sync     read-write pass: apply queued marks (UNSEEN→NEXT — any
-               other state absorbs the mark, which *is* the duplicate /
-               visited elimination), then rotate CUR→DONE, NEXT→CUR and
-               count the new frontier, fused into the same pass
+      level pass   per chunk: apply the previous level's queued marks
+                   (UNSEEN→NEXT — any other state absorbs the mark, which
+                   *is* the duplicate / visited elimination), rotate
+                   CUR→DONE, NEXT→CUR, count the new frontier, and expand
+                   the freshly rotated CUR states — the expand read
+                   piggybacks on the mark/rotate write, so the array is
+                   traversed once per level instead of twice.  Marks the
+                   expansion queues are snapshot-isolated to the NEXT pass
+                   (batched to owner chunks by the bit array, spilled to
+                   disk past ``log_buf_rows``).
+
+    ``fused=False`` keeps the two-pass reference composition (a separate
+    expand read pass before each mark/rotate read-write pass) for
+    equivalence tests and benchmarking.
 
     gen_neighbors(idx (m,) int64) -> (m, fanout) int64 neighbor indices.
 
@@ -217,8 +227,6 @@ def implicit_bfs(
     start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
     assert start.size and start.min() >= 0 and start.max() < n_states
     bits.update(start, np.full(start.shape, CUR, np.uint8))
-    bits.sync()                                   # overwrite: seeds → CUR
-    level_sizes: List[int] = [int(start.size)]
 
     def expand(chunk_start: int, vals: np.ndarray) -> None:
         (cur_pos,) = np.nonzero(vals == CUR)
@@ -227,6 +235,49 @@ def implicit_bfs(
             nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
             bits.update(nbrs, np.full(nbrs.shape, NEXT, np.uint8))
 
+    if not fused:
+        return _implicit_bfs_unfused(bits, start, expand, max_levels)
+
+    nxt_count = 0
+
+    def count_cur(chunk_start: int, vals: np.ndarray) -> None:
+        nonlocal nxt_count
+        nxt_count += int(np.count_nonzero(vals == CUR))
+
+    def rotate(chunk_start: int, vals: np.ndarray) -> np.ndarray:
+        vals = np.where(vals == CUR, np.uint8(DONE), vals)
+        return np.where(vals == NEXT, np.uint8(CUR), vals)
+
+    # Pass 0: apply the seed marks (overwrite), count them, and expand them
+    # — the level-1 expand read already rides the seed write pass.  The
+    # array is freshly zeroed, so CUR can only exist in the seeds' (dirty)
+    # chunks: dirty_only skips the guaranteed-no-op read of the rest.
+    bits.run_pass(PassPlan("bfs-seed", dirty_only=True)
+                  .reads(count_cur).reads(expand))
+    level_sizes: List[int] = [nxt_count]
+    for _ in range(max_levels):
+        nxt_count = 0
+        # One fused read-write pass: marks from the previous expansion
+        # apply (UNSEEN→NEXT), the chunk rotates, the new frontier is
+        # counted, and its expansion queues marks for the NEXT pass.
+        bits.run_pass(
+            PassPlan("bfs-level").writes(rotate).reads(count_cur)
+            .reads(expand),
+            combine=lambda p, q: p,            # every mark payload == NEXT
+            apply=lambda old, agg: np.where(old == UNSEEN, agg, old))
+        if nxt_count == 0:
+            break
+        level_sizes.append(nxt_count)
+    return level_sizes, bits
+
+
+def _implicit_bfs_unfused(bits: DiskBitArray, start: np.ndarray,
+                          expand: Callable, max_levels: int):
+    """Reference composition: separate expand read pass + mark/rotate
+    read-write pass per level (the pre-planner two-pass structure, kept
+    for equivalence tests and the passes-per-level benchmark)."""
+    bits.sync()                                   # overwrite: seeds → CUR
+    level_sizes: List[int] = [int(start.size)]
     for _ in range(max_levels):
         bits.map_chunks(expand)
         nxt_count = 0

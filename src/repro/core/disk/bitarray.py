@@ -15,13 +15,19 @@ outgrow RAM), and ``sync(combine, apply)`` streams each chunk once:
     segment-combine, vals[uniq] = apply(old, agg) → [transform] → pack,
     write back, clear log.
 
-``transform`` (optional) runs on EVERY chunk of the same pass — the fused
-mark-then-rotate step of the implicit BFS (disk/bfs.py:implicit_bfs) rides
-it, so one level costs one read pass (expand) plus one read-write pass
-(sync+rotate+count), never a sort.
+``sync`` is sugar over ``run_pass(plan)`` — the pass-planner entry point
+(passes.py): a plan's producer stage rewrites each chunk after its ops
+apply (the mark-then-rotate step) and consumer stages read the result in
+the SAME traversal, with snapshot-isolated logs so updates queued mid-pass
+defer to the next pass.  The implicit BFS (disk/bfs.py:implicit_bfs) rides
+this to run ONE fused read-write pass per level — the next level's expand
+read piggybacks on the pass applying and rotating this level's marks —
+and never a sort.
 
 STATS counts bytes streamed so benchmarks can report bytes-touched-per-
-level next to the sorted-list engine's rows-sorted numbers.
+level next to the sorted-list engine's rows-sorted numbers; the shared
+pass ledger (extsort.STATS rw_passes/read_passes/piggybacked_stages) books
+each planned traversal.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .extsort import segment_combine_ordered
+from .passes import PassPlan, record_pass
 
 VALS_PER_BYTE = 4
 
@@ -42,8 +49,13 @@ VALS_PER_BYTE = 4
 UNSEEN, CUR, NEXT, DONE = 0, 1, 2, 3
 
 # Pass/byte accounting (benchmarks/bfs.py reports bytes touched per level).
-STATS = {"bytes_read": 0, "bytes_written": 0, "sync_passes": 0,
-         "scan_passes": 0, "ops_applied": 0}
+# bytes_read/bytes_written are totals; log_bytes_read/log_bytes_written are
+# the op-log subset, so packed-ARRAY traversal bytes — the planner's unit
+# of saving — are exactly bytes_read - log_bytes_read (ditto written), and
+# tests can pin "one array traversal per fused BFS level" to the byte.
+STATS = {"bytes_read": 0, "bytes_written": 0, "log_bytes_read": 0,
+         "log_bytes_written": 0, "sync_passes": 0, "scan_passes": 0,
+         "ops_applied": 0}
 
 
 def reset_stats() -> None:
@@ -158,6 +170,7 @@ class DiskBitArray:
             with open(self._log_path(c), "ab") as f:
                 f.write(np.ascontiguousarray(rec, np.int64).tobytes())
             STATS["bytes_written"] += rec.nbytes
+            STATS["log_bytes_written"] += rec.nbytes
             self._log_bufs[c] = []
         self._log_buffered = 0
 
@@ -174,26 +187,69 @@ class DiskBitArray:
         transform(start, vals) -> vals: if given, runs on EVERY chunk after
             its updates apply (forcing a full read-write pass even over
             log-less chunks) — the fusion hook for mark-then-rotate steps.
+
+        Sugar over :meth:`run_pass` with a single-producer plan; callers
+        that want consumer stages riding the same traversal (the implicit
+        BFS's fused expand read) build a :class:`PassPlan` directly.
+        """
+        plan = PassPlan("sync")
+        if transform is not None:
+            plan.writes(transform)
+        self.run_pass(plan, combine=combine, apply=apply)
+
+    def run_pass(self, plan: PassPlan, combine: Optional[Callable] = None,
+                 apply: Optional[Callable] = None) -> None:
+        """Apply all queued updates AND the plan's stages in ONE traversal.
+
+        The pass-planner entry point (passes.py): each chunk is loaded
+        once, its snapshot ops applied (combine/apply as in :meth:`sync`),
+        then threaded through the plan's stages in order, and written back
+        only if it was dirtied (ops applied or a write stage ran).
+
+        Snapshot isolation: the op logs existing when the pass OPENS are
+        the only updates it applies.  Updates queued by plan stages during
+        the traversal — e.g. the piggybacked expand read of the implicit
+        BFS marking next-level states — accumulate in fresh logs for the
+        NEXT pass, even when they target chunks this pass has not reached
+        yet.  That is the paper's delayed-update batching rule made
+        structural, and what makes the producer/consumer fusion sound.
         """
         if combine is None:
             combine = np.bitwise_or
         if apply is None:
             apply = lambda old, agg: agg
         self._flush_logs()
-        STATS["sync_passes"] += 1
+        # Promote current logs to a read-only snapshot (.pass); mid-pass
+        # updates re-open fresh .bin logs this traversal never reads. A
+        # leftover snapshot from an aborted pass is re-adopted in front of
+        # the newer records so no queued op is ever lost.
+        any_log = False
         for c in range(self.n_chunks):
-            lp = self._log_path(c)
-            has_log = os.path.exists(lp)
-            if not has_log and transform is None:
+            lp, sp = self._log_path(c), self._log_path(c) + ".pass"
+            if os.path.exists(sp):
+                if os.path.exists(lp):
+                    with open(sp, "ab") as dst, open(lp, "rb") as src:
+                        dst.write(src.read())
+                    os.remove(lp)
+            elif os.path.exists(lp):
+                os.replace(lp, sp)
+            any_log = any_log or os.path.exists(sp)
+        STATS["sync_passes"] += 1
+        record_pass(plan.n_stages + (1 if any_log else 0),
+                    writes=plan.writes_chunks or any_log)
+        for c in range(self.n_chunks):
+            sp = self._log_path(c) + ".pass"
+            has_log = os.path.exists(sp)
+            if not has_log and not plan.forces_full_traversal:
                 continue
             rows = self._chunk_rows(c)
             packed = np.load(self._chunk_path(c))
             STATS["bytes_read"] += packed.nbytes
             vals = unpack2(packed, rows)
             if has_log:
-                log = np.fromfile(lp, dtype=np.int64).reshape(-1, 2)
-                os.remove(lp)
+                log = np.fromfile(sp, dtype=np.int64).reshape(-1, 2)
                 STATS["bytes_read"] += log.nbytes
+                STATS["log_bytes_read"] += log.nbytes
                 if log.shape[0]:
                     local = log[:, 0] - c * self.chunk_elems
                     pay = log[:, 1].astype(np.uint8)
@@ -202,13 +258,17 @@ class DiskBitArray:
                         local[order], pay[order], combine)
                     vals[uniq] = apply(vals[uniq], agg)
                     STATS["ops_applied"] += int(log.shape[0])
-            if transform is not None:
-                vals = np.asarray(transform(c * self.chunk_elems, vals),
-                                  np.uint8)
-                assert vals.shape[0] == rows
-            out = pack2(vals)
-            np.save(self._chunk_path(c), out)
-            STATS["bytes_written"] += out.nbytes
+            vals = plan.apply_chunk(c * self.chunk_elems, vals)
+            assert vals.shape[0] == rows
+            if has_log or plan.writes_chunks:
+                out = pack2(vals)
+                np.save(self._chunk_path(c), out)
+                STATS["bytes_written"] += out.nbytes
+            if has_log:
+                # Consumed only after the chunk lands: a stage raising
+                # mid-pass leaves the snapshot for the next pass to re-adopt
+                # instead of silently dropping this chunk's queued ops.
+                os.remove(sp)
 
     # -------------------------------------------------------- streaming
     def map_chunks(self, fn: Callable[[int, np.ndarray], None]) -> None:

@@ -84,8 +84,8 @@ class DiskHashTable:
         queued PUT*, and PUTs after the last DEL resurrect the key — their
         combine-fold applies against ``present=False`` (the old value is
         gone). A key whose last op is DEL is removed. This is exactly
-        sequential execution of the log; Tier J's hashtable.py still uses
-        the coarser any-DEL-wins rule (see ROADMAP open item).
+        sequential execution of the log; Tier J's hashtable.py applies the
+        same rule (TestRoomyHashTableOpOrder mirrors the pins here).
         """
         if combine is None:
             combine = lambda a, b: b

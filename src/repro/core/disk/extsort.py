@@ -46,8 +46,14 @@ __all__ = [
 # the visited set. ``merge_passes`` counts streaming merges (reads, not
 # sorts); ``sorts_skipped`` counts sorts avoided via the sorted invariant;
 # ``chunks_pruned`` counts visited-set chunks skipped via manifest ranges.
+# The pass planner (passes.py) books its fused traversals here too:
+# ``rw_passes``/``read_passes`` per planned traversal of a chunked store,
+# ``piggybacked_stages`` for every consumer stage that rode a producer's
+# traversal instead of paying its own pass (the planner's savings, and the
+# budget the implicit-BFS tests pin: ONE rw pass per level, zero extra).
 STATS = {"sort_passes": 0, "rows_sorted": 0, "merge_passes": 0,
-         "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0}
+         "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0,
+         "rw_passes": 0, "read_passes": 0, "piggybacked_stages": 0}
 
 
 def reset_stats() -> None:

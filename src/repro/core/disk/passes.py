@@ -1,0 +1,110 @@
+"""Streaming pass planner (Tier D) — one traversal, many stages.
+
+Roomy prices every operation in streaming passes over chunked storage
+(paper §2), so the cheapest pass is the one that never runs.  A
+:class:`PassPlan` names the stages that want to see each chunk of ONE
+storage object during ONE traversal and fuses them:
+
+  * a **write** stage rewrites the chunk values (the producer — e.g. the
+    implicit BFS's mark-then-rotate step);
+  * a **read** stage only observes the values flowing past (a consumer —
+    e.g. the next level's expand read, or a frontier count).
+
+Stages run in registration order, each seeing the output of the stages
+before it, so a consumer registered after a producer reads the
+producer's freshly written values without a second trip to disk.  That
+is exactly how ``disk/bfs.py:implicit_bfs`` collapses its per-level
+expand-read-then-sync-read-write pair into ONE fused read-write pass:
+the level-k expand rides the pass that applies and rotates the
+level-(k-1) marks.
+
+Delayed-update discipline: updates a stage queues against the *same*
+storage mid-pass are snapshot-isolated — the storage promotes its op
+logs to a read-only snapshot when the pass opens
+(:meth:`DiskBitArray.run_pass`), so marks generated inside the pass land
+in the NEXT pass's log, never this one's.  This is the paper's batching
+rule made structural: a pass only ever applies updates issued strictly
+before it started.
+
+Accounting lands in :data:`extsort.STATS`, the Tier-D pass ledger
+(``rw_passes`` / ``read_passes`` per traversal, ``piggybacked_stages``
+for every stage beyond the first that shared one — each of those is a
+whole pass the planner deleted; tests assert the budgets).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from . import extsort
+
+__all__ = ["PassPlan", "record_pass"]
+
+# Per-chunk stage: fn(chunk_start, vals). Write stages return the
+# replacement values; read stages' return value is ignored.
+Stage = Tuple[Callable[[int, np.ndarray], Optional[np.ndarray]], bool]
+
+
+def record_pass(n_stages: int, writes: bool) -> None:
+    """Book one fused traversal into the shared pass ledger."""
+    extsort.STATS["rw_passes" if writes else "read_passes"] += 1
+    extsort.STATS["piggybacked_stages"] += max(0, n_stages - 1)
+
+
+class PassPlan:
+    """An ordered bundle of stages to fuse into a single streaming pass.
+
+    Build with the chainable :meth:`writes` / :meth:`reads`, then hand to
+    a storage object's pass runner (``DiskBitArray.run_pass``).  The plan
+    itself is storage-agnostic: it only knows how to thread one chunk's
+    values through its stages (:meth:`apply_chunk`) and what the fused
+    traversal costs (:attr:`writes_chunks` decides read vs read-write).
+    """
+
+    def __init__(self, name: str = "pass", dirty_only: bool = False):
+        """``dirty_only=True`` restricts the traversal to chunks with
+        queued ops — for stages whose work provably lives only where
+        updates land (e.g. the implicit BFS seed pass: a fresh array is
+        all-UNSEEN, so counting/expanding CUR outside the seeds' chunks
+        is a guaranteed no-op and the read would be pure waste)."""
+        self.name = name
+        self.dirty_only = dirty_only
+        self._stages: List[Stage] = []
+
+    # ------------------------------------------------------------ build
+    def writes(self, fn: Callable[[int, np.ndarray], np.ndarray]) -> "PassPlan":
+        """Add a producer stage: vals = fn(chunk_start, vals)."""
+        self._stages.append((fn, True))
+        return self
+
+    def reads(self, fn: Callable[[int, np.ndarray], None]) -> "PassPlan":
+        """Add a consumer stage: fn(chunk_start, vals), observation only."""
+        self._stages.append((fn, False))
+        return self
+
+    # ---------------------------------------------------------- queries
+    @property
+    def n_stages(self) -> int:
+        return len(self._stages)
+
+    @property
+    def writes_chunks(self) -> bool:
+        """True if any stage rewrites chunk values (forces a write-back)."""
+        return any(w for _, w in self._stages)
+
+    @property
+    def forces_full_traversal(self) -> bool:
+        """A non-empty plan must see EVERY chunk, not just dirty ones —
+        unless it opted into ``dirty_only``."""
+        return bool(self._stages) and not self.dirty_only
+
+    # --------------------------------------------------------- execution
+    def apply_chunk(self, chunk_start: int, vals: np.ndarray) -> np.ndarray:
+        """Thread one chunk's values through the stages, in order."""
+        for fn, writes in self._stages:
+            if writes:
+                vals = np.asarray(fn(chunk_start, vals), vals.dtype)
+            else:
+                fn(chunk_start, vals)
+        return vals

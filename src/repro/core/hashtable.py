@@ -108,12 +108,19 @@ def sync(
 ) -> RoomyHashTable:
     """Execute all queued ops as one sorted merge (streaming pass).
 
-    combine(v1, v2): merges two queued payloads for the same key
-        (default: last-wins is NOT available — order is undefined, so the
-        default combine keeps either; pass an associative fn for real use).
+    combine(v1, v2): merges two queued payloads for the same key, folded in
+        ISSUE ORDER (default: last-wins — the stable sort keeps each key's
+        queue rows in the order they were queued).
     apply(old_val, agg, present): vectorized; present is a bool mask saying
         whether the key already existed. Default: insert/overwrite with agg.
-    Tombstones win over inserts merged in the same sync (documented).
+
+    Op-log ORDER is honoured per key, matching Tier D's DiskHashTable.sync
+    exactly (the ROADMAP alignment item): a DEL wipes the key *and every
+    earlier queued PUT*, and PUTs after the last DEL resurrect the key —
+    their combine-fold applies against ``present=False`` (the old value is
+    gone, ``old`` reads as zeros).  A key whose last op is DEL is removed.
+    This is sequential execution of the log, pinned by
+    TestRoomyHashTableOpOrder next to Tier D's TestDiskHashTableOpOrder.
     """
     if combine is None:
         combine = lambda a, b: b
@@ -138,38 +145,52 @@ def sync(
     rid = T.run_ids(k_s)
     nseg = cap + qcap
     starts = T.first_of_run(k_s)
-    # Combine queued payloads within each run. Table rows must act as the
-    # identity for ``combine``; we handle that by segmenting on
-    # (run start OR table row): table rows sort before queue rows of the
-    # same key? Not guaranteed — so instead mask table rows out of the
-    # combine by restarting the segment at each table row and at each
-    # queue-row-that-follows-a-table-row.
-    seg_starts = starts | tab_s | jnp.roll(tab_s, 1).at[0].set(False)
-    agg = T.segmented_reduce_last(v_s, seg_starts, combine)
+    pos = jnp.arange(nseg)
     qrow = valid_s & ~tab_s
-    last_q = qrow & jnp.concatenate([~qrow[1:] | (rid[1:] != rid[:-1]),
-                                     jnp.ones((1,), bool)])
+
+    # Sequential per-key semantics: within a run the stable sort yields
+    # [table row?, queue rows in issue order].  Everything at or before a
+    # key's LAST DEL is wiped; the PUTs strictly after it are "live".
+    run_pos = pos - jax.lax.associative_scan(
+        jnp.maximum, jnp.where(starts, pos, 0))
+    last_del = jax.ops.segment_max(
+        jnp.where(del_s & qrow, run_pos, -1), rid, num_segments=nseg)
+    live_s = qrow & ~del_s & (run_pos > last_del[rid])
+
+    # Combine-fold over the live PUTs only, in issue order: every non-live
+    # row restarts a segment (isolating itself), and so does the first live
+    # row after one — live rows are a contiguous run suffix, so the run's
+    # last row then carries the fold of exactly the live PUTs.
+    prev_live = jnp.concatenate([jnp.zeros((1,), bool), live_s[:-1]])
+    seg_starts = starts | ~live_s | ~prev_live
+    agg = T.segmented_reduce_last(v_s, seg_starts, combine)
 
     run_has_tab = jax.ops.segment_max(tab_s.astype(jnp.int32), rid, num_segments=nseg)
-    run_has_del = jax.ops.segment_max((del_s & qrow).astype(jnp.int32), rid,
+    run_had_del = jax.ops.segment_max((del_s & qrow).astype(jnp.int32), rid,
                                       num_segments=nseg)
-    run_has_live_q = jax.ops.segment_max((qrow & ~del_s).astype(jnp.int32), rid,
-                                         num_segments=nseg)
+    run_has_live = jax.ops.segment_max(live_s.astype(jnp.int32), rid,
+                                       num_segments=nseg)
     # Sorted position of the table row within each run (or -1): stable sort
     # puts the (unique) table row first in its run.
     run_tab_idx = jax.ops.segment_max(
-        jnp.where(tab_s, jnp.arange(nseg), -1), rid, num_segments=nseg
+        jnp.where(tab_s, pos, -1), rid, num_segments=nseg
     )
 
-    present = run_has_tab[rid] == 1
-    deleted = run_has_del[rid] == 1
-    old = v_s[jnp.maximum(run_tab_idx[rid], 0)]
+    # A DEL wiped the stored value: resurrecting PUTs apply as inserts
+    # (present=False, old=0), exactly like Tier D's present_eff.
+    present = (run_has_tab[rid] == 1) & (run_had_del[rid] == 0)
+    deleted = (run_had_del[rid] == 1) & (run_has_live[rid] == 0)
+    pmask = present.reshape((-1,) + (1,) * (v_s.ndim - 1))
+    old = jnp.where(pmask, v_s[jnp.maximum(run_tab_idx[rid], 0)],
+                    jnp.zeros_like(v_s))
     new_val = apply(old, agg, present)
 
-    # Survivors: one row per run — prefer the last queue row (it carries the
-    # merged payload); pure-table runs keep their table row.
-    keep_tab_row = tab_s & (run_has_live_q[rid] == 0) & ~deleted
-    keep_q_row = last_q & ~deleted & ~del_s
+    # Survivors: one row per run — the run's last row when it is live (it
+    # carries the fold of the live PUTs); pure-table runs keep their table
+    # row unless their key was deleted.
+    run_last = jnp.concatenate([rid[1:] != rid[:-1], jnp.ones((1,), bool)])
+    keep_tab_row = tab_s & (run_has_live[rid] == 0) & ~deleted
+    keep_q_row = live_s & run_last
     keep = (keep_tab_row | keep_q_row) & valid_s
 
     qmask = keep_q_row.reshape((-1,) + (1,) * (new_val.ndim - 1))

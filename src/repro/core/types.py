@@ -18,15 +18,18 @@ import jax.numpy as jnp
 UINT32_MAX = jnp.uint32(0xFFFFFFFF)
 
 # Trace-time sort accounting for the sort-once engine. Because the heavy
-# paths run under jit, the counter measures how many multi-key lexsort OPS a
-# traced computation contains (incremented when lexsort_rows is traced), not
-# per-step executions — which is exactly the pass-count the paper's cost
-# model cares about. Tests call the un-jitted functions and assert deltas.
-SORT_STATS = {"lexsorts": 0}
+# paths run under jit, the counters measure how many multi-key lexsort OPS
+# (incremented when lexsort_rows is traced) and append-scatter OPS
+# (append_block) a traced computation contains, not per-step executions —
+# which is exactly the pass-count the paper's cost model cares about.
+# Tests call the un-jitted functions and assert deltas; the Tier J BFS
+# level budget is 1 lexsort + 1 scatter (constructs._bfs_level).
+SORT_STATS = {"lexsorts": 0, "scatters": 0}
 
 
 def reset_sort_stats() -> None:
-    SORT_STATS["lexsorts"] = 0
+    for k in SORT_STATS:
+        SORT_STATS[k] = 0
 
 
 def sentinel_rows(n: int, width: int) -> jax.Array:
@@ -164,6 +167,7 @@ def append_block(buf: jax.Array, count: jax.Array, block: jax.Array, valid: jax.
     ``overflow`` is set so callers can re-run with a larger capacity (the
     Python-level "growth" path; see DESIGN.md §2 static-shape note).
     """
+    SORT_STATS["scatters"] += 1
     cap = buf.shape[0]
     nvalid = jnp.sum(valid.astype(jnp.int32))
     # Destination of each valid row; invalid rows target ``cap`` → dropped.

@@ -20,7 +20,15 @@ is exactly VPU-shaped work:
                         packed table must fit VMEM (callers tile by shard,
                         which the Roomy layout already provides).
 
-Both have pure-jnp oracles in ref.py and interpret-mode CPU validation in
+  bitpack_mark_rotate_count
+                        the two fused into ONE kernel — the whole per-level
+                        array pass of the implicit BFS: scatter the marks,
+                        then LUT-rotate and count in the same VMEM
+                        residency, so the packed table crosses HBM once per
+                        level instead of twice (the Tier J twin of the disk
+                        pass planner's fused read-write pass).
+
+All have pure-jnp oracles in ref.py and interpret-mode CPU validation in
 tests/test_kernels.py; ops.py hosts the dispatching wrappers.
 """
 from __future__ import annotations
@@ -146,6 +154,23 @@ def _scatter_mark_kernel(idx_ref, tab_ref, out_ref, *, bm: int, n_words: int,
     jax.lax.fori_loop(0, bm, body, 0)
 
 
+def _scatter_prep(packed: jax.Array, idx: jax.Array, block_m: int):
+    """Shared op-index padding/clipping + table staging for the scatter
+    kernels: OOB/negative indices retarget the trash row ``n_words``."""
+    n_words = packed.shape[0]
+    m = idx.shape[0]
+    bm = min(block_m, max(m, 1))
+    m_pad = -(-max(m, 1) // bm) * bm
+    cap = n_words * FIELDS_PER_WORD
+    idx = jnp.where((idx >= 0) & (idx < cap), idx, cap)
+    if m_pad != m:
+        idx = jnp.pad(idx, (0, m_pad - m), constant_values=cap)
+    idx = idx.astype(jnp.int32).reshape(m_pad, 1)
+    tab = jnp.concatenate([packed.astype(jnp.uint32),
+                           jnp.zeros((1,), jnp.uint32)]).reshape(-1, 1)
+    return idx, tab, bm, m_pad
+
+
 def bitpack_scatter_mark(
     packed: jax.Array,       # (W,) uint32 — must fit VMEM as (W+1, 1)
     idx: jax.Array,          # (M,) int32 element indices; OOB/negative drop
@@ -159,16 +184,7 @@ def bitpack_scatter_mark(
     delayed-mark apply of the implicit BFS).  Duplicate indices are safe —
     the first mark wins and later ones see ``mark`` ≠ ``only_if``."""
     n_words = packed.shape[0]
-    m = idx.shape[0]
-    bm = min(block_m, max(m, 1))
-    m_pad = -(-max(m, 1) // bm) * bm
-    cap = n_words * FIELDS_PER_WORD
-    idx = jnp.where((idx >= 0) & (idx < cap), idx, cap)
-    if m_pad != m:
-        idx = jnp.pad(idx, (0, m_pad - m), constant_values=cap)
-    idx = idx.astype(jnp.int32).reshape(m_pad, 1)
-    tab = jnp.concatenate([packed.astype(jnp.uint32),
-                           jnp.zeros((1,), jnp.uint32)]).reshape(-1, 1)
+    idx, tab, bm, m_pad = _scatter_prep(packed, idx, block_m)
 
     kernel = functools.partial(_scatter_mark_kernel, bm=bm, n_words=n_words,
                                mark=mark, only_if=only_if)
@@ -188,3 +204,106 @@ def bitpack_scatter_mark(
         name="roomy_bitpack_scatter_mark",
     )(idx, tab)
     return out[:n_words, 0]
+
+
+# ------------------------------------------- fused mark + rotate + count
+
+def _mark_rotate_count_kernel(idx_ref, tab_ref, out_ref, cnt_ref, *, bm: int,
+                              n_words: int, mark: int, only_if: int,
+                              lut: int, count_val: int, nblocks: int):
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        out_ref[...] = tab_ref[...]
+        cnt_ref[0, 0] = jnp.int32(0)
+
+    def body(i, _):
+        elt = idx_ref[i, 0]
+        word = jnp.where(elt >= 0, elt // FIELDS_PER_WORD, n_words)
+        word = jnp.minimum(word, n_words)            # trash row for drops
+        sh = (2 * jnp.maximum(elt % FIELDS_PER_WORD, 0)).astype(jnp.uint32)
+        w = pl.load(out_ref, (pl.ds(word, 1), slice(None)))
+        field = (w >> sh) & jnp.uint32(3)
+        new_w = jnp.where(field == jnp.uint32(only_if),
+                          (w & ~(jnp.uint32(3) << sh))
+                          | (jnp.uint32(mark) << sh),
+                          w).astype(jnp.uint32)
+        pl.store(out_ref, (pl.ds(word, 1), slice(None)), new_w)
+        return 0
+
+    jax.lax.fori_loop(0, bm, body, 0)
+
+    # Last op block: the fully marked table is still resident in VMEM —
+    # rotate it through the LUT and count in place, saving the second HBM
+    # round trip a separate bitpack_lut_count pass would pay.
+    @pl.when(blk == nblocks - 1)
+    def _rotate_count():
+        w = out_ref[...]                             # (n_words + 1, 1)
+        live = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0) < n_words
+        acc = jnp.zeros_like(w)
+        total = jnp.zeros((), jnp.int32)
+        for j in range(FIELDS_PER_WORD):
+            f = (w >> (2 * j)) & 3
+            nf = (jnp.uint32(lut) >> (2 * f)) & 3
+            acc = acc | (nf << (2 * j))
+            total = total + jnp.sum(
+                jnp.where(live, (nf == count_val).astype(jnp.int32), 0))
+        # The trash row soaked up dropped marks; leave it un-rotated (it is
+        # sliced away by the wrapper) and keep it out of the count.
+        out_ref[...] = jnp.where(live, acc, w)
+        cnt_ref[0, 0] = total
+
+
+def bitpack_mark_rotate_count(
+    packed: jax.Array,       # (W,) uint32 — must fit VMEM as (W+1, 1)
+    idx: jax.Array,          # (M,) int32 element indices; OOB/negative drop
+    lut: int,                # make_lut(...) scalar (static)
+    count_val: int,          # field value to count after mapping (static)
+    *,
+    mark: int = 2,
+    only_if: int = 0,
+    block_m: int = DEFAULT_BM,
+    interpret: bool = False,
+):
+    """The implicit BFS's whole per-level array pass as ONE kernel:
+    ``packed[idx] ← mark`` where the field holds ``only_if`` (delayed-mark
+    apply, duplicates/OOB safe as in bitpack_scatter_mark), then every
+    field maps through ``lut`` and fields mapping to ``count_val`` are
+    counted — over ALL W·16 fields; callers owning fewer logical elements
+    correct for their tail fields (core/bitarray.py mark_rotate_count).
+    Returns (new_packed (W,) uint32, count () int32).
+
+    Equivalent to bitpack_scatter_mark followed by bitpack_lut_count, but
+    the packed table crosses HBM once instead of twice per level.
+    """
+    n_words = packed.shape[0]
+    idx, tab, bm, m_pad = _scatter_prep(packed, idx, block_m)
+
+    kernel = functools.partial(_mark_rotate_count_kernel, bm=bm,
+                               n_words=n_words, mark=mark, only_if=only_if,
+                               lut=lut, count_val=count_val,
+                               nblocks=m_pad // bm)
+    out, cnt = pl.pallas_call(
+        kernel,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n_words + 1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_words + 1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_words + 1, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="roomy_bitpack_mark_rotate_count",
+    )(idx, tab)
+    return out[:n_words, 0], cnt[0, 0]

@@ -151,3 +151,20 @@ def bitpack_scatter_mark(packed, idx, *, mark=2, only_if=0, impl="auto",
                                         only_if=only_if, block_m=block_m,
                                         interpret=(mode == "interpret"))
     return _ref.bitpack_scatter_mark_ref(packed, idx, mark, only_if)
+
+
+@functools.partial(jax.jit, static_argnames=("lut", "count_val", "mark",
+                                             "only_if", "impl", "block_m"))
+def bitpack_mark_rotate_count(packed, idx, lut, count_val, *, mark=2,
+                              only_if=0, impl="auto", block_m=256):
+    """Fused scatter-mark + lut-rotate + count — the implicit BFS's whole
+    per-level array pass in one kernel (one HBM traversal of the packed
+    words instead of two).  Semantics are exactly bitpack_scatter_mark
+    followed by bitpack_lut_count; the count covers ALL W·16 fields."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _bp.bitpack_mark_rotate_count(
+            packed, idx, lut, count_val, mark=mark, only_if=only_if,
+            block_m=block_m, interpret=(mode == "interpret"))
+    return _ref.bitpack_mark_rotate_count_ref(packed, idx, lut, count_val,
+                                              mark, only_if)

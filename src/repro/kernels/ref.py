@@ -271,3 +271,11 @@ def bitpack_scatter_mark_ref(packed, idx, mark, only_if):
     new_val = jnp.where(tgt_val == only_if, jnp.uint32(mark), tgt_val)
     fields = fields.at[idx].set(new_val, mode="drop")
     return jnp.sum(fields.reshape(w, 16) << shifts, axis=1).astype(jnp.uint32)
+
+
+def bitpack_mark_rotate_count_ref(packed, idx, lut, count_val, mark, only_if):
+    """Oracle of the fused bitpack_mark_rotate_count: the scatter-mark
+    oracle followed by the lut+count oracle (the two passes the fused
+    kernel collapses into one table residency)."""
+    marked = bitpack_scatter_mark_ref(packed, idx, mark, only_if)
+    return bitpack_lut_count_ref(marked, lut, count_val)

@@ -1,0 +1,234 @@
+"""The benchmark-regression gate (benchmarks/compare.py) — parsing and
+pass/fail decisions.  Pure stdlib on both sides, so this runs in the
+minimal CI image and in the no-hypothesis matrix leg."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.append(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.compare import (compare, load_merged, main,  # noqa: E402
+                                parse_derived)
+
+
+def _record(rows):
+    return {"timestamp": 0.0, "errors": {},
+            "sections": {"bfs": [{"name": n, "us_per_call": 1.0,
+                                  "derived": d} for n, d in rows.items()]}}
+
+
+def _write(tmp_path, name, rows):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(_record(rows), f)
+    return path
+
+
+class TestParseDerived:
+    def test_counters_and_throughput(self):
+        thr, cnt = parse_derived(
+            "936 level states/s sorts/expansion=1.00 bytes/level=1.75e+05 "
+            "speedup_vs_unfused=1.86x")
+        assert thr == 936.0
+        assert cnt == {"sorts/expansion": 1.0, "bytes/level": 1.75e5}
+
+    def test_plain_states_per_s_and_ratio_skip(self):
+        thr, cnt = parse_derived(
+            "39.3 states/s lexsorts/level=0 bytes/level=64 "
+            "speedup_vs_fused=0.90x")
+        assert thr == 39.3
+        assert cnt == {"lexsorts/level": 0.0, "bytes/level": 64.0}
+
+    def test_no_throughput(self):
+        thr, cnt = parse_derived("passes/level=1.17")
+        assert thr is None and cnt == {"passes/level": 1.17}
+
+
+class TestGate:
+    BASE = {
+        "bfs_a": "1000 level states/s sorts/expansion=1.00 bytes/level=100",
+        "bfs_b": "500 states/s lexsorts/level=1 scatters/level=1",
+        "bfs_c": "200 states/s",
+    }
+
+    def test_identical_passes(self, tmp_path):
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", self.BASE)
+        assert compare(f, b, 0.25, 0.02) == 0
+
+    def test_uniform_slowdown_passes(self, tmp_path):
+        # a 3x slower CI runner shifts every row: median-normalized, clean
+        slow = {
+            "bfs_a": "333 level states/s sorts/expansion=1.00 bytes/level=100",
+            "bfs_b": "167 states/s lexsorts/level=1 scatters/level=1",
+            "bfs_c": "67 states/s",
+        }
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", slow)
+        assert compare(f, b, 0.25, 0.02) == 0
+
+    def test_single_row_regression_fails(self, tmp_path):
+        # one engine regressing 2x while the others hold trips the gate
+        # even though the machine is otherwise identical
+        bad = dict(self.BASE)
+        bad["bfs_a"] = ("400 level states/s sorts/expansion=1.00 "
+                        "bytes/level=100")
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", bad)
+        assert compare(f, b, 0.25, 0.02) == 1
+
+    def test_counter_increase_fails(self, tmp_path):
+        # the budgets are exact: one extra lexsort per level is red
+        bad = dict(self.BASE)
+        bad["bfs_b"] = "500 states/s lexsorts/level=2 scatters/level=1"
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", bad)
+        assert compare(f, b, 0.25, 0.02) == 1
+
+    def test_byte_counter_increase_fails(self, tmp_path):
+        bad = dict(self.BASE)
+        bad["bfs_a"] = ("1000 level states/s sorts/expansion=1.00 "
+                        "bytes/level=150")
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", bad)
+        assert compare(f, b, 0.25, 0.02) == 1
+
+    def test_counter_decrease_passes(self, tmp_path):
+        good = dict(self.BASE)
+        good["bfs_a"] = ("1000 level states/s sorts/expansion=1.00 "
+                         "bytes/level=50")
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", good)
+        assert compare(f, b, 0.25, 0.02) == 0
+
+    def test_missing_row_fails_new_row_passes(self, tmp_path):
+        fewer = {k: v for k, v in self.BASE.items() if k != "bfs_c"}
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", fewer)
+        assert compare(f, b, 0.25, 0.02) == 1
+        more = dict(self.BASE)
+        more["bfs_new"] = "123 states/s bytes/level=1"
+        f2 = _write(tmp_path, "fresh2.json", more)
+        assert compare(f2, b, 0.25, 0.02) == 0
+
+    def test_majority_speedup_spares_untouched_rows(self, tmp_path):
+        # a PR that makes most rows faster must not flag the rows it never
+        # touched: their raw ratio is ~1.0, which vouches for them even
+        # though they fall below the (now faster) median
+        faster = {
+            "bfs_a": "3000 level states/s sorts/expansion=1.00 bytes/level=100",
+            "bfs_b": "1500 states/s lexsorts/level=1 scatters/level=1",
+            "bfs_c": "200 states/s",               # untouched
+        }
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", faster)
+        assert compare(f, b, 0.25, 0.02) == 0
+
+    FAMILIES = {
+        "bfs_x_tierD_fused": "1000 level states/s",
+        "bfs_y_tierD_implicit": "4000 level states/s",
+        "bfs_z_tierD_unfused": "500 level states/s",
+        "bfs_x_tierJ_fused": "50 states/s",
+        "bfs_y_tierJ_implicit": "40 states/s",
+        "bfs_z_tierJ_unfused": "45 states/s",
+    }
+
+    def test_family_wide_drift_passes(self, tmp_path):
+        # a jax release slowing every compile-bound tierJ row 2x while the
+        # I/O-bound tierD rows hold: each family normalizes against its
+        # own median, so nothing is flagged
+        drift = dict(self.FAMILIES)
+        drift["bfs_x_tierJ_fused"] = "25 states/s"
+        drift["bfs_y_tierJ_implicit"] = "20 states/s"
+        drift["bfs_z_tierJ_unfused"] = "22.5 states/s"
+        b = _write(tmp_path, "base.json", self.FAMILIES)
+        f = _write(tmp_path, "fresh.json", drift)
+        assert compare(f, b, 0.25, 0.02) == 0
+
+    def test_single_row_regression_within_family_fails(self, tmp_path):
+        bad = dict(self.FAMILIES)
+        bad["bfs_y_tierD_implicit"] = "1500 level states/s"   # 2.7x slower
+        b = _write(tmp_path, "base.json", self.FAMILIES)
+        f = _write(tmp_path, "fresh.json", bad)
+        assert compare(f, b, 0.25, 0.02) == 1
+
+    def test_best_of_merge_rescues_one_noisy_run(self, tmp_path):
+        # one fresh run caught a transient slow window on one row; the
+        # second run's clean sample wins the merge and the gate stays green
+        noisy = dict(self.BASE)
+        noisy["bfs_a"] = ("300 level states/s sorts/expansion=1.00 "
+                         "bytes/level=100")
+        b = _write(tmp_path, "base.json", self.BASE)
+        f1 = _write(tmp_path, "fresh1.json", noisy)
+        f2 = _write(tmp_path, "fresh2.json", self.BASE)
+        assert compare(f1, b, 0.25, 0.02) == 1          # alone: red
+        assert compare([f1, f2], b, 0.25, 0.02) == 0    # merged: green
+        merged = load_merged([f1, f2])
+        assert merged["bfs_a"] == self.BASE["bfs_a"]
+
+    def test_merge_cannot_mask_counter_increase(self, tmp_path):
+        # a faster sample with a WORSE counter must still fail the gate:
+        # counters are deterministic, so both fresh runs carry the increase
+        worse = dict(self.BASE)
+        worse["bfs_b"] = "990 states/s lexsorts/level=2 scatters/level=1"
+        worse2 = dict(self.BASE)
+        worse2["bfs_b"] = "980 states/s lexsorts/level=2 scatters/level=1"
+        b = _write(tmp_path, "base.json", self.BASE)
+        f1 = _write(tmp_path, "fresh1.json", worse)
+        f2 = _write(tmp_path, "fresh2.json", worse2)
+        assert compare([f1, f2], b, 0.25, 0.02) == 1
+
+    def test_counter_increase_in_losing_sample_still_fails(self, tmp_path):
+        # budgets are checked in EVERY record: even when the sample carrying
+        # the increase loses the throughput merge, the gate goes red
+        worse_but_slower = dict(self.BASE)
+        worse_but_slower["bfs_b"] = ("400 states/s lexsorts/level=2 "
+                                     "scatters/level=1")
+        b = _write(tmp_path, "base.json", self.BASE)
+        f1 = _write(tmp_path, "fresh1.json", worse_but_slower)
+        f2 = _write(tmp_path, "fresh2.json", self.BASE)   # clean, wins merge
+        assert compare([f1, f2], b, 0.25, 0.02) == 1
+
+    def test_empty_baseline_is_schema_error(self, tmp_path):
+        b = _write(tmp_path, "base.json", {})
+        f = _write(tmp_path, "fresh.json", self.BASE)
+        assert compare(f, b, 0.25, 0.02) == 2
+
+    def test_update_baseline_path(self, tmp_path):
+        b = _write(tmp_path, "base.json", {"bfs_a": "1 states/s"})
+        f = _write(tmp_path, "fresh.json", self.BASE)
+        assert main([f, b, "--update-baseline"]) == 0
+        # the installed baseline is the section-scoped merged form and
+        # round-trips through the gate cleanly
+        assert compare(f, b, 0.25, 0.02) == 0
+        with open(b) as fh:
+            installed = json.load(fh)
+        assert set(installed["sections"]) == {"bfs"}
+        assert installed["errors"] == {}
+        # refuses to install an empty baseline
+        empty = _write(tmp_path, "empty.json", {})
+        assert main([empty, b, "--update-baseline"]) == 2
+
+    def test_update_baseline_scopes_to_section(self, tmp_path):
+        # a full run.py sweep carries other sections; installing it as the
+        # baseline must keep only the gated section, or CI's --only bfs
+        # runs would be permanently red with "rows missing"
+        full = _record(self.BASE)
+        full["sections"]["moe"] = [{"name": "moe_dispatch",
+                                    "us_per_call": 1.0,
+                                    "derived": "9 states/s"}]
+        path = str(tmp_path / "full.json")
+        with open(path, "w") as f:
+            json.dump(full, f)
+        b = str(tmp_path / "base.json")
+        assert main([path, b, "--update-baseline"]) == 0
+        fresh_bfs_only = _write(tmp_path, "fresh.json", self.BASE)
+        assert compare(fresh_bfs_only, b, 0.25, 0.02) == 0
+
+    def test_cli_exit_codes(self, tmp_path):
+        b = _write(tmp_path, "base.json", self.BASE)
+        f = _write(tmp_path, "fresh.json", self.BASE)
+        assert main([f, b]) == 0
+        with pytest.raises(SystemExit):
+            main(["--nonsense"])

@@ -205,6 +205,36 @@ class TestBitpack:
         want = ref.bitpack_scatter_mark_ref(packed, idx, 2, 0)
         assert np.array_equal(np.asarray(got), np.asarray(want))
 
+    @pytest.mark.parametrize("bm", [4, 64])
+    def test_mark_rotate_count_matches_ref(self, bm):
+        # the fused per-level kernel ≡ scatter_mark ∘ lut_count, including
+        # duplicate / OOB / negative indices landing in the trash row
+        w, m = 40, 200
+        packed = jax.random.randint(jax.random.PRNGKey(3), (w,), 0,
+                                    1 << 30, dtype=jnp.int32).astype(jnp.uint32)
+        idx = jax.random.randint(jax.random.PRNGKey(4), (m,), -8,
+                                 w * 16 + 32, dtype=jnp.int32)
+        lut = 0 | (3 << 2) | (1 << 4) | (3 << 6)    # the BFS rotate LUT
+        got, gcnt = ops.bitpack_mark_rotate_count(
+            packed, idx, lut, 1, impl="interpret", block_m=bm)
+        want, wcnt = ref.bitpack_mark_rotate_count_ref(packed, idx, lut, 1,
+                                                       2, 0)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        assert int(gcnt) == int(wcnt)
+
+    def test_mark_rotate_count_pad_collision(self):
+        # count_val == lut[0]: the trash row must stay out of the count and
+        # the wrapper's tail-field correction must still hold
+        packed = jnp.asarray([0, 0xFFFFFFFF, 5], jnp.uint32)
+        lut = 0 | (0 << 2) | (2 << 4) | (1 << 6)
+        idx = jnp.asarray([0, 7, 7, -1, 3 * 16 + 5], jnp.int32)
+        got, gcnt = ops.bitpack_mark_rotate_count(packed, idx, lut, 0,
+                                                  impl="interpret")
+        want, wcnt = ref.bitpack_mark_rotate_count_ref(packed, idx, lut, 0,
+                                                       2, 0)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        assert int(gcnt) == int(wcnt)
+
 
 class TestMamba2SSD:
     """Chunked SSD (matmul) form vs the recurrence oracles (§Perf cell C)."""

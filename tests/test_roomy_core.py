@@ -164,6 +164,94 @@ class TestRoomyHashTable:
         assert int(ht.count) == 0
 
 
+class TestRoomyHashTableOpOrder:
+    """Tier J mirror of TestDiskHashTableOpOrder (test_disk_tier.py): the
+    op log executes sequentially per key within one sync window — DEL then
+    PUT resurrects, PUT then DEL removes — matching Tier D's
+    DiskHashTable.sync rule exactly (the ROADMAP alignment item)."""
+
+    @staticmethod
+    def _sum_sync(ht):
+        return HT.sync(ht, combine=lambda a, b: a + b,
+                       apply=lambda o, a, p: jnp.where(p, o + a, a))
+
+    def test_del_then_put_resurrects(self):
+        ht = HT.make(16, 1, 16, val_dtype=jnp.int32)
+        ht, _ = HT.insert(ht, jnp.array([[7]], jnp.uint32),
+                          jnp.array([1], jnp.int32))
+        ht, _ = HT.sync(ht)
+        ht, _ = HT.remove(ht, jnp.array([[7]], jnp.uint32))
+        ht, _ = HT.insert(ht, jnp.array([[7]], jnp.uint32),
+                          jnp.array([5], jnp.int32))
+        ht, _ = self._sum_sync(ht)
+        v, f = HT.lookup(ht, jnp.array([[7]], jnp.uint32))
+        assert bool(f[0])
+        # the DEL wiped the stored 1: the PUT applies as a fresh insert
+        assert int(v[0]) == 5
+        assert int(ht.count) == 1
+
+    def test_put_then_del_removes(self):
+        ht = HT.make(16, 1, 16, val_dtype=jnp.int32)
+        ht, _ = HT.insert(ht, jnp.array([[7]], jnp.uint32),
+                          jnp.array([1], jnp.int32))
+        ht, _ = HT.sync(ht)
+        ht, _ = HT.insert(ht, jnp.array([[7]], jnp.uint32),
+                          jnp.array([9], jnp.int32))
+        ht, _ = HT.remove(ht, jnp.array([[7]], jnp.uint32))
+        ht, _ = HT.sync(ht)
+        _, f = HT.lookup(ht, jnp.array([[7]], jnp.uint32))
+        assert not bool(f[0])
+        assert int(ht.count) == 0
+
+    def test_puts_after_del_combine_fresh(self):
+        ht = HT.make(16, 1, 16, val_dtype=jnp.int32)
+        ht, _ = HT.insert(ht, jnp.array([[3]], jnp.uint32),
+                          jnp.array([100], jnp.int32))
+        ht, _ = HT.sync(ht)
+        ht, _ = HT.remove(ht, jnp.array([[3]], jnp.uint32))
+        ht, _ = HT.insert(ht, jnp.array([[3], [3]], jnp.uint32),
+                          jnp.array([2, 3], jnp.int32))
+        ht, _ = self._sum_sync(ht)
+        v, f = HT.lookup(ht, jnp.array([[3]], jnp.uint32))
+        assert bool(f[0]) and int(v[0]) == 5    # 2+3, NOT 105: the 100 is gone
+        assert int(ht.count) == 1
+
+    def test_del_of_absent_key_is_noop(self):
+        ht = HT.make(16, 1, 16, val_dtype=jnp.int32)
+        ht, _ = HT.remove(ht, jnp.array([[42]], jnp.uint32))
+        ht, _ = HT.sync(ht)
+        _, f = HT.lookup(ht, jnp.array([[42]], jnp.uint32))
+        assert not bool(f[0]) and int(ht.count) == 0
+
+    def test_matches_tier_d_sequential_dict(self):
+        # seeded mixed PUT/DEL streams over 3 sync windows vs the
+        # sequential-per-key dict oracle (Tier D's documented semantics)
+        rng = np.random.default_rng(11)
+        for _ in range(3):
+            ht = HT.make(64, 1, 128, val_dtype=jnp.int32)
+            want = {}
+            for _wnd in range(3):
+                ops = [(int(rng.integers(0, 12)), int(rng.integers(0, 50)),
+                        bool(rng.random() < 0.3)) for _ in range(25)]
+                for k, v, d in ops:
+                    if d:
+                        ht, _ = HT.remove(ht, jnp.array([[k]], jnp.uint32))
+                        want.pop(k, None)
+                    else:
+                        ht, _ = HT.insert(ht, jnp.array([[k]], jnp.uint32),
+                                          jnp.array([v], jnp.int32))
+                        want[k] = want.get(k, 0) + v
+                ht, ov = self._sum_sync(ht)
+                assert not bool(ov)
+            assert int(ht.count) == len(want)
+            if want:
+                q = jnp.array([[k] for k in sorted(want)], jnp.uint32)
+                gv, gf = HT.lookup(ht, q)
+                assert bool(jnp.all(gf))
+                assert ([int(x) for x in np.asarray(gv)]
+                        == [want[k] for k in sorted(want)])
+
+
 class TestHelpers:
     @settings(max_examples=20, deadline=None)
     @given(rows_strategy(width=3, max_n=20))
