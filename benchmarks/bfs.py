@@ -110,6 +110,75 @@ def _bench_disk(tag: str, gen_np, start: np.uint32, want: List[int],
     return row, best_level
 
 
+def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
+                        n_states: int, chunk_rows: int, shards: int,
+                        repeats: int = 2):
+    """Sorted-list engine through the sharded runtime (inline workers —
+    the full bucket-exchange protocol without process-spawn noise, so the
+    counters stay deterministic for the regression gate).  Derived
+    reports sorts/expansion PER SHARD: the exchange must not add sort
+    work (≤ 1.00, exactly the single-process budget on every shard that
+    had a frontier)."""
+    levels = len(want) - 1
+    best_wall, best_level = 1e18, 1e18
+    for _ in range(repeats):
+        timed = _TimedGen(gen_np)
+        with tempfile.TemporaryDirectory() as wd:
+            extsort.reset_stats()
+            t0 = time.perf_counter()
+            sizes, vis = disk_bfs(wd, np.array([[start]], np.uint32),
+                                  timed, width=1, chunk_rows=chunk_rows,
+                                  nshards=shards, shard_mode="inline")
+            wall = time.perf_counter() - t0
+            assert sizes == want, (tag, sizes, want)
+            vis.destroy()
+        best_wall = min(best_wall, wall)
+        best_level = min(best_level, wall - timed.t)
+    # One seed sort pass (the single seed row lands on one shard); every
+    # other sort pass is a shard's per-level frontier sort.
+    spe = (extsort.STATS["sort_passes"] - 1) / ((levels + 1) * shards)
+    name = f"bfs_{tag}_tierD_sharded{shards}"
+    return (name, best_wall * 1e6,
+            f"{n_states/best_level:.3g} level states/s "
+            f"sorts/expansion={spe:.2f} rows_sorted="
+            f"{extsort.STATS['rows_sorted']}")
+
+
+def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
+                                 chunk_elems: int, shards: int,
+                                 repeats: int = 2):
+    """Implicit engine through the sharded runtime (inline workers).
+    passes/level is PER SHARD — the exchange must keep it at the fused
+    budget of 1.00 + the seed pass amortized."""
+    levels = len(want) - 1
+    start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
+    best_wall, best_level = 1e18, 1e18
+    arr_lvl = passes_lvl = 0.0
+    for _ in range(repeats):
+        timed = _TimedGen(bits_neighbors_np(n))
+        with tempfile.TemporaryDirectory() as wd:
+            DBA.reset_stats()
+            t0 = time.perf_counter()
+            sizes, bits = disk_implicit_bfs(
+                wd, n_total, [start_rank], timed,
+                chunk_elems=chunk_elems, nshards=shards, shard_mode="inline")
+            wall = time.perf_counter() - t0
+            assert sizes == want, (sizes, want)
+            bits.destroy()
+        best_wall = min(best_wall, wall)
+        best_level = min(best_level, wall - timed.t)
+        arr_lvl = (DBA.STATS["bytes_read"] + DBA.STATS["bytes_written"]
+                   - DBA.STATS["log_bytes_read"]
+                   - DBA.STATS["log_bytes_written"]) / (levels + 1)
+        passes_lvl = (DBA.STATS["sync_passes"] + DBA.STATS["scan_passes"]
+                      ) / ((levels + 1) * shards)
+    name = f"bfs_pancake{n}_tierD_implicit_sharded{shards}"
+    return (name, best_wall * 1e6,
+            f"{n_total/best_level:.3g} level states/s "
+            f"array_bytes/level={arr_lvl:.3g} "
+            f"passes/level={passes_lvl:.2f} sorts/expansion=0.00")
+
+
 def _ops_per_level(fused: bool):
     """Exact (lexsort, scatter) op counts of one Tier J level, measured by
     tracing the un-jitted composition on a tiny input (the jitted driver
@@ -175,7 +244,7 @@ def _bench_disk_implicit(n: int, want: List[int], n_total: int,
             best_level)
 
 
-def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
+def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
               ) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
 
@@ -218,6 +287,16 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14
                                            fused=False, repeats=repeats)
     rows.append((imp_u_row[0], imp_u_row[1],
                  imp_u_row[2] + f" speedup_vs_fused={t_i/t_iu:.2f}x"))
+
+    # ----------------------------------------- sharded runtime (tier D)
+    if shards >= 2:
+        rows.append(_bench_disk_sharded(f"pancake{n}", _gen_next_np(n),
+                                        start, want, total, chunk_rows,
+                                        shards, repeats=repeats))
+        rows.append(_bench_disk_implicit_sharded(n, want, total,
+                                                 chunk_elems=chunk_rows * 4,
+                                                 shards=shards,
+                                                 repeats=repeats))
 
     # Tier J rows are compile-dominated at small n (each repeat re-traces,
     # so every sample measures the same compile+run quantity); best-of-N

@@ -20,6 +20,9 @@ def main() -> None:
     ap.add_argument("--only", choices=("constructs", "pancake", "bfs",
                                        "disk", "moe", "lm"))
     ap.add_argument("--pancake-n", type=int, default=7)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="also benchmark the sharded Tier D runtime with "
+                         "N shards (bfs section; 0 = skip)")
     ap.add_argument("--json", metavar="PATH",
                     help="also dump results as JSON (the BENCH trajectory "
                          "record: {section: [{name, us_per_call, derived}]})")
@@ -32,7 +35,7 @@ def main() -> None:
         # hack, and an import failure there must not take down the other
         # sections (the try/except below only guards section execution).
         from . import bfs
-        return bfs.bench_bfs(args.pancake_n)
+        return bfs.bench_bfs(args.pancake_n, shards=args.shards)
 
     sections = {
         "constructs": lambda: constructs.bench_constructs(),

@@ -35,8 +35,16 @@ def mahonian(n):
     return t
 
 
-def gen_next_np(n):
-    def gen(chunk):
+class GenNextNp:
+    """Adjacent-transposition chunk expander — a picklable class (not a
+    closure) so the sharded disk BFS (``--shards N``, spawn workers) can
+    ship it to worker processes."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, chunk):
+        n = self.n
         codes = chunk[:, 0]
         perms = np.stack([(codes >> (4 * i)) & 0xF for i in range(n)],
                          axis=1).astype(np.int64)
@@ -49,7 +57,10 @@ def gen_next_np(n):
                 code |= sw[:, j].astype(np.uint32) << np.uint32(4 * j)
             outs.append(code)
         return np.concatenate(outs)[:, None]
-    return gen
+
+
+def gen_next_np(n):
+    return GenNextNp(n)
 
 
 def gen_next_jnp(n):
@@ -74,9 +85,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=6)
     ap.add_argument("--tier", choices=("j", "disk"), default="disk")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="distribute the disk-tier search over N shard "
+                         "workers")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12
+    assert args.shards == 1 or args.tier == "disk", \
+        "--shards is a disk-tier (Tier D) feature"
     total = math.factorial(n)
     start = np.uint32(sum(i << (4 * i) for i in range(n)))
     want = mahonian(n)
@@ -92,7 +108,8 @@ def main():
         with tempfile.TemporaryDirectory() as wd:
             sizes, all_lst = disk_bfs(wd, np.array([[start]], np.uint32),
                                       gen_next_np(n), width=1,
-                                      chunk_rows=1 << 13)
+                                      chunk_rows=1 << 13,
+                                      nshards=args.shards)
             all_lst.destroy()
 
     print("level sizes:", sizes)

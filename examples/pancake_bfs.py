@@ -26,8 +26,18 @@ def start_code(n):
     return np.uint32(sum(i << (4 * i) for i in range(n)))
 
 
-def gen_next_np(n):
-    def gen(chunk):
+class GenNextNp:
+    """All-prefix-flips chunk expander on the 4-bit packed encoding.
+
+    A class (not a closure) so instances PICKLE: the sharded disk BFS
+    (``--shards N``, spawn-mode ShardRuntime workers) ships the generator
+    to worker processes."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, chunk):
+        n = self.n
         codes = chunk[:, 0]
         perms = np.stack([(codes >> (4 * i)) & 0xF for i in range(n)],
                          axis=1).astype(np.int64)
@@ -40,7 +50,10 @@ def gen_next_np(n):
                 code |= flipped[:, i].astype(np.uint32) << np.uint32(4 * i)
             outs.append(code)
         return np.concatenate(outs)[:, None]
-    return gen
+
+
+def gen_next_np(n):
+    return GenNextNp(n)
 
 
 def gen_next_jnp(n):
@@ -65,11 +78,22 @@ def main():
     ap.add_argument("--n", type=int, default=7)
     ap.add_argument("--tier", choices=("j", "disk"), default="disk")
     ap.add_argument("--chunk-rows", type=int, default=1 << 14)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="run the disk tier distributed over N shard "
+                         "workers (multiprocess ShardRuntime)")
+    ap.add_argument("--shard-mode", choices=("spawn", "inline"),
+                    default="spawn")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the sharded level counts match a "
+                         "single-shard run")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12, "4-bit packing supports n <= 12"
+    assert args.shards == 1 or args.tier == "disk", \
+        "--shards is a disk-tier (Tier D) feature"
     total = math.factorial(n)
-    print(f"pancake n={n}: {total} states, tier={args.tier}")
+    print(f"pancake n={n}: {total} states, tier={args.tier}"
+          + (f", shards={args.shards}" if args.shards > 1 else ""))
 
     t0 = time.perf_counter()
     if args.tier == "j":
@@ -82,7 +106,8 @@ def main():
         with tempfile.TemporaryDirectory() as wd:
             sizes, all_lst = disk_bfs(
                 wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
-                width=1, chunk_rows=args.chunk_rows)
+                width=1, chunk_rows=args.chunk_rows, nshards=args.shards,
+                shard_mode=args.shard_mode)
             all_lst.destroy()
     dt = time.perf_counter() - t0
 
@@ -90,6 +115,15 @@ def main():
     print("level sizes:", sizes)
     print(f"diameter (max flips to sort): {len(sizes) - 1}")
     print(f"{total / dt:.0f} states/s ({dt:.2f}s)")
+
+    if args.check:
+        with tempfile.TemporaryDirectory() as wd:
+            want, all_lst = disk_bfs(
+                wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
+                width=1, chunk_rows=args.chunk_rows)
+            all_lst.destroy()
+        assert sizes == want, (sizes, want)
+        print("check: matches the single-shard level counts exactly")
 
 
 if __name__ == "__main__":

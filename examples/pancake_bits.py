@@ -32,9 +32,17 @@ from repro.core.disk import breadth_first_search as disk_bfs
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
 
-def neighbors_np(n: int):
-    """(m,) int64 ranks → (m, n-1) int64 neighbor ranks (all prefix flips)."""
-    def gen(idx: np.ndarray) -> np.ndarray:
+class NeighborsNp:
+    """(m,) int64 ranks → (m, n-1) int64 neighbor ranks (all prefix flips).
+
+    A class (not a closure) so instances PICKLE — the sharded implicit
+    BFS (``--shards N``) ships the generator to spawn-mode workers."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        n = self.n
         perms = R.unrank_np(n, np.asarray(idx, np.uint64))
         outs = []
         for k in range(2, n + 1):
@@ -42,7 +50,10 @@ def neighbors_np(n: int):
                                      axis=1)
             outs.append(R.rank_np(flipped).astype(np.int64))
         return np.stack(outs, axis=1)
-    return gen
+
+
+def neighbors_np(n: int):
+    return NeighborsNp(n)
 
 
 def neighbor_jnp(n: int):
@@ -76,11 +87,13 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
     return sizes
 
 
-def run(n: int, tier: str, chunk_elems: int, check: bool):
+def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
+        shard_mode: str = "spawn"):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
-          f"bit array = {-(-total // 4)} bytes packed")
+          f"bit array = {-(-total // 4)} bytes packed"
+          + (f", shards={shards}" if shards > 1 else ""))
 
     DBA.reset_stats()
     t0 = time.perf_counter()
@@ -94,12 +107,15 @@ def run(n: int, tier: str, chunk_elems: int, check: bool):
         with tempfile.TemporaryDirectory() as wd:
             sizes, bits = disk_implicit_bfs(
                 wd, total, [start_rank], neighbors_np(n),
-                chunk_elems=chunk_elems)
+                chunk_elems=chunk_elems, nshards=shards,
+                shard_mode=shard_mode)
             hist = bits.count_values()
             assert hist[0] == 0, "unreached states — graph not connected?"
             bits.destroy()
         io_line = (f"bytes touched: {DBA.STATS['bytes_read']} read "
-                   f"{DBA.STATS['bytes_written']} written")
+                   f"{DBA.STATS['bytes_written']} written"
+                   if shards == 1 else "(per-shard byte counters live in "
+                   "the workers; see benchmarks/bfs.py --shards)")
     dt = time.perf_counter() - t0
 
     assert sum(sizes) == total, "did not enumerate the full graph!"
@@ -112,9 +128,20 @@ def run(n: int, tier: str, chunk_elems: int, check: bool):
     print(f"{total / dt:.0f} states/s ({dt:.2f}s)  {io_line}")
 
     if check:
-        want = sorted_list_levels(n)
-        assert sizes == want, (sizes, want)
-        print("check: matches sorted-list BFS level counts exactly")
+        if shards > 1:
+            # Sharded vs single-shard: the distribution must not move a
+            # single state across levels.
+            with tempfile.TemporaryDirectory() as wd:
+                want, bits = disk_implicit_bfs(
+                    wd, total, [start_rank], neighbors_np(n),
+                    chunk_elems=chunk_elems)
+                bits.destroy()
+            assert sizes == want, (sizes, want)
+            print("check: matches the single-shard level counts exactly")
+        else:
+            want = sorted_list_levels(n)
+            assert sizes == want, (sizes, want)
+            print("check: matches sorted-list BFS level counts exactly")
 
 
 def main():
@@ -122,11 +149,21 @@ def main():
     ap.add_argument("--n", type=int, default=9)
     ap.add_argument("--tier", choices=("j", "disk"), default="disk")
     ap.add_argument("--chunk-elems", type=int, default=1 << 20)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="distribute the bit array over N shard workers "
+                         "(disk tier only)")
+    ap.add_argument("--shard-mode", choices=("spawn", "inline"),
+                    default="spawn")
     ap.add_argument("--check", action="store_true",
-                    help="cross-validate vs the sorted-list engine (n<=8)")
+                    help="cross-validate: vs the sorted-list engine "
+                         "(n<=8), or vs a single-shard run when "
+                         "--shards > 1")
     args = ap.parse_args()
     assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
-    run(args.n, args.tier, args.chunk_elems, args.check)
+    assert args.shards == 1 or args.tier == "disk", \
+        "--shards is a disk-tier (Tier D) feature"
+    run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
+        args.shard_mode)
 
 
 if __name__ == "__main__":

@@ -15,11 +15,26 @@ See DESIGN.md. Submodules:
   sharding    owner maps + mesh placement helpers
   paged       Roomy paged-KV store for long-context decode
   disk        Tier D — the paper-faithful out-of-core implementation
+
+Submodules load lazily (PEP 562): the Tier J modules pull in jax, and the
+multiprocess shard workers of ``disk/cluster.py`` import this package only
+to reach the pure-numpy disk tier — an eager jax import would tax every
+worker spawn (and every ``spawn``-pickled function they unpickle) for
+modules the worker never touches.
 """
-from . import (array, bitarray, constructs, delayed, hashtable, paged,
-               ranking, rlist, rset, sharding, types)
+import importlib
 
 __all__ = [
-    "array", "bitarray", "constructs", "delayed", "hashtable", "paged",
-    "ranking", "rlist", "rset", "sharding", "types",
+    "array", "bitarray", "constructs", "delayed", "disk", "hashtable",
+    "paged", "ranking", "rlist", "rset", "sharding", "types",
 ]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

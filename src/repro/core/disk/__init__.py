@@ -5,6 +5,9 @@ DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 """
 from .bfs import breadth_first_search, implicit_bfs, level_step
 from .bitarray import DiskBitArray
+from .buckets import block_owner_np, hash_owner_np, hash_rows_np
+from .cluster import (ShardedDiskBitArray, ShardedDiskHashTable,
+                      ShardedDiskList, ShardRuntime)
 from .darray import DiskArray
 from .dhash import DiskHashTable
 from .dlist import DiskList
@@ -16,7 +19,9 @@ from .store import ChunkStore
 
 __all__ = [
     "ChunkStore", "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
-    "MembershipProbe", "PassPlan", "SortedRunSet", "breadth_first_search",
-    "external_sort", "implicit_bfs", "level_step", "merge_difference",
-    "row_keys", "sort_rows", "stream_dedupe",
+    "MembershipProbe", "PassPlan", "ShardRuntime", "ShardedDiskBitArray",
+    "ShardedDiskHashTable", "ShardedDiskList", "SortedRunSet",
+    "block_owner_np", "breadth_first_search", "external_sort",
+    "hash_owner_np", "hash_rows_np", "implicit_bfs", "level_step",
+    "merge_difference", "row_keys", "sort_rows", "stream_dedupe",
 ]

@@ -99,6 +99,15 @@ def _merge_subtract(frontier_runs: List[ChunkStore],
     out.flush(mark_sorted=True)
 
 
+def _sharded_runtime(workdir: str, nshards: int, runtime, shard_mode: str):
+    """Resolve the (runtime, owns_it) pair for a sharded engine call."""
+    from .cluster import ShardRuntime
+    if runtime is not None:
+        return runtime, False
+    return ShardRuntime(os.path.join(workdir, "cluster"), nshards,
+                        mode=shard_mode), True
+
+
 def breadth_first_search(
     workdir: str,
     start_rows: np.ndarray,
@@ -111,6 +120,10 @@ def breadth_first_search(
     max_runs: int = 8,
     compaction: str = "full",
     size_ratio: int = 2,
+    nshards: int = 1,
+    runtime=None,
+    shard_mode: str = "spawn",
+    bucket_capacity=None,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
 
@@ -121,7 +134,30 @@ def breadth_first_search(
     seeds collapse) on both paths. ``compaction``/``size_ratio`` select the
     visited-set compaction policy (lsm.py: "full" re-merges everything,
     "tiered" only comparable-size runs).
+
+    With ``nshards > 1`` (or an explicit cluster.ShardRuntime via
+    ``runtime=``) the search runs distributed: states partition by
+    ``hash_owner``, every shard pays the fused per-level budget (one sort
+    pass over ITS raw frontier) on its own partition, and cross-shard
+    expansion rows travel through the disk bucket exchange.  Level counts
+    are identical to the single-process engine for any nshards.  In
+    spawn mode ``gen_next`` must be picklable; ``shard_mode="inline"``
+    runs the same protocol in-process (closure-friendly).
     """
+    if runtime is not None or nshards > 1:
+        if not fused:
+            raise ValueError("the sharded engine is fused-only: "
+                             "fused=False cannot combine with nshards>1 "
+                             "or runtime=")
+        from .cluster import sharded_bfs
+        rt, own = _sharded_runtime(workdir, nshards, runtime, shard_mode)
+        sizes, handle = sharded_bfs(
+            rt, start_rows, gen_next, width, chunk_rows=chunk_rows,
+            max_levels=max_levels, run_rows=run_rows, max_runs=max_runs,
+            compaction=compaction, size_ratio=size_ratio,
+            bucket_capacity=bucket_capacity)
+        handle._own_runtime = own
+        return sizes, handle
     if not fused:
         return _breadth_first_search_unfused(
             workdir, start_rows, gen_next, width, chunk_rows, max_levels)
@@ -186,6 +222,10 @@ def implicit_bfs(
     expand_batch: int = 1 << 16,
     log_buf_rows: int = 1 << 20,
     fused: bool = True,
+    nshards: int = 1,
+    runtime=None,
+    shard_mode: str = "spawn",
+    bucket_capacity=None,
 ):
     """The paper's *second* BFS engine: implicit search over a 2-bit array.
 
@@ -221,7 +261,29 @@ def implicit_bfs(
 
     Returns (level_sizes, bits) — ``bits`` holds the final DONE marks
     (distance parity is not recoverable; level_sizes is the histogram).
+
+    With ``nshards > 1`` (or ``runtime=``) the 2-bit array is
+    block-distributed over shard workers (``sharding.block_owner``); each
+    shard still pays exactly ONE fused read-write pass over ITS block per
+    level, and cross-shard marks ride the disk bucket exchange into the
+    owner's snapshot-isolated op log.  Level counts match the
+    single-process engine for any nshards.  In spawn mode
+    ``gen_neighbors`` must be picklable; ``shard_mode="inline"`` runs the
+    protocol in-process.
     """
+    if runtime is not None or nshards > 1:
+        if not fused:
+            raise ValueError("the sharded engine is fused-only: "
+                             "fused=False cannot combine with nshards>1 "
+                             "or runtime=")
+        from .cluster import sharded_implicit_bfs
+        rt, own = _sharded_runtime(workdir, nshards, runtime, shard_mode)
+        sizes, handle = sharded_implicit_bfs(
+            rt, n_states, start_idx, gen_neighbors, chunk_elems=chunk_elems,
+            max_levels=max_levels, expand_batch=expand_batch,
+            log_buf_rows=log_buf_rows, bucket_capacity=bucket_capacity)
+        handle._own_runtime = own
+        return sizes, handle
     bits = DiskBitArray(workdir, n_states, chunk_elems=chunk_elems,
                         name="bfs_bits", log_buf_rows=log_buf_rows)
     start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))

@@ -1,0 +1,222 @@
+"""Disk-backed delayed-op buckets — the paper's per-(src,dst) bucket files.
+
+Roomy ships every delayed operation to the disk that owns its target in
+fixed-capacity bucket files, one per (source, destination) pair, and applies
+them in a streaming batch at sync (paper §2–3).  Tier J already has the
+device-mesh analogue (``core/delayed.bin_by_dest`` + ``all_to_all``); this
+module is the Tier D original: real files on a filesystem shared by the
+shard workers (``cluster.py``), with the same conventions —
+
+  * a bucket holds at most ``capacity`` rows per exchange epoch; overflow
+    rows are *dropped and counted* exactly like ``bin_by_dest`` (callers
+    size the capacity for their tolerance, and ``ShardRuntime.sync()``
+    surfaces the exact totals),
+  * rows are fixed-width records of one numpy dtype, appended raw (no
+    header) so spills cost O(spill) bytes,
+  * a writer accumulates into ``*.tmp`` files during the epoch and
+    *seals* them (atomic rename) at sync: a worker killed mid-epoch
+    leaves only ``.tmp`` strays, which readers ignore and
+    :func:`cleanup_strays` removes.  A sealed file is immutable; the
+    destination deletes it after applying.
+
+Owner functions
+---------------
+The numpy owner maps live here (this package is jax-free — worker
+processes must not pay a jax import to route rows).  They are mirrors of
+the Tier J maps in ``core/sharding.py`` and MUST stay bit-identical to
+them: a worker disagreeing with the coordinator about ownership silently
+corrupts a sharded structure.  ``tests/test_cluster.py`` pins both sides
+to golden values.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "hash_rows_np", "hash_owner_np", "block_owner_np", "block_size",
+    "BucketWriter", "iter_incoming", "incoming_files", "cleanup_strays",
+]
+
+
+# ------------------------------------------------------------- owner maps
+
+def hash_rows_np(rows: np.ndarray, seed: int = 0x9E3779B9) -> np.ndarray:
+    """Numpy mirror of ``types.hash_rows`` — same FNV-ish mix, bit for bit."""
+    rows = np.asarray(rows)
+    h = np.full(rows.shape[:-1], np.uint32(seed), np.uint32)
+    with np.errstate(over="ignore"):
+        for j in range(rows.shape[-1]):
+            w = rows[..., j].astype(np.uint32)
+            h = (h ^ w) * np.uint32(0x01000193)
+            h = h ^ (h >> np.uint32(15))
+        h = h * np.uint32(0x85EBCA6B)
+    return h ^ (h >> np.uint32(13))
+
+
+def hash_owner_np(rows: np.ndarray, nshards: int) -> np.ndarray:
+    """Owner shard of an element/key row under hash distribution."""
+    return (hash_rows_np(rows) % np.uint32(nshards)).astype(np.int32)
+
+
+def block_size(n: int, nshards: int) -> int:
+    """Rows per shard under block distribution (ceil — last shard short)."""
+    return -(-n // nshards)
+
+
+def block_owner_np(idx: np.ndarray, n: int, nshards: int) -> np.ndarray:
+    """Owner shard of array index idx under block distribution."""
+    per = block_size(n, nshards)
+    return (np.asarray(idx, np.int64) // per).astype(np.int32)
+
+
+# ---------------------------------------------------------- file protocol
+#
+# Final (sealed) bucket: e{epoch:06d}_s{src:03d}_d{dst:03d}.bin
+# In-flight bucket:      the same + ".tmp"  (ignorable garbage if orphaned)
+
+def _bucket_name(epoch: int, src: int, dst: int) -> str:
+    return f"e{epoch:06d}_s{src:03d}_d{dst:03d}.bin"
+
+
+class BucketWriter:
+    """One source's outgoing per-destination buckets for the current epoch.
+
+    ``put(dest, rows)`` buffers rows toward their destination shard,
+    spilling to the ``.tmp`` file past ``buf_rows`` buffered rows so an
+    epoch's traffic never outgrows RAM.  ``seal(epoch)`` flushes, renames
+    every ``.tmp`` to its final epoch-stamped name (the atomic publish the
+    destination's reader looks for) and returns the exact number of rows
+    dropped to the capacity limit, per destination.
+    """
+
+    def __init__(self, root: str, src: int, nshards: int, width: int,
+                 dtype="int64", capacity: Optional[int] = None,
+                 buf_rows: int = 1 << 15):
+        os.makedirs(root, exist_ok=True)
+        self.root = root
+        self.src = int(src)
+        self.nshards = int(nshards)
+        self.width = int(width)
+        self.dtype = np.dtype(dtype)
+        self.capacity = None if capacity is None else int(capacity)
+        self.buf_rows = int(buf_rows)
+        self._bufs: List[List[np.ndarray]] = [[] for _ in range(nshards)]
+        self._nbuf = 0
+        # Rows accepted / dropped per destination THIS epoch.
+        self._accepted = np.zeros(nshards, np.int64)
+        self._dropped = np.zeros(nshards, np.int64)
+
+    def _tmp_path(self, dst: int) -> str:
+        # The epoch is stamped at seal time; one in-flight file per dst.
+        return os.path.join(self.root, f"s{self.src:03d}_d{dst:03d}.bin.tmp")
+
+    def put(self, dest: np.ndarray, rows: np.ndarray) -> None:
+        """Route rows to their destination buckets.  dest: (m,) shard ids in
+        [0, nshards); rows: (m, width).  Rows past a destination's epoch
+        capacity are dropped and counted (the bin_by_dest convention)."""
+        dest = np.asarray(dest, np.int64).reshape(-1)
+        rows = np.ascontiguousarray(rows, self.dtype).reshape(-1, self.width)
+        assert dest.shape[0] == rows.shape[0]
+        if not dest.shape[0]:
+            return
+        order = np.argsort(dest, kind="stable")
+        dest, rows = dest[order], rows[order]
+        bounds = np.searchsorted(dest, np.arange(self.nshards + 1))
+        for d in range(self.nshards):
+            lo, hi = bounds[d], bounds[d + 1]
+            if hi <= lo:
+                continue
+            take = hi - lo
+            if self.capacity is not None:
+                room = max(0, self.capacity - int(self._accepted[d]))
+                if take > room:
+                    self._dropped[d] += take - room
+                    take = room
+            if take:
+                self._bufs[d].append(rows[lo:lo + take])
+                self._accepted[d] += take
+                self._nbuf += take
+        if self._nbuf >= self.buf_rows:
+            self._spill()
+
+    def _spill(self) -> None:
+        for d, buf in enumerate(self._bufs):
+            if not buf:
+                continue
+            rec = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+            with open(self._tmp_path(d), "ab") as f:
+                f.write(np.ascontiguousarray(rec, self.dtype).tobytes())
+            self._bufs[d] = []
+        self._nbuf = 0
+
+    def seal(self, epoch: int) -> np.ndarray:
+        """Publish this epoch's buckets (atomic renames) and reset.
+
+        Returns the (nshards,) per-destination dropped counts for the
+        epoch.  Destinations that received no rows publish no file — the
+        reader treats absence as an empty bucket."""
+        self._spill()
+        for d in range(self.nshards):
+            tmp = self._tmp_path(d)
+            if os.path.exists(tmp):
+                os.replace(tmp, os.path.join(
+                    self.root, _bucket_name(epoch, self.src, d)))
+        dropped = self._dropped.copy()
+        self._accepted[:] = 0
+        self._dropped[:] = 0
+        return dropped
+
+
+# ----------------------------------------------------------------- reader
+
+def incoming_files(root: str, dst: int, epoch: int) -> List[Tuple[int, str]]:
+    """Sealed bucket files destined to ``dst`` for ``epoch``, as sorted
+    (src, path) pairs — ascending src, the deterministic apply order the
+    sharded hash table's per-key sequencing relies on."""
+    if not os.path.isdir(root):
+        return []
+    suffix = f"_d{dst:03d}.bin"
+    prefix = f"e{epoch:06d}_s"
+    out = []
+    for fn in os.listdir(root):
+        if fn.startswith(prefix) and fn.endswith(suffix):
+            out.append((int(fn[len(prefix):len(prefix) + 3]),
+                        os.path.join(root, fn)))
+    return sorted(out)
+
+
+def iter_incoming(root: str, dst: int, epoch: int, width: int,
+                  dtype="int64", consume: bool = True
+                  ) -> Iterator[Tuple[int, np.ndarray]]:
+    """Stream (src, rows) for every sealed bucket aimed at ``dst`` this
+    epoch, ascending src.  With ``consume=True`` each file is deleted
+    after it is yielded (the destination owns sealed files)."""
+    dt = np.dtype(dtype)
+    for src, path in incoming_files(root, dst, epoch):
+        rows = np.fromfile(path, dtype=dt)
+        assert rows.size % width == 0, f"torn bucket file {path}"
+        yield src, rows.reshape(-1, width)
+        if consume:
+            os.remove(path)
+
+
+# ---------------------------------------------------------------- cleanup
+
+def cleanup_strays(root: str) -> List[str]:
+    """Remove in-flight ``.tmp`` buckets orphaned by a killed worker.
+
+    Sealed files are NOT touched — an epoch sealed but not yet applied is
+    real queued data; only the runtime's ``fresh`` wipe discards those.
+    Returns the removed paths (tests assert on them)."""
+    removed = []
+    if not os.path.isdir(root):
+        return removed
+    for fn in sorted(os.listdir(root)):
+        if fn.endswith(".tmp"):
+            path = os.path.join(root, fn)
+            os.remove(path)
+            removed.append(path)
+    return removed

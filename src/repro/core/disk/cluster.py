@@ -1,0 +1,945 @@
+"""ShardRuntime — the multiprocess sharded Tier D runtime.
+
+The paper's promise is that "all aspects of parallelism and remote I/O are
+hidden within the library": a structure is partitioned over workers by a
+static owner function, delayed operations are buffered into per-(src,dst)
+bucket files (buckets.py), and a ``sync`` ships and applies them on the
+owner.  This module is that runtime for the disk tier:
+
+  * :class:`ShardRuntime` — N workers, each with its own shard root
+    directory, driven by a coordinator over command queues.  Two worker
+    modes: ``"spawn"`` (real processes, the production shape — spawn
+    start method, so every function and argument crossing the queue must
+    be picklable) and ``"inline"`` (the same code run sequentially in the
+    coordinator process — deterministic, closure-friendly, what the
+    equivalence tests sweep over nshards ∈ {1, 2, 4}).
+
+  * Sharded wrappers — :class:`ShardedDiskList` (hash-distributed),
+    :class:`ShardedDiskHashTable` (hash-distributed),
+    :class:`ShardedDiskBitArray` (block-distributed) — coordinator-side
+    handles whose delayed ops route through disk bucket files and apply
+    at sync via the existing op-log machinery (``dlist``/``dhash``/
+    ``bitarray``).  Bucket overflow is dropped-and-counted exactly like
+    Tier J's ``delayed.bin_by_dest``; :meth:`ShardRuntime.sync` surfaces
+    the exact totals per structure.
+
+  * Distributed BFS on both engines — :func:`sharded_bfs` (sorted-list)
+    and :func:`sharded_implicit_bfs` (2-bit array), reached through
+    ``disk.breadth_first_search(..., nshards=)`` / ``disk.implicit_bfs``.
+    Each shard sorts/traverses only its partition; frontier expansion is
+    bucket-exchanged to owners at the level barrier.  The PR 3 per-level
+    pass budgets hold PER SHARD: one sort pass over the shard's raw
+    frontier (sorted-list), one fused read-write array pass (implicit) —
+    the exchange adds bucket-file I/O, never an extra sort or traversal.
+
+Sync protocol (one structure, one epoch): the coordinator seals its own
+outgoing buckets, then runs two collective phases over the workers —
+*seal* (every worker publishes its outgoing buckets for the epoch; the
+phase completion is the barrier) and *apply* (every worker streams the
+sealed buckets addressed to it into its local structure's op log and
+syncs).  A worker killed mid-epoch leaves only ``.tmp`` bucket files,
+which readers ignore and a fresh runtime sweeps away.
+
+Ownership must be identical in every process: the owner maps live in
+buckets.py (numpy, jax-free) and are pinned to Tier J's
+``sharding.hash_owner`` / ``sharding.block_owner`` by golden-value tests.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import traceback
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from . import extsort
+from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
+from .bitarray import STATS as BITS_STATS
+from .buckets import (BucketWriter, block_owner_np, block_size, cleanup_strays,
+                      hash_owner_np, iter_incoming)
+from .dhash import DiskHashTable
+from .dlist import DiskList
+from .lsm import SortedRunSet
+from .passes import PassPlan
+from .store import ChunkStore
+
+__all__ = [
+    "ShardContext", "ShardRuntime", "ShardedDiskList", "ShardedDiskHashTable",
+    "ShardedDiskBitArray", "sharded_bfs", "sharded_implicit_bfs",
+]
+
+_MAP_TIMEOUT = 600.0          # seconds a collective phase may take
+
+
+# ============================================================== worker side
+
+class ShardContext:
+    """One worker's view of the runtime: its shard id, its private root
+    directory (every local ChunkStore/op-log lives under it), its cached
+    outgoing :class:`BucketWriter` per structure, and the registry of
+    local structure shards built up by coordinator commands."""
+
+    def __init__(self, shard: int, nshards: int, root: str):
+        self.shard = int(shard)
+        self.nshards = int(nshards)
+        self.root = root
+        self.dir = os.path.join(root, f"shard{shard:03d}")
+        os.makedirs(self.dir, exist_ok=True)
+        self.objects: dict = {}
+        self._writers: dict = {}
+
+    def exchange_dir(self, name: str) -> str:
+        return os.path.join(self.root, "exchange", name)
+
+    def writer(self, spec: dict) -> BucketWriter:
+        """The (cached) outgoing bucket writer for one structure."""
+        name = spec["name"]
+        if name not in self._writers:
+            self._writers[name] = BucketWriter(
+                self.exchange_dir(name), src=self.shard,
+                nshards=self.nshards, width=spec["rec_width"],
+                dtype=spec["rec_dtype"], capacity=spec.get("capacity"))
+        return self._writers[name]
+
+
+def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q) -> None:
+    """Command loop of one spawned worker.  Every command is a picklable
+    ``(fn, args)`` executed against the persistent :class:`ShardContext`;
+    exceptions travel back as formatted strings (tracebacks don't
+    pickle)."""
+    ctx = ShardContext(shard, nshards, root)
+    while True:
+        msg = cmd_q.get()
+        if msg is None:
+            return
+        fn, args = msg
+        try:
+            res_q.put((True, fn(ctx, *args)))
+        except BaseException:
+            res_q.put((False, traceback.format_exc()))
+
+
+def _w_noop(ctx: ShardContext) -> int:
+    return ctx.shard
+
+
+def _w_seal(ctx: ShardContext, spec: dict, epoch: int) -> int:
+    """Publish this worker's outgoing buckets for one structure/epoch."""
+    if spec["name"] not in ctx._writers:
+        return 0
+    return int(ctx.writer(spec).seal(epoch).sum())
+
+
+def _w_get_stats(ctx: ShardContext) -> dict:
+    """This worker's pass/byte ledgers (per-shard budget assertions)."""
+    return {"extsort": dict(extsort.STATS), "bits": dict(BITS_STATS)}
+
+
+def _w_reset_stats(ctx: ShardContext) -> None:
+    extsort.reset_stats()
+    for k in BITS_STATS:
+        BITS_STATS[k] = 0
+
+
+def _w_destroy(ctx: ShardContext, name: str) -> None:
+    obj = ctx.objects.pop(name, None)
+    if obj is not None:
+        obj.destroy()
+    ctx._writers.pop(name, None)
+
+
+# ========================================================== coordinator side
+
+class ShardRuntime:
+    """N shard workers plus the coordinator-side bucket plumbing.
+
+    mode="spawn"   real worker processes (multiprocessing spawn start
+                   method — safe under jax/threads).  Functions, specs
+                   and payloads crossing the queues must be picklable.
+    mode="inline"  the same worker functions run sequentially in this
+                   process — zero startup cost, closure-friendly; shard
+                   state still lives in per-shard directories and all
+                   exchange traffic still goes through bucket files, so
+                   it exercises the identical on-disk protocol.
+
+    The runtime owns ``root``: per-shard directories ``shard{k:03d}/``
+    and the shared ``exchange/`` bucket area.  ``fresh=True`` (default)
+    wipes leftovers from a previous (possibly killed) run; otherwise
+    only ignorable ``.tmp`` strays are swept.
+    """
+
+    def __init__(self, root: str, nshards: int, mode: str = "spawn",
+                 fresh: bool = True, timeout: float = _MAP_TIMEOUT):
+        assert nshards >= 1
+        assert mode in ("spawn", "inline"), mode
+        self.root = root
+        self.nshards = int(nshards)
+        self.mode = mode
+        self.timeout = timeout
+        self._broken = False     # set when a collective desynchronizes
+        self.epoch = 0
+        self._seq = 0
+        self._structs: dict = {}
+        exch = os.path.join(root, "exchange")
+        if fresh and os.path.isdir(exch):
+            shutil.rmtree(exch)
+        os.makedirs(exch, exist_ok=True)
+        for sub in sorted(os.listdir(exch)):
+            cleanup_strays(os.path.join(exch, sub))
+        # The coordinator acts as bucket source ``nshards`` (one past the
+        # worker ids) — its delayed ops ride the same files.
+        self.driver = ShardContext(self.nshards, self.nshards, root)
+        self._procs: List = []
+        self._cmd_qs: List = []
+        self._res_qs: List = []
+        self._inline_ctxs: List[ShardContext] = []
+        if mode == "inline":
+            self._inline_ctxs = [ShardContext(s, self.nshards, root)
+                                 for s in range(self.nshards)]
+        else:
+            import multiprocessing as mp
+            mpctx = mp.get_context("spawn")
+            for s in range(self.nshards):
+                cq, rq = mpctx.Queue(), mpctx.Queue()
+                p = mpctx.Process(target=_worker_main,
+                                  args=(s, self.nshards, root, cq, rq),
+                                  daemon=True)
+                p.start()
+                self._procs.append(p)
+                self._cmd_qs.append(cq)
+                self._res_qs.append(rq)
+
+    # ------------------------------------------------------------ plumbing
+    def next_epoch(self) -> int:
+        self.epoch += 1
+        return self.epoch
+
+    def next_name(self, prefix: str) -> str:
+        self._seq += 1
+        return f"{prefix}{self._seq}"
+
+    def _get_result(self, s: int, fn_name: str):
+        """Blocking result read from shard s, polling in short slices so a
+        dead worker is reported within seconds, not after the full
+        collective timeout."""
+        import queue as _queue
+        import time as _time
+        deadline = _time.monotonic() + self.timeout
+        while True:
+            try:
+                return self._res_qs[s].get(timeout=2.0)
+            except _queue.Empty:
+                if not self._procs[s].is_alive():
+                    raise RuntimeError(
+                        f"shard {s} died during {fn_name}") from None
+                if _time.monotonic() >= deadline:
+                    raise RuntimeError(
+                        f"shard {s} timed out during {fn_name}") from None
+
+    def map(self, fn: Callable, args: Optional[Sequence[tuple]] = None
+            ) -> list:
+        """Run ``fn(ctx, *args[s])`` on every shard; a completed map is the
+        runtime's collective barrier.  ``args`` is one tuple per shard
+        (or None for no arguments)."""
+        argl = list(args) if args is not None else [()] * self.nshards
+        assert len(argl) == self.nshards
+        if self.mode == "inline":
+            return [fn(ctx, *a) for ctx, a in zip(self._inline_ctxs, argl)]
+        if self._broken:
+            raise RuntimeError(
+                "ShardRuntime is desynchronized (a previous collective "
+                "timed out or lost a worker) — build a fresh runtime")
+        fn_name = getattr(fn, "__name__", str(fn))
+        for q, a in zip(self._cmd_qs, argl):
+            q.put((fn, tuple(a)))
+        outs, errors = [], []
+        for s in range(self.nshards):
+            try:
+                ok, val = self._get_result(s, fn_name)
+            except RuntimeError:
+                # Results may still be in flight: any further command
+                # would pair stale replies with new requests, so poison
+                # the runtime instead of silently desynchronizing.
+                self._broken = True
+                raise
+            if ok:
+                outs.append(val)
+            else:
+                errors.append(f"shard {s}:\n{val}")
+        if errors:
+            # Every shard answered — queues are still aligned, the
+            # runtime stays usable.
+            raise RuntimeError(f"worker failure in {fn_name}:\n"
+                               + "\n".join(errors))
+        return outs
+
+    def bcast(self, fn: Callable, *args) -> list:
+        """map() with the same (picklable) arguments on every shard."""
+        return self.map(fn, [tuple(args)] * self.nshards)
+
+    def barrier(self) -> None:
+        self.bcast(_w_noop)
+
+    # ------------------------------------------------------------ exchange
+    def exchange(self, spec: dict, apply_fn: Callable, *apply_args) -> dict:
+        """One delayed-op sync of one structure: seal everywhere (barrier),
+        then apply everywhere.  Returns {"dropped": n, "applied": [...]}
+        with the EXACT count of rows lost to bucket-capacity overflow
+        (coordinator + all workers), mirroring ``bin_by_dest``."""
+        epoch = self.next_epoch()
+        dropped = 0
+        if spec["name"] in self.driver._writers:
+            dropped += int(self.driver.writer(spec).seal(epoch).sum())
+        dropped += sum(self.bcast(_w_seal, spec, epoch))
+        applied = self.bcast(apply_fn, spec, epoch, *apply_args)
+        return {"dropped": dropped, "applied": applied}
+
+    def register(self, struct) -> None:
+        self._structs[struct.name] = struct
+
+    def sync(self) -> dict:
+        """Sync every registered sharded structure (default combine/apply);
+        returns {structure_name: exact_dropped_count}."""
+        return {name: s.sync() for name, s in self._structs.items()}
+
+    # ------------------------------------------------------------ lifecycle
+    def shutdown(self) -> None:
+        """Stop the workers (spawn mode).  Shard directories stay on disk."""
+        for q in self._cmd_qs:
+            try:
+                q.put(None)
+            except Exception:
+                pass
+        for p in self._procs:
+            p.join(timeout=30)
+            if p.is_alive():
+                p.terminate()
+        self._procs, self._cmd_qs, self._res_qs = [], [], []
+
+    def destroy(self) -> None:
+        """Shutdown and remove every shard/exchange directory."""
+        self.shutdown()
+        shutil.rmtree(self.root, ignore_errors=True)
+
+    def __enter__(self) -> "ShardRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+# =============================================================== make/apply
+
+def _w_make(ctx: ShardContext, spec: dict) -> None:
+    kind, name = spec["kind"], spec["name"]
+    if kind == "list":
+        ctx.objects[name] = DiskList(ctx.dir, spec["width"],
+                                     spec["chunk_rows"], name=name)
+    elif kind == "hash":
+        ctx.objects[name] = DiskHashTable(ctx.dir, spec["key_width"],
+                                          spec["val_width"],
+                                          nbuckets=spec["nbuckets"], name=name)
+    elif kind == "bits":
+        per = spec["per"]
+        n_local = max(0, min(per, spec["n"] - ctx.shard * per))
+        ctx.objects[name] = DiskBitArray(ctx.dir, n_local,
+                                         chunk_elems=spec["chunk_elems"],
+                                         name=name,
+                                         log_buf_rows=spec["log_buf_rows"])
+    else:
+        raise ValueError(f"unknown structure kind {kind!r}")
+
+
+class _ShardedBase:
+    """Coordinator-side handle: a name, a picklable spec, and the routing
+    of driver-issued delayed ops into the driver's bucket writer."""
+
+    def __init__(self, runtime: ShardRuntime, spec: dict):
+        self.runtime = runtime
+        self.spec = spec
+        self.name = spec["name"]
+        self._own_runtime = False     # set by the bfs.py wrappers: destroy()
+        runtime.bcast(_w_make, spec)  # then also shuts the runtime down
+        runtime.register(self)
+
+    def _put(self, dest: np.ndarray, rows: np.ndarray) -> None:
+        self.runtime.driver.writer(self.spec).put(dest, rows)
+
+    def destroy(self) -> None:
+        self.runtime.bcast(_w_destroy, self.name)
+        self.runtime._structs.pop(self.name, None)
+        self.runtime.driver._writers.pop(self.name, None)
+        shutil.rmtree(self.runtime.driver.exchange_dir(self.name),
+                      ignore_errors=True)
+        if self._own_runtime:
+            self.runtime.shutdown()
+
+
+# ------------------------------------------------------------- DiskList
+
+def _w_list_apply(ctx: ShardContext, spec: dict, epoch: int) -> int:
+    obj = ctx.objects[spec["name"]]
+    got = 0
+    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                    epoch, spec["rec_width"],
+                                    spec["rec_dtype"]):
+        obj.add(rows)
+        got += rows.shape[0]
+    obj.store.flush()
+    return got
+
+
+def _w_list_size(ctx: ShardContext, name: str) -> int:
+    return ctx.objects[name].size()
+
+
+def _w_list_read(ctx: ShardContext, name: str) -> np.ndarray:
+    return ctx.objects[name].read_all()
+
+
+def _w_list_remove_dupes(ctx: ShardContext, name: str) -> None:
+    ctx.objects[name].remove_dupes()
+
+
+def _w_list_remove_all(ctx: ShardContext, name: str, other: str) -> None:
+    ctx.objects[name].remove_all(ctx.objects[other])
+
+
+def _w_list_add_all(ctx: ShardContext, name: str, other: str) -> None:
+    ctx.objects[name].add_all(ctx.objects[other])
+
+
+class ShardedDiskList(_ShardedBase):
+    """RoomyList partitioned by ``hash_owner`` across the shard workers.
+
+    ``add`` is delayed: rows land in per-destination bucket files and
+    reach their owner's DiskList at :meth:`sync`.  Set algebra
+    (remove_dupes / remove_all / add_all between equally-sharded lists)
+    is purely shard-local — the owner function makes the partitions
+    disjoint, so local ops compose to the global op."""
+
+    def __init__(self, runtime: ShardRuntime, width: int,
+                 name: str | None = None, chunk_rows: int = 1 << 16,
+                 capacity: Optional[int] = None):
+        spec = {"kind": "list", "name": name or runtime.next_name("slist"),
+                "width": width, "chunk_rows": chunk_rows,
+                "rec_width": width, "rec_dtype": "uint32",
+                "capacity": capacity}
+        super().__init__(runtime, spec)
+        self.width = width
+
+    def add(self, rows: np.ndarray) -> None:
+        rows = np.ascontiguousarray(rows, np.uint32).reshape(-1, self.width)
+        self._put(hash_owner_np(rows, self.runtime.nshards), rows)
+
+    def sync(self) -> int:
+        return self.runtime.exchange(self.spec, _w_list_apply)["dropped"]
+
+    def size(self) -> int:
+        return sum(self.runtime.bcast(_w_list_size, self.name))
+
+    def remove_dupes(self) -> None:
+        self.runtime.bcast(_w_list_remove_dupes, self.name)
+
+    def remove_all(self, other: "ShardedDiskList") -> None:
+        assert other.runtime is self.runtime
+        self.runtime.bcast(_w_list_remove_all, self.name, other.name)
+
+    def add_all(self, other: "ShardedDiskList") -> None:
+        assert other.runtime is self.runtime
+        self.runtime.bcast(_w_list_add_all, self.name, other.name)
+
+    def read_all(self) -> np.ndarray:
+        """Gathered rows, sorted for comparability (tests/small data)."""
+        parts = self.runtime.bcast(_w_list_read, self.name)
+        rows = np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0, self.width), np.uint32)
+        return extsort.sort_rows(rows) if rows.shape[0] else rows
+
+
+# --------------------------------------------------------- DiskHashTable
+
+def _w_hash_apply(ctx: ShardContext, spec: dict, epoch: int,
+                  combine, apply) -> int:
+    kw, vw = spec["key_width"], spec["val_width"]
+    obj = ctx.objects[spec["name"]]
+    got = 0
+    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                   epoch, spec["rec_width"],
+                                   spec["rec_dtype"]):
+        got += rec.shape[0]
+        ops = rec[:, 0]
+        keys = rec[:, 1:1 + kw].astype(np.uint32)
+        vals = rec[:, 1 + kw:]
+        # Replay in record order, splitting at op changes so each key's
+        # PUT/DEL interleaving reaches the table's sequential op log
+        # exactly as issued.
+        bnd = np.flatnonzero(np.diff(ops)) + 1
+        for lo, hi in zip(np.r_[0, bnd], np.r_[bnd, ops.shape[0]]):
+            if ops[lo] == DiskHashTable.OP_PUT:
+                obj.insert(keys[lo:hi], vals[lo:hi])
+            else:
+                obj.remove(keys[lo:hi])
+    obj.sync(combine=combine, apply=apply)
+    return got
+
+
+def _w_hash_lookup(ctx: ShardContext, name: str, keys: np.ndarray):
+    return ctx.objects[name].lookup(keys)
+
+
+def _w_hash_size(ctx: ShardContext, name: str) -> int:
+    return ctx.objects[name].size()
+
+
+def _w_hash_items(ctx: ShardContext, name: str):
+    return list(ctx.objects[name].items())
+
+
+class ShardedDiskHashTable(_ShardedBase):
+    """RoomyHashTable partitioned by ``hash_owner`` of the key row.
+
+    Delayed inserts/removes are encoded as int64 records
+    ``[op, key_words..., val_words...]`` in the bucket files and replayed
+    on the owner in deterministic order (ascending source id, issue order
+    within a source), feeding DiskHashTable's sequential per-key op log —
+    so DEL→PUT resurrects and PUT→DEL removes exactly as in the
+    single-process table.  ``lookup`` is the delayed-access round trip:
+    queries scatter to owners, results gather back in issue order."""
+
+    def __init__(self, runtime: ShardRuntime, key_width: int, val_width: int,
+                 name: str | None = None, nbuckets: int = 16,
+                 capacity: Optional[int] = None):
+        spec = {"kind": "hash", "name": name or runtime.next_name("shash"),
+                "key_width": key_width, "val_width": val_width,
+                "nbuckets": nbuckets,
+                "rec_width": 1 + key_width + val_width, "rec_dtype": "int64",
+                "capacity": capacity}
+        super().__init__(runtime, spec)
+        self.kw, self.vw = key_width, val_width
+
+    def _queue(self, keys, vals, op: int) -> None:
+        keys = np.ascontiguousarray(keys, np.uint32).reshape(-1, self.kw)
+        vals = np.ascontiguousarray(vals, np.int64).reshape(keys.shape[0],
+                                                            self.vw)
+        rec = np.empty((keys.shape[0], 1 + self.kw + self.vw), np.int64)
+        rec[:, 0] = op
+        rec[:, 1:1 + self.kw] = keys
+        rec[:, 1 + self.kw:] = vals
+        self._put(hash_owner_np(keys, self.runtime.nshards), rec)
+
+    def insert(self, keys, vals) -> None:
+        self._queue(keys, vals, DiskHashTable.OP_PUT)
+
+    def remove(self, keys) -> None:
+        keys = np.asarray(keys, np.uint32).reshape(-1, self.kw)
+        self._queue(keys, np.zeros((keys.shape[0], self.vw), np.int64),
+                    DiskHashTable.OP_DEL)
+
+    def sync(self, combine=None, apply=None) -> int:
+        """In spawn mode ``combine``/``apply`` must be picklable."""
+        return self.runtime.exchange(self.spec, _w_hash_apply,
+                                     combine, apply)["dropped"]
+
+    def lookup(self, keys):
+        keys = np.asarray(keys, np.uint32).reshape(-1, self.kw)
+        owner = hash_owner_np(keys, self.runtime.nshards)
+        args = [(self.name, keys[owner == s])
+                for s in range(self.runtime.nshards)]
+        res = self.runtime.map(_w_hash_lookup, args)
+        out = np.zeros((keys.shape[0], self.vw), np.int64)
+        found = np.zeros(keys.shape[0], bool)
+        for s, (vals, ok) in enumerate(res):
+            sel = np.flatnonzero(owner == s)
+            out[sel], found[sel] = vals, ok
+        return out, found
+
+    def size(self) -> int:
+        return sum(self.runtime.bcast(_w_hash_size, self.name))
+
+    def items(self):
+        for shard_items in self.runtime.bcast(_w_hash_items, self.name):
+            for tk, tv in shard_items:
+                yield tk, tv
+
+
+# --------------------------------------------------------- DiskBitArray
+
+def _mark_first(p, q):
+    return p
+
+
+def _apply_unseen(old, agg):
+    return np.where(old == UNSEEN, agg, old)
+
+
+def _w_bits_apply(ctx: ShardContext, spec: dict, epoch: int,
+                  combine, apply) -> int:
+    obj = ctx.objects[spec["name"]]
+    base = ctx.shard * spec["per"]
+    got = 0
+    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                   epoch, 2, "int64"):
+        obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
+        got += rec.shape[0]
+    obj.sync(combine=combine, apply=apply)
+    return got
+
+
+def _w_bits_count(ctx: ShardContext, name: str) -> np.ndarray:
+    return ctx.objects[name].count_values()
+
+
+def _w_bits_read(ctx: ShardContext, name: str) -> np.ndarray:
+    return ctx.objects[name].read_all()
+
+
+def _w_bits_get(ctx: ShardContext, name: str, base: int,
+                idx: np.ndarray) -> np.ndarray:
+    return ctx.objects[name].get(np.asarray(idx, np.int64) - base)
+
+
+class ShardedDiskBitArray(_ShardedBase):
+    """2-bit RoomyArray block-distributed over the shard workers.
+
+    Shard s owns global indices [s·per, (s+1)·per) with
+    per = ceil(n / nshards) (``buckets.block_owner_np``, pinned to Tier
+    J's ``sharding.block_owner``).  Delayed ``update`` records are
+    (global_idx, val) int64 pairs in the bucket files; sync applies them
+    through each local DiskBitArray's snapshot-isolated op log."""
+
+    def __init__(self, runtime: ShardRuntime, n: int,
+                 name: str | None = None, chunk_elems: int = 1 << 22,
+                 log_buf_rows: int = 1 << 20,
+                 capacity: Optional[int] = None):
+        spec = {"kind": "bits", "name": name or runtime.next_name("sbits"),
+                "n": int(n), "per": block_size(int(n), runtime.nshards),
+                "chunk_elems": chunk_elems, "log_buf_rows": log_buf_rows,
+                "rec_width": 2, "rec_dtype": "int64", "capacity": capacity}
+        super().__init__(runtime, spec)
+        self.n = int(n)
+        self.per = spec["per"]
+
+    def update(self, idx: np.ndarray, vals: np.ndarray) -> None:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        vals = np.asarray(vals, np.uint8).reshape(-1)
+        ok = (idx >= 0) & (idx < self.n)       # drop out-of-range, like the tiers
+        idx, vals = idx[ok], vals[ok]
+        rec = np.empty((idx.shape[0], 2), np.int64)
+        rec[:, 0] = idx
+        rec[:, 1] = vals
+        self._put(block_owner_np(idx, self.n, self.runtime.nshards), rec)
+
+    def sync(self, combine=None, apply=None) -> int:
+        """In spawn mode ``combine``/``apply`` must be picklable."""
+        return self.runtime.exchange(self.spec, _w_bits_apply,
+                                     combine, apply)["dropped"]
+
+    def count_values(self) -> np.ndarray:
+        counts = self.runtime.bcast(_w_bits_count, self.name)
+        return np.sum(np.stack(counts, axis=0), axis=0)
+
+    def get(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        if idx.size:
+            assert idx.min() >= 0 and idx.max() < self.n, \
+                "get: index out of range"
+        owner = block_owner_np(idx, self.n, self.runtime.nshards)
+        args = [(self.name, s * self.per, idx[owner == s])
+                for s in range(self.runtime.nshards)]
+        out = np.empty(idx.shape[0], np.uint8)
+        for s, vals in enumerate(self.runtime.map(_w_bits_get, args)):
+            out[owner == s] = vals
+        return out
+
+    def read_all(self) -> np.ndarray:
+        """(n,) values — shard order IS global order (block layout)."""
+        parts = self.runtime.bcast(_w_bits_read, self.name)
+        return (np.concatenate(parts) if parts else np.zeros(0, np.uint8))
+
+
+# ==================================================== distributed BFS (sorted)
+
+def _w_bfs_init(ctx: ShardContext, spec: dict) -> None:
+    name = spec["name"]
+    ctx.objects[name] = {
+        "all": SortedRunSet(ctx.dir, spec["width"], spec["chunk_rows"],
+                            max_runs=spec["max_runs"], name=f"{name}_all",
+                            policy=spec["compaction"],
+                            size_ratio=spec["size_ratio"]),
+        "cur": None, "builder": None, "lev": 0,
+    }
+
+
+def _w_bfs_seed(ctx: ShardContext, spec: dict, epoch: int) -> int:
+    """Sort+dedupe the seed rows routed to this shard into level 0."""
+    st = ctx.objects[spec["name"]]
+    builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
+                                 spec["width"], chunk_rows=spec["chunk_rows"],
+                                 run_rows=spec["run_rows"])
+    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                    epoch, spec["rec_width"],
+                                    spec["rec_dtype"]):
+        builder.add(rows)
+    runs = builder.finish()
+    lev0 = ChunkStore(os.path.join(ctx.dir, f"{spec['name']}_lev0"),
+                      spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
+    try:
+        extsort.merge_runs(runs, lev0, dedupe=True)
+    finally:
+        for r in runs:
+            r.destroy()
+    st["all"].add_run(lev0)
+    st["cur"] = lev0
+    return lev0.size
+
+
+def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int) -> int:
+    """Expand the local frontier: locally-owned neighbours stream straight
+    into this shard's RunBuilder (the level's ONE sort pass, paid as the
+    rows are generated); remote neighbours go to the owner's bucket.
+    Seals the epoch's buckets — map completion is the barrier."""
+    st = ctx.objects[spec["name"]]
+    builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
+                                 spec["width"], chunk_rows=spec["chunk_rows"],
+                                 run_rows=spec["run_rows"])
+    writer = ctx.writer(spec)
+    for chunk in st["cur"].iter_chunks():
+        nbrs = np.ascontiguousarray(gen_next(np.asarray(chunk)),
+                                    np.uint32).reshape(-1, spec["width"])
+        owner = hash_owner_np(nbrs, ctx.nshards)
+        local = owner == ctx.shard
+        if local.any():
+            builder.add(nbrs[local])
+        if not local.all():
+            writer.put(owner[~local], nbrs[~local])
+    st["builder"] = builder
+    return int(writer.seal(epoch).sum())
+
+
+def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
+    """Finish the level: received frontier rows join the SAME RunBuilder
+    (still the one sort pass), then merge+dedupe+subtract against the
+    local visited runs — the shard-local copy of bfs.level_step."""
+    from .bfs import _merge_subtract
+    st = ctx.objects[spec["name"]]
+    builder = st.pop("builder")
+    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                    epoch, spec["rec_width"],
+                                    spec["rec_dtype"]):
+        builder.add(rows)
+    runs = builder.finish()
+    st["all"].maybe_compact()
+    st["lev"] += 1
+    nxt = ChunkStore(
+        os.path.join(ctx.dir, f"{spec['name']}_lev{st['lev']}"),
+        spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
+    try:
+        _merge_subtract(runs, st["all"].runs, nxt)
+    finally:
+        for r in runs:
+            r.destroy()
+    if nxt.size:
+        st["all"].add_run(nxt)
+        st["cur"] = nxt
+    else:
+        nxt.destroy()
+        st["cur"] = ChunkStore(
+            os.path.join(ctx.dir, f"{spec['name']}_empty"), spec["width"],
+            chunk_rows=spec["chunk_rows"], fresh=True)
+        st["cur"].flush(mark_sorted=True)
+    return nxt.size
+
+
+def _w_bfs_visited_size(ctx: ShardContext, name: str) -> int:
+    return ctx.objects[name]["all"].size()
+
+
+def _w_bfs_visited_read(ctx: ShardContext, name: str) -> np.ndarray:
+    return ctx.objects[name]["all"].read_all()
+
+
+def _w_bfs_destroy(ctx: ShardContext, name: str) -> None:
+    st = ctx.objects.pop(name, None)
+    if st is not None:
+        st["all"].destroy()
+    shutil.rmtree(os.path.join(ctx.dir, f"{name}_tmp"), ignore_errors=True)
+    ctx._writers.pop(name, None)
+
+
+class ShardedVisited:
+    """Handle over the per-shard visited SortedRunSets (size/read_all/
+    destroy — the same surface the single-process engines return)."""
+
+    def __init__(self, runtime: ShardRuntime, spec: dict, dropped: int):
+        self.runtime = runtime
+        self.spec = spec
+        self.name = spec["name"]
+        self.dropped = dropped        # exact bucket-overflow loss, whole search
+        self._own_runtime = False
+
+    def size(self) -> int:
+        return sum(self.runtime.bcast(_w_bfs_visited_size, self.name))
+
+    def read_all(self) -> np.ndarray:
+        parts = self.runtime.bcast(_w_bfs_visited_read, self.name)
+        rows = np.concatenate(parts, axis=0)
+        return extsort.sort_rows(rows) if rows.shape[0] else rows
+
+    def destroy(self) -> None:
+        self.runtime.bcast(_w_bfs_destroy, self.name)
+        shutil.rmtree(self.runtime.driver.exchange_dir(self.name),
+                      ignore_errors=True)
+        if self._own_runtime:
+            self.runtime.shutdown()
+
+
+def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
+                width: int, chunk_rows: int = 1 << 16,
+                max_levels: int = 10_000, run_rows: int = 1 << 18,
+                max_runs: int = 8, compaction: str = "full",
+                size_ratio: int = 2, bucket_capacity: Optional[int] = None):
+    """Distributed sorted-list BFS: each shard owns the states hashing to
+    it, sorts only its own partition (one sort pass per level per shard),
+    and ships cross-shard expansion rows through the bucket exchange.
+
+    In spawn mode ``gen_next`` must be picklable (a module-level class
+    instance — see examples/pancake_bfs.py).  Returns (level_sizes,
+    ShardedVisited); level counts are exactly the single-process
+    engine's for any nshards.
+    """
+    spec = {"kind": "bfs", "name": runtime.next_name("bfs"), "width": width,
+            "chunk_rows": chunk_rows, "run_rows": run_rows,
+            "max_runs": max_runs, "compaction": compaction,
+            "size_ratio": size_ratio, "rec_width": width,
+            "rec_dtype": "uint32", "capacity": bucket_capacity}
+    runtime.bcast(_w_bfs_init, spec)
+
+    start_rows = np.ascontiguousarray(start_rows,
+                                      np.uint32).reshape(-1, width)
+    writer = runtime.driver.writer(spec)
+    writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
+    epoch = runtime.next_epoch()
+    dropped = int(writer.seal(epoch).sum())
+    sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
+
+    level_sizes: List[int] = [sum(sizes)]
+    if level_sizes[0] == 0:
+        return [], ShardedVisited(runtime, spec, dropped)
+    for _lev in range(1, max_levels + 1):
+        epoch = runtime.next_epoch()
+        dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next, epoch))
+        total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
+        if total == 0:
+            break
+        level_sizes.append(total)
+    return level_sizes, ShardedVisited(runtime, spec, dropped)
+
+
+# ================================================= distributed BFS (implicit)
+
+def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
+                 epoch_in: int, epoch_out: int, seed: bool) -> tuple:
+    """One fused BFS level on this shard's block of the bit array.
+
+    Absorbs the marks bucket-shipped here at epoch_in (they join the
+    locally queued marks in the op-log snapshot), then runs the SAME
+    single fused read-write pass as the single-process engine — apply
+    marks, rotate, count, expand.  Expansion marks for local states queue
+    straight into the (snapshot-isolated) op log; marks for remote states
+    go to the owner's bucket, sealed at epoch_out.  Per-shard budget:
+    exactly ONE rw pass over the local array per level, zero sorts."""
+    obj: DiskBitArray = ctx.objects[spec["name"]]
+    base = ctx.shard * spec["per"]
+    n, nshards = spec["n"], ctx.nshards
+    expand_batch = spec["expand_batch"]
+    writer = ctx.writer(spec)
+    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                   epoch_in, 2, "int64"):
+        obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
+
+    count = 0
+
+    def count_cur(chunk_start: int, vals: np.ndarray) -> None:
+        nonlocal count
+        count += int(np.count_nonzero(vals == CUR))
+
+    def rotate(chunk_start: int, vals: np.ndarray) -> np.ndarray:
+        vals = np.where(vals == CUR, np.uint8(DONE), vals)
+        return np.where(vals == NEXT, np.uint8(CUR), vals)
+
+    def expand(chunk_start: int, vals: np.ndarray) -> None:
+        (cur_pos,) = np.nonzero(vals == CUR)
+        for lo in range(0, cur_pos.size, expand_batch):
+            idx = (base + chunk_start
+                   + cur_pos[lo:lo + expand_batch].astype(np.int64))
+            nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
+            ok = (nbrs >= 0) & (nbrs < n)
+            nbrs = nbrs[ok]
+            owner = block_owner_np(nbrs, n, nshards)
+            local = owner == ctx.shard
+            if local.any():          # snapshot-isolated: defers to next pass
+                obj.update(nbrs[local] - base,
+                           np.full(int(local.sum()), NEXT, np.uint8))
+            if not local.all():
+                rec = np.empty((nbrs.shape[0] - int(local.sum()), 2), np.int64)
+                rec[:, 0] = nbrs[~local]
+                rec[:, 1] = NEXT
+                writer.put(owner[~local], rec)
+
+    if seed:
+        # Fresh zeroed array: CUR lives only in chunks with queued seed ops.
+        obj.run_pass(PassPlan("bfs-seed", dirty_only=True)
+                     .reads(count_cur).reads(expand))
+    else:
+        obj.run_pass(PassPlan("bfs-level").writes(rotate).reads(count_cur)
+                     .reads(expand),
+                     combine=_mark_first, apply=_apply_unseen)
+    return count, int(writer.seal(epoch_out).sum())
+
+
+def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
+                         gen_neighbors, chunk_elems: int = 1 << 22,
+                         max_levels: int = 10_000,
+                         expand_batch: int = 1 << 16,
+                         log_buf_rows: int = 1 << 20,
+                         bucket_capacity: Optional[int] = None):
+    """Distributed implicit BFS: the 2-bit array is block-distributed,
+    each shard runs ONE fused mark/rotate/count/expand pass per level
+    over its own block, and cross-shard marks ride the bucket exchange
+    into the owner's snapshot-isolated op log.
+
+    In spawn mode ``gen_neighbors`` must be picklable.  Returns
+    (level_sizes, ShardedDiskBitArray)."""
+    bits = ShardedDiskBitArray(runtime, n_states, chunk_elems=chunk_elems,
+                               log_buf_rows=log_buf_rows,
+                               capacity=bucket_capacity)
+    spec = dict(bits.spec)
+    spec["expand_batch"] = expand_batch
+    start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
+    assert start.size and start.min() >= 0 and start.max() < n_states
+    bits.update(start, np.full(start.shape, CUR, np.uint8))
+    epoch = runtime.next_epoch()
+    dropped = int(runtime.driver.writer(bits.spec).seal(epoch).sum())
+    # The first worker pass absorbs the sealed seed buckets itself
+    # (epoch_in == the seed epoch): seeds queue as delayed ops, the
+    # dirty-only seed pass applies/counts/expands them.
+
+    level_sizes: List[int] = []
+    seed = True
+    epoch_in = epoch
+    for _ in range(max_levels + 1):
+        epoch_out = runtime.next_epoch()
+        res = runtime.map(_w_ibfs_pass,
+                          [(spec, gen_neighbors, epoch_in, epoch_out, seed)]
+                          * runtime.nshards)
+        total = sum(c for c, _d in res)
+        dropped += sum(d for _c, d in res)
+        if not seed and total == 0:
+            break
+        level_sizes.append(total)
+        seed = False
+        epoch_in = epoch_out
+    bits.dropped = dropped
+    return level_sizes, bits

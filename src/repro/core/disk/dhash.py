@@ -14,15 +14,10 @@ from typing import Callable
 
 import numpy as np
 
-
-def _hash_rows(rows: np.ndarray) -> np.ndarray:
-    h = np.full(rows.shape[0], 0x9E3779B9, np.uint32)
-    for j in range(rows.shape[1]):
-        w = rows[:, j].astype(np.uint32)
-        h = (h ^ w) * np.uint32(0x01000193)
-        h ^= h >> np.uint32(15)
-    h = h * np.uint32(0x85EBCA6B)
-    return h ^ (h >> np.uint32(13))
+# The canonical numpy row hash (buckets.py) — the sharded runtime buckets
+# keys with the SAME function, so a key's table bucket and its owner shard
+# are derived from one hash definition, pinned by golden-value tests.
+from .buckets import hash_rows_np as _hash_rows
 
 
 def _keycols(kw: int):

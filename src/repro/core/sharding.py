@@ -16,13 +16,24 @@ from . import types as T
 
 
 def block_owner(idx: jax.Array, n: int, nshards: int) -> jax.Array:
-    """Owner shard of array index idx under block distribution."""
+    """Owner shard of array index idx under block distribution.
+
+    MUST stay bit-identical to the jax-free Tier D mirror
+    ``disk.buckets.block_owner_np`` — the multiprocess ShardRuntime routes
+    with the numpy version, and an ownership disagreement between
+    processes silently corrupts a sharded structure.  Golden-value tests
+    in tests/test_cluster.py pin both sides.
+    """
     per = -(-n // nshards)  # ceil
     return (idx // per).astype(jnp.int32)
 
 
 def hash_owner(rows: jax.Array, nshards: int) -> jax.Array:
-    """Owner shard of an element/key row under hash distribution."""
+    """Owner shard of an element/key row under hash distribution.
+
+    Mirrored by ``disk.buckets.hash_owner_np`` (same constraint as
+    :func:`block_owner`: pinned cross-process by golden-value tests).
+    """
     return (T.hash_rows(rows) % jnp.uint32(nshards)).astype(jnp.int32)
 
 

@@ -1,0 +1,620 @@
+"""Sharded Tier D runtime (disk/cluster.py + disk/buckets.py).
+
+Covers the ISSUE-4 subsystem end to end:
+
+  * golden-value pins of the owner functions (types.hash_rows /
+    sharding.hash_owner / sharding.block_owner vs their jax-free numpy
+    mirrors in buckets.py) — cross-process ownership agreement is what
+    keeps a sharded structure uncorrupted,
+  * bucket-file protocol: seal/consume roundtrip, deterministic source
+    order, exact overflow ``dropped`` accounting (the Tier D mirror of
+    the Tier J ``bin_by_dest`` tests), abort-safety (.tmp strays are
+    ignorable and swept),
+  * the sharded wrappers (list / hash table / bit array) against their
+    single-process oracles, for nshards ∈ {1, 2, 4},
+  * distributed BFS on BOTH engines: level counts identical to the
+    single-process engines, and the PR 3 per-level pass budgets holding
+    PER SHARD (no extra sorts / array traversals from the exchange),
+  * spawn mode (real worker processes): a small always-on smoke test,
+    plus the full pancake equivalence sweep when ROOMY_SHARDS is set
+    (the CI matrix leg runs with ROOMY_SHARDS=2).
+
+Module-level imports stay numpy-only on purpose: spawn workers re-import
+this module to unpickle the generator classes below, and must not pay a
+jax import for it (jax-needing tests import inside the test body).
+"""
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.disk import bitarray as DBA
+from repro.core.disk import buckets as B
+from repro.core.disk import extsort
+from repro.core.disk import breadth_first_search, implicit_bfs
+from repro.core.disk.bitarray import CUR, DONE, DiskBitArray
+from repro.core.disk.cluster import (ShardedDiskBitArray,
+                                     ShardedDiskHashTable, ShardedDiskList,
+                                     ShardRuntime)
+from repro.core.disk.dhash import DiskHashTable
+from repro.core.disk.dlist import DiskList
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+from pancake_bfs import GenNextNp, start_code        # noqa: E402
+from pancake_bits import NeighborsNp                 # noqa: E402
+
+# The CI matrix leg sets ROOMY_SHARDS=2 to run the spawn-mode sweep.
+ROOMY_SHARDS = int(os.environ.get("ROOMY_SHARDS", "0"))
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+@pytest.fixture
+def wd(tmp_path):
+    return str(tmp_path)
+
+
+class RingGen:
+    """Picklable ring-graph neighbour generator (spawn-mode tests)."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, idx):
+        idx = np.asarray(idx, np.int64)
+        return np.stack([(idx + 1) % self.n, (idx - 1) % self.n], axis=1)
+
+
+def _boom(ctx):
+    raise ValueError("deliberate worker failure")
+
+
+# ----------------------------------------------------- owner-function pins
+
+class TestOwnerGolden:
+    """A worker disagreeing with the coordinator about ownership silently
+    corrupts a sharded structure — pin the maps to golden values AND to
+    the Tier J implementations, so neither side can drift alone."""
+
+    ROWS1 = np.array([[0], [1], [2], [0xFFFFFFFF], [0xDEADBEEF]], np.uint32)
+    ROWS2 = np.array([[0, 0], [1, 2], [2, 1], [123456789, 987654321]],
+                     np.uint32)
+    GOLD1 = np.array([0x39E95042, 0xA381B84E, 0x99CA38EF, 0x8BB58942,
+                      0xBE973D59], np.uint32)
+    GOLD2 = np.array([0x4B71867D, 0x9C77B28B, 0x702BE32B, 0x65F056C5],
+                     np.uint32)
+
+    def test_hash_rows_np_golden(self):
+        assert np.array_equal(B.hash_rows_np(self.ROWS1), self.GOLD1)
+        assert np.array_equal(B.hash_rows_np(self.ROWS2), self.GOLD2)
+
+    def test_hash_owner_np_golden(self):
+        assert B.hash_owner_np(self.ROWS1, 4).tolist() == [2, 2, 3, 2, 1]
+        assert B.hash_owner_np(self.ROWS1, 7).tolist() == [6, 3, 5, 2, 6]
+        assert B.hash_owner_np(self.ROWS2, 4).tolist() == [1, 3, 3, 1]
+        assert B.hash_owner_np(self.ROWS2, 7).tolist() == [3, 6, 1, 2]
+
+    def test_block_owner_np_golden(self):
+        idx = np.array([0, 1, 9, 10, 11, 63, 64, 99], np.int64)
+        assert B.block_owner_np(idx, 100, 4).tolist() == [0, 0, 0, 0, 0,
+                                                          2, 2, 3]
+        assert B.block_owner_np(idx, 100, 3).tolist() == [0, 0, 0, 0, 0,
+                                                          1, 1, 2]
+
+    def test_tier_j_hash_rows_matches_numpy_mirror(self):
+        import jax.numpy as jnp
+        from repro.core import types as T
+        rng = np.random.default_rng(0)
+        for w in (1, 2, 3):
+            rows = rng.integers(0, 1 << 32, (64, w), dtype=np.uint64
+                                ).astype(np.uint32)
+            assert np.array_equal(np.asarray(T.hash_rows(jnp.asarray(rows))),
+                                  B.hash_rows_np(rows))
+        assert np.array_equal(np.asarray(T.hash_rows(jnp.asarray(self.ROWS1))),
+                              self.GOLD1)
+
+    def test_tier_j_owners_match_numpy_mirrors(self):
+        import jax.numpy as jnp
+        from repro.core import sharding as S
+        rng = np.random.default_rng(1)
+        rows = rng.integers(0, 1 << 32, (64, 2), dtype=np.uint64
+                            ).astype(np.uint32)
+        for ns in SHARD_COUNTS + (7,):
+            assert np.array_equal(
+                np.asarray(S.hash_owner(jnp.asarray(rows), ns)),
+                B.hash_owner_np(rows, ns))
+        idx = rng.integers(0, 1000, 128)
+        for ns in SHARD_COUNTS + (7,):
+            assert np.array_equal(
+                np.asarray(S.block_owner(jnp.asarray(idx), 1000, ns)),
+                B.block_owner_np(idx, 1000, ns))
+
+
+# -------------------------------------------------------- bucket protocol
+
+class TestBuckets:
+    def test_roundtrip_and_source_order(self, wd):
+        w0 = B.BucketWriter(wd, src=0, nshards=2, width=2)
+        w1 = B.BucketWriter(wd, src=1, nshards=2, width=2)
+        w1.put([0, 0], np.array([[10, 11], [12, 13]], np.int64))
+        w0.put([0, 1], np.array([[1, 2], [3, 4]], np.int64))
+        assert w0.seal(epoch=5).sum() == 0
+        assert w1.seal(epoch=5).sum() == 0
+        got = list(B.iter_incoming(wd, dst=0, epoch=5, width=2))
+        assert [src for src, _ in got] == [0, 1]          # ascending src
+        assert np.array_equal(got[0][1], [[1, 2]])
+        assert np.array_equal(got[1][1], [[10, 11], [12, 13]])
+        # consumed: a second read sees nothing
+        assert list(B.iter_incoming(wd, dst=0, epoch=5, width=2)) == []
+        (src, rows), = B.iter_incoming(wd, dst=1, epoch=5, width=2)
+        assert src == 0 and np.array_equal(rows, [[3, 4]])
+
+    def test_epoch_isolation(self, wd):
+        w = B.BucketWriter(wd, src=0, nshards=1, width=1)
+        w.put([0], [[7]])
+        w.seal(epoch=1)
+        w.put([0], [[8]])
+        w.seal(epoch=2)
+        (_, rows), = B.iter_incoming(wd, 0, 1, 1)
+        assert rows.tolist() == [[7]]
+        (_, rows), = B.iter_incoming(wd, 0, 2, 1)
+        assert rows.tolist() == [[8]]
+
+    def _oracle_dropped(self, dest, nshards, capacity):
+        return sum(max(0, np.sum(np.asarray(dest) == d) - capacity)
+                   for d in range(nshards))
+
+    def test_overflow_dropped_exact(self, wd):
+        """The bin_by_dest convention on disk: per-(src,dst) buckets hold
+        capacity rows per epoch; the overflow count is EXACT."""
+        rng = np.random.default_rng(2)
+        for case in range(8):
+            ns = int(rng.integers(1, 5))
+            cap = int(rng.integers(0, 6))
+            m = int(rng.integers(1, 50))
+            dest = rng.integers(0, ns, m)
+            w = B.BucketWriter(os.path.join(wd, f"c{case}"), src=0,
+                               nshards=ns, width=1, capacity=cap,
+                               buf_rows=4)      # force mid-epoch spills
+            # split across several put() calls — capacity is per EPOCH
+            for lo in range(0, m, 7):
+                sl = dest[lo:lo + 7]
+                w.put(sl, np.arange(lo, lo + sl.shape[0], dtype=np.int64
+                                    ).reshape(-1, 1))
+            dropped = w.seal(epoch=0)
+            assert dropped.sum() == self._oracle_dropped(dest, ns, cap)
+            kept = sum(r.shape[0] for _s, r in
+                       B.iter_incoming(os.path.join(wd, f"c{case}"), 0, 0, 1)
+                       ) + sum(r.shape[0] for _s, r in
+                               B.iter_incoming(os.path.join(wd, f"c{case}"),
+                                               1, 0, 1) if ns > 1)
+            # kept + dropped == issued for the destinations we read
+            if ns <= 2:
+                assert kept + dropped.sum() == m
+
+    def test_zero_capacity_drops_everything(self, wd):
+        w = B.BucketWriter(wd, src=0, nshards=2, width=1, capacity=0)
+        w.put([0, 1, 1], np.zeros((3, 1), np.int64))
+        assert w.seal(epoch=0).tolist() == [1, 2]
+        assert list(B.iter_incoming(wd, 0, 0, 1)) == []
+        assert list(B.iter_incoming(wd, 1, 0, 1)) == []
+
+    def test_capacity_resets_per_epoch(self, wd):
+        w = B.BucketWriter(wd, src=0, nshards=1, width=1, capacity=2)
+        w.put([0, 0, 0], np.zeros((3, 1), np.int64))
+        assert w.seal(epoch=0).tolist() == [1]
+        w.put([0, 0], np.zeros((2, 1), np.int64))
+        assert w.seal(epoch=1).tolist() == [0]
+
+    def test_unsealed_tmp_is_invisible_and_swept(self, wd):
+        """A worker killed mid-epoch leaves only .tmp files: readers see
+        nothing, cleanup removes them, sealed files survive."""
+        w = B.BucketWriter(wd, src=0, nshards=1, width=1, buf_rows=1)
+        w.put([0], [[1]])                       # buf_rows=1 -> spilled .tmp
+        assert any(f.endswith(".tmp") for f in os.listdir(wd))
+        assert list(B.iter_incoming(wd, 0, 0, 1)) == []     # never sealed
+        w2 = B.BucketWriter(wd, src=1, nshards=1, width=1)
+        w2.put([0], [[2]])
+        w2.seal(epoch=0)
+        removed = B.cleanup_strays(wd)
+        assert len(removed) == 1 and removed[0].endswith(".tmp")
+        assert not any(f.endswith(".tmp") for f in os.listdir(wd))
+        (src, rows), = B.iter_incoming(wd, 0, 0, 1)
+        assert src == 1 and rows.tolist() == [[2]]
+
+
+# ------------------------------------------------------- runtime basics
+
+class TestShardRuntime:
+    def test_inline_map_and_barrier(self, wd):
+        with ShardRuntime(wd, 3, mode="inline") as rt:
+            from repro.core.disk.cluster import _w_noop
+            assert rt.map(_w_noop) == [0, 1, 2]
+            rt.barrier()
+
+    def test_fresh_runtime_sweeps_exchange_strays(self, wd):
+        exch = os.path.join(wd, "exchange", "mystruct")
+        os.makedirs(exch)
+        stray = os.path.join(exch, "s000_d000.bin.tmp")
+        open(stray, "wb").write(b"\x00" * 16)
+        sealed = os.path.join(exch, "e000001_s000_d000.bin")
+        open(sealed, "wb").write(np.zeros(2, np.int64).tobytes())
+        # fresh=True wipes the whole exchange area
+        ShardRuntime(wd, 2, mode="inline", fresh=True)
+        assert not os.path.exists(stray) and not os.path.exists(sealed)
+        # fresh=False sweeps only ignorable .tmp strays
+        os.makedirs(exch, exist_ok=True)
+        open(stray, "wb").write(b"\x00" * 16)
+        open(sealed, "wb").write(np.zeros(2, np.int64).tobytes())
+        ShardRuntime(wd, 2, mode="inline", fresh=False)
+        assert not os.path.exists(stray)
+        assert os.path.exists(sealed)
+
+    def test_sync_surfaces_exact_dropped_per_structure(self, wd):
+        """Satellite: ShardRuntime.sync() returns the EXACT overflow loss
+        per registered structure (the disk mirror of the Tier J
+        bin_by_dest overflow tests)."""
+        with ShardRuntime(wd, 2, mode="inline") as rt:
+            lst = ShardedDiskList(rt, width=1, capacity=2)
+            big = ShardedDiskList(rt, width=1)          # unbounded
+            rows = np.arange(64, dtype=np.uint32).reshape(-1, 1)
+            owners = B.hash_owner_np(rows, 2)
+            lst.add(rows)
+            big.add(rows)
+            want = sum(max(0, int((owners == d).sum()) - 2)
+                       for d in range(2))
+            dropped = rt.sync()
+            assert dropped[lst.name] == want > 0
+            assert dropped[big.name] == 0
+            assert lst.size() + want == 64
+            assert big.size() == 64
+
+
+# ------------------------------------------------------ sharded wrappers
+
+class TestShardedDiskList:
+    @pytest.mark.parametrize("nshards", SHARD_COUNTS)
+    def test_matches_single_process_oracle(self, wd, nshards):
+        rng = np.random.default_rng(3)
+        a_rows = rng.integers(0, 40, (200, 2)).astype(np.uint32)
+        b_rows = rng.integers(0, 40, (60, 2)).astype(np.uint32)
+        with ShardRuntime(os.path.join(wd, "rt"), nshards,
+                          mode="inline") as rt:
+            a = ShardedDiskList(rt, width=2, chunk_rows=32)
+            b = ShardedDiskList(rt, width=2, chunk_rows=32)
+            a.add(a_rows)
+            b.add(b_rows)
+            assert rt.sync() == {a.name: 0, b.name: 0}
+            assert a.size() == 200 and b.size() == 60
+            a.remove_dupes()
+            a.remove_all(b)
+            got = a.read_all()
+            a.destroy()
+            b.destroy()
+        oa = DiskList(os.path.join(wd, "oracle"), 2, 32)
+        ob = DiskList(os.path.join(wd, "oracle"), 2, 32)
+        oa.add(a_rows)
+        ob.add(b_rows)
+        oa.remove_dupes()
+        oa.remove_all(ob)
+        assert np.array_equal(got, extsort.sort_rows(oa.read_all()))
+        oa.destroy()
+        ob.destroy()
+
+    def test_multi_epoch_accumulates(self, wd):
+        with ShardRuntime(wd, 2, mode="inline") as rt:
+            lst = ShardedDiskList(rt, width=1)
+            lst.add(np.array([[1]], np.uint32))
+            lst.sync()
+            lst.add(np.array([[2], [3]], np.uint32))
+            lst.sync()
+            assert lst.size() == 3
+            assert lst.read_all().reshape(-1).tolist() == [1, 2, 3]
+
+
+class TestShardedDiskHashTable:
+    @pytest.mark.parametrize("nshards", SHARD_COUNTS)
+    def test_insert_lookup_matches_dict(self, wd, nshards):
+        rng = np.random.default_rng(4)
+        keys = rng.integers(0, 50, (120, 1)).astype(np.uint32)
+        vals = rng.integers(0, 1000, (120, 1)).astype(np.int64)
+        with ShardRuntime(wd, nshards, mode="inline") as rt:
+            ht = ShardedDiskHashTable(rt, key_width=1, val_width=1,
+                                      nbuckets=4)
+            ht.insert(keys, vals)
+            assert ht.sync() == 0
+            oracle = {}
+            for k, v in zip(keys[:, 0], vals[:, 0]):
+                oracle[int(k)] = int(v)       # overwrite = last PUT wins
+            assert ht.size() == len(oracle)
+            q = np.arange(60, dtype=np.uint32).reshape(-1, 1)
+            out, found = ht.lookup(q)
+            for i in range(60):
+                assert found[i] == (i in oracle)
+                if found[i]:
+                    assert out[i, 0] == oracle[i]
+
+    def test_del_put_order_survives_the_exchange(self, wd):
+        """The bucket files must preserve per-key op order: DEL then PUT
+        resurrects, PUT then DEL removes — the PR 3 sequential-op-log
+        rule, now crossing process/shard boundaries."""
+        with ShardRuntime(wd, 2, mode="inline") as rt:
+            ht = ShardedDiskHashTable(rt, 1, 1)
+            ks = np.arange(8, dtype=np.uint32).reshape(-1, 1)
+            ht.insert(ks, np.full((8, 1), 10, np.int64))
+            ht.sync()
+            # one epoch: DEL k then PUT k (resurrect); PUT j then DEL j
+            ht.remove(ks[:4])
+            ht.insert(ks[:4], np.full((4, 1), 99, np.int64))
+            ht.insert(ks[4:], np.full((4, 1), 77, np.int64))
+            ht.remove(ks[4:])
+            ht.sync()
+            out, found = ht.lookup(ks)
+            assert found[:4].all() and not found[4:].any()
+            assert (out[:4, 0] == 99).all()
+            assert ht.size() == 4
+
+
+class TestShardedDiskBitArray:
+    @pytest.mark.parametrize("nshards", SHARD_COUNTS)
+    def test_matches_single_process_oracle(self, wd, nshards):
+        n = 101                                 # NOT divisible: short last shard
+        rng = np.random.default_rng(5)
+        idx = rng.integers(-5, n + 5, 300)      # out-of-range must drop
+        vals = rng.integers(0, 4, 300).astype(np.uint8)
+        with ShardRuntime(os.path.join(wd, "rt"), nshards,
+                          mode="inline") as rt:
+            sb = ShardedDiskBitArray(rt, n, chunk_elems=16)
+            sb.update(idx, vals)
+            assert sb.sync() == 0
+            got_all = sb.read_all()
+            got_some = sb.get(np.arange(n))
+            hist = sb.count_values()
+            sb.destroy()
+        ob = DiskBitArray(os.path.join(wd, "oracle"), n, chunk_elems=16)
+        ob.update(idx, vals)
+        ob.sync()
+        want = ob.read_all()
+        assert np.array_equal(got_all, want)
+        assert np.array_equal(got_some, want)
+        assert np.array_equal(hist, ob.count_values())
+        ob.destroy()
+
+
+# --------------------------------------------- distributed BFS equivalence
+
+def _pancake_single(n, wd):
+    sizes, all_obj = breadth_first_search(
+        wd, np.array([[start_code(n)]], np.uint32), GenNextNp(n), width=1,
+        chunk_rows=1 << 10)
+    all_obj.destroy()
+    return sizes
+
+
+class TestShardedBFSEquivalence:
+    @pytest.mark.parametrize("nshards", SHARD_COUNTS)
+    def test_sorted_engine_levels_match(self, wd, nshards):
+        n = 6
+        want = _pancake_single(n, os.path.join(wd, "single"))
+        # nshards=1 still goes through the full runtime/bucket protocol
+        # when a runtime is passed explicitly
+        rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode="inline")
+        sizes, vis = breadth_first_search(
+            os.path.join(wd, "shard"), np.array([[start_code(n)]], np.uint32),
+            GenNextNp(n), width=1, chunk_rows=1 << 10, runtime=rt)
+        assert sizes == want
+        assert vis.dropped == 0
+        assert vis.size() == math.factorial(n)
+        assert vis.read_all().shape == (math.factorial(n), 1)
+        vis.destroy()
+
+    @pytest.mark.parametrize("nshards", SHARD_COUNTS)
+    def test_implicit_engine_levels_match(self, wd, nshards):
+        from repro.core import ranking as R
+        n = 6
+        total = math.factorial(n)
+        start = int(R.rank_np(np.arange(n)[None, :])[0])
+        want = [1, 5, 20, 79, 199, 281, 133, 2]          # == sorted engine
+        rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode="inline")
+        sizes, bits = implicit_bfs(
+            wd, total, [start], NeighborsNp(n), chunk_elems=256, runtime=rt)
+        assert sizes == want
+        assert bits.dropped == 0
+        hist = bits.count_values()
+        assert hist[0] == 0 and hist[DONE] == total
+        # every state ended DONE, in global (block) order
+        assert np.array_equal(bits.read_all(),
+                              np.full(total, DONE, np.uint8))
+        bits.destroy()
+
+    def test_sorted_engine_no_extra_sorts_per_shard(self, wd):
+        """Acceptance pin: the exchange introduces ZERO extra sort work —
+        total rows sorted across shards equals the single-process run,
+        and each level costs at most one sort pass per shard."""
+        n = 5
+        extsort.reset_stats()
+        want = _pancake_single(n, os.path.join(wd, "single"))
+        single = dict(extsort.STATS)
+        levels = len(want) - 1
+        for nshards in (2, 4):
+            extsort.reset_stats()
+            sizes, vis = breadth_first_search(
+                os.path.join(wd, f"s{nshards}"),
+                np.array([[start_code(n)]], np.uint32), GenNextNp(n),
+                width=1, chunk_rows=1 << 10, nshards=nshards,
+                shard_mode="inline")
+            vis.destroy()
+            assert sizes == want
+            # identical total rows sorted: every neighbour row is sorted
+            # exactly once, on exactly one shard (seed row included)
+            assert extsort.STATS["rows_sorted"] == single["rows_sorted"]
+            # ≤ one sort pass per shard per level (+1 for its seed batch);
+            # empty shard-levels pay zero
+            assert (extsort.STATS["sort_passes"]
+                    <= nshards * (levels + 1 + 1))
+            assert extsort.STATS["sort_passes"] >= single["sort_passes"]
+
+    def test_implicit_engine_one_rw_pass_per_level_per_shard(self, wd):
+        """Acceptance pin: each shard pays exactly ONE fused read-write
+        pass over ITS block per level — the bitarray byte counters can't
+        hide an extra traversal."""
+        n_states, nshards = 256, 2
+        DBA.reset_stats()
+        extsort.reset_stats()
+        sizes, bits = implicit_bfs(wd, n_states, [0], RingGen(n_states),
+                                   chunk_elems=64, nshards=nshards,
+                                   shard_mode="inline")
+        assert sum(sizes) == n_states
+        passes = len(sizes) + 1       # seed pass + one per level transition
+        # ONE sync (rw) pass per shard per level, ZERO scan passes anywhere
+        # (a seed-less shard's dirty-only seed pass books as a read pass)
+        assert DBA.STATS["sync_passes"] == nshards * passes
+        assert DBA.STATS["scan_passes"] == 0
+        assert (extsort.STATS["rw_passes"] + extsort.STATS["read_passes"]
+                == nshards * passes)
+        assert extsort.STATS["sort_passes"] == 0
+        # array bytes: each shard traverses its 128-element block (32
+        # packed bytes) once per non-seed pass; the dirty-only seed pass
+        # touches only the seed's chunk (64 elems -> 16 packed bytes)
+        per_shard_bytes = (n_states // nshards) // 4
+        arr_read = DBA.STATS["bytes_read"] - DBA.STATS["log_bytes_read"]
+        assert arr_read == nshards * (passes - 1) * per_shard_bytes + 16
+        arr_written = (DBA.STATS["bytes_written"]
+                       - DBA.STATS["log_bytes_written"])
+        assert arr_written == nshards * (passes - 1) * per_shard_bytes + 16
+        bits.destroy()
+
+
+# ------------------------------------------------------ abort-safety sweep
+
+class TestAbortSafety:
+    def test_killed_worker_leaves_only_ignorable_tmp(self, wd):
+        """Satellite: simulate a worker dying mid-epoch (rows spilled, no
+        seal) — the next runtime boots clean, and a subsequent exchange
+        of the same structure neither sees nor resurrects the strays."""
+        rt = ShardRuntime(wd, 2, mode="inline")
+        lst = ShardedDiskList(rt, width=1, name="surv")
+        lst.add(np.array([[1], [2], [3]], np.uint32))
+        # spill to .tmp but DON'T seal — the "kill point"
+        rt.driver.writer(lst.spec)._spill()
+        exch = rt.driver.exchange_dir("surv")
+        assert any(f.endswith(".tmp") for f in os.listdir(exch))
+        # reboot on the same root, keeping shard state (fresh=False)
+        rt2 = ShardRuntime(wd, 2, mode="inline", fresh=False)
+        assert not any(f.endswith(".tmp") for f in os.listdir(exch))
+        lst2 = ShardedDiskList(rt2, width=1, name="surv2")
+        lst2.add(np.array([[9]], np.uint32))
+        assert lst2.sync() == 0
+        assert lst2.read_all().reshape(-1).tolist() == [9]
+
+    def test_pass_snapshot_readoption_inside_a_shard(self, wd):
+        """The PR 3 ``.pass`` re-adoption guarantee extended to bucket
+        dirs: a shard-local aborted pass snapshot AND a stray bucket
+        .tmp coexist; the next sharded sync applies the snapshot ops,
+        ignores the stray, and loses nothing."""
+        rt = ShardRuntime(wd, 2, mode="inline")
+        sb = ShardedDiskBitArray(rt, 64, name="bits", chunk_elems=16)
+        # an aborted pass left a snapshot log in shard 0's local array
+        # (global idx 3 -> shard 0 local 3, value 1)
+        local = rt._inline_ctxs[0].objects["bits"]
+        with open(local._log_path(0) + ".pass", "wb") as f:
+            f.write(np.array([[3, 1]], np.int64).tobytes())
+        # and a killed peer left a stray .tmp bucket
+        exch = rt.driver.exchange_dir("bits")
+        os.makedirs(exch, exist_ok=True)
+        with open(os.path.join(exch, "s001_d000.bin.tmp"), "wb") as f:
+            f.write(np.array([[5, 3]], np.int64).tobytes())
+        sb.update([40], [2])                     # a fresh delayed op too
+        assert sb.sync() == 0
+        assert sb.get([3, 40, 5]).tolist() == [1, 2, 0]   # stray NOT applied
+        # destroy() clears the exchange dir including the stray
+        sb.destroy()
+        assert not os.path.exists(exch)
+
+    def test_bfs_runtime_dir_is_removable_after_search(self, wd):
+        sizes, vis = breadth_first_search(
+            wd, np.array([[start_code(4)]], np.uint32), GenNextNp(4),
+            width=1, chunk_rows=64, nshards=2, shard_mode="inline")
+        assert sum(sizes) == 24
+        vis.destroy()
+        exch = os.path.join(wd, "cluster", "exchange")
+        # no sealed/partial bucket files survive the search
+        leftovers = []
+        for dirpath, _dirs, files in os.walk(exch):
+            leftovers += [f for f in files if f.endswith((".bin", ".tmp"))]
+        assert leftovers == []
+
+
+# ------------------------------------------------------------ spawn mode
+
+class TestSpawnMode:
+    """Real worker processes (multiprocessing spawn).  Kept small — the
+    ROOMY_SHARDS CI leg runs the heavier sweep below."""
+
+    def test_spawn_list_and_worker_stats(self, wd):
+        with ShardRuntime(wd, 2, mode="spawn") as rt:
+            lst = ShardedDiskList(rt, width=1)
+            lst.add(np.arange(32, dtype=np.uint32).reshape(-1, 1))
+            assert lst.sync() == 0
+            assert lst.size() == 32
+            assert lst.read_all().reshape(-1).tolist() == list(range(32))
+            from repro.core.disk.cluster import _w_get_stats
+            stats = rt.bcast(_w_get_stats)
+            assert len(stats) == 2
+            assert all("extsort" in s and "bits" in s for s in stats)
+
+    def test_spawn_worker_error_propagates(self, wd):
+        with ShardRuntime(wd, 2, mode="spawn") as rt:
+            with pytest.raises(RuntimeError, match="deliberate"):
+                rt.bcast(_boom)
+            # the runtime survives a failed collective
+            from repro.core.disk.cluster import _w_noop
+            assert rt.map(_w_noop) == [0, 1]
+
+    def test_spawn_implicit_bfs_budget_per_worker(self, wd):
+        """Per-SHARD budgets read from each worker process's own STATS:
+        one rw pass per level, zero scans, zero sorts."""
+        n_states = 256
+        with ShardRuntime(os.path.join(wd, "rt"), 2, mode="spawn") as rt:
+            from repro.core.disk.cluster import (_w_get_stats,
+                                                 sharded_implicit_bfs)
+            sizes, bits = sharded_implicit_bfs(rt, n_states, [0],
+                                               RingGen(n_states),
+                                               chunk_elems=64)
+            assert sum(sizes) == n_states
+            passes = len(sizes) + 1
+            for s in rt.bcast(_w_get_stats):
+                assert s["bits"]["sync_passes"] == passes
+                assert s["bits"]["scan_passes"] == 0
+                assert s["extsort"]["sort_passes"] == 0
+            bits.destroy()
+
+
+@pytest.mark.skipif(ROOMY_SHARDS < 2,
+                    reason="set ROOMY_SHARDS>=2 (the CI matrix leg) to run "
+                           "the spawn-mode pancake sweep")
+class TestSpawnPancakeSweep:
+    """The acceptance sweep under real processes — both engines, level
+    counts identical to the single-process engines."""
+
+    def test_both_engines_match_single_process(self, tmp_path):
+        from repro.core import ranking as R
+        n = 6
+        total = math.factorial(n)
+        want = _pancake_single(n, str(tmp_path / "single"))
+        sizes, vis = breadth_first_search(
+            str(tmp_path / "sorted"), np.array([[start_code(n)]], np.uint32),
+            GenNextNp(n), width=1, chunk_rows=1 << 10,
+            nshards=ROOMY_SHARDS, shard_mode="spawn")
+        assert sizes == want
+        vis.destroy()
+        start = int(R.rank_np(np.arange(n)[None, :])[0])
+        sizes, bits = implicit_bfs(
+            str(tmp_path / "implicit"), total, [start], NeighborsNp(n),
+            chunk_elems=256, nshards=ROOMY_SHARDS, shard_mode="spawn")
+        assert sizes == want
+        assert bits.count_values()[0] == 0
+        bits.destroy()

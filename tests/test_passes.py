@@ -8,7 +8,9 @@ Covers:
   * PassPlan stage composition (producer/consumer order, write-back rules)
     and the extsort.STATS pass ledger (rw/read passes, piggybacked stages)
   * DiskBitArray.run_pass snapshot isolation: updates queued by a consumer
-    stage mid-pass apply in the NEXT pass, never the current one
+    stage mid-pass apply in the NEXT pass, never the current one — and the
+    aborted-pass re-adoption rule extended over the sharded runtime's
+    bucket dirs (cluster.py)
   * Tier D implicit BFS: exactly ONE fused read-write pass per level
     (sync/scan/rw counters), array bytes touched == one traversal per
     level to the byte, fused ≡ unfused levels AND final bit array
@@ -140,6 +142,39 @@ class TestRunPassSnapshotIsolation:
         ba.sync()                                      # must apply BOTH
         assert ba.get([2])[0] == 1 and ba.get([3])[0] == 2
         ba.destroy()
+
+
+class TestShardedSnapshotReadoption:
+    """The ``.pass`` re-adoption guarantee above, extended over the
+    sharded runtime's bucket dirs (ISSUE 4): a sync that dies mid-pass on
+    a WORKER leaves its shard-local snapshot plus (possibly) in-flight
+    ``.tmp`` bucket files — the next sharded sync re-adopts the snapshot,
+    ignores the strays, and loses no queued op."""
+
+    def test_aborted_sharded_sync_loses_no_ops(self, wd):
+        from repro.core.disk.cluster import (ShardRuntime,
+                                             ShardedDiskBitArray)
+
+        class Boom(Exception):
+            pass
+
+        def exploding_apply(old, agg):
+            raise Boom
+
+        rt = ShardRuntime(wd, 2, mode="inline")
+        sb = ShardedDiskBitArray(rt, 64, name="bits", chunk_elems=16)
+        sb.update([3], [1])                  # global idx 3 -> shard 0
+        with pytest.raises(Boom):
+            sb.sync(apply=exploding_apply)   # dies AFTER log promotion
+        # a "killed peer" also left an in-flight .tmp bucket behind
+        exch = rt.driver.exchange_dir("bits")
+        with open(os.path.join(exch, "s001_d000.bin.tmp"), "wb") as f:
+            f.write(np.array([[5, 3]], np.int64).tobytes())
+        sb.update([40], [2])                 # global idx 40 -> shard 1
+        assert sb.sync() == 0                # re-adopts, ignores the .tmp
+        assert sb.get([3, 40, 5]).tolist() == [1, 2, 0]
+        sb.destroy()
+        assert not os.path.exists(exch)      # cleanup removed the stray
 
 
 # ------------------------------------------- Tier D fused implicit BFS
