@@ -84,17 +84,38 @@ def main():
     ap.add_argument("--shard-mode", choices=("spawn", "inline"),
                     default="spawn")
     ap.add_argument("--check", action="store_true",
-                    help="assert the sharded level counts match a "
-                         "single-shard run")
+                    help="assert the level counts match a fresh "
+                         "single-shard uninterrupted run (sharded and/or "
+                         "resumed searches alike)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="persist mid-search checkpoints to DIR "
+                         "(disk tier; see docs/checkpointing.md)")
+    ap.add_argument("--checkpoint-every", type=int, default=1, metavar="N",
+                    help="checkpoint every N completed levels")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir instead of starting over")
+    ap.add_argument("--stop-after", type=int, default=None, metavar="LEVEL",
+                    help="stop ('kill') the search after LEVEL completed "
+                         "levels — pair with --checkpoint-dir, then rerun "
+                         "with --resume")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12, "4-bit packing supports n <= 12"
     assert args.shards == 1 or args.tier == "disk", \
         "--shards is a disk-tier (Tier D) feature"
+    assert (args.checkpoint_dir is not None
+            or not (args.resume or args.stop_after is not None)), \
+        "--resume/--stop-after need --checkpoint-dir"
+    assert args.checkpoint_dir is None or args.tier == "disk", \
+        "checkpointing is a disk-tier (Tier D) feature"
+    assert not (args.check and args.stop_after is not None), \
+        "--check compares COMPLETE searches; drop --stop-after"
     total = math.factorial(n)
     print(f"pancake n={n}: {total} states, tier={args.tier}"
           + (f", shards={args.shards}" if args.shards > 1 else ""))
 
+    max_levels = args.stop_after if args.stop_after is not None else 10_000
     t0 = time.perf_counter()
     if args.tier == "j":
         res = C.breadth_first_search(
@@ -107,10 +128,17 @@ def main():
             sizes, all_lst = disk_bfs(
                 wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
                 width=1, chunk_rows=args.chunk_rows, nshards=args.shards,
-                shard_mode=args.shard_mode)
+                shard_mode=args.shard_mode, max_levels=max_levels,
+                checkpoint_dir=args.checkpoint_dir,
+                checkpoint_every=args.checkpoint_every, resume=args.resume)
             all_lst.destroy()
     dt = time.perf_counter() - t0
 
+    if args.stop_after is not None and sum(sizes) < total:
+        print("level sizes so far:", sizes)
+        print(f"stopped after level {len(sizes) - 1} (checkpoint kept in "
+              f"{args.checkpoint_dir}) — rerun with --resume to finish")
+        return
     assert sum(sizes) == total, "did not enumerate the full graph!"
     print("level sizes:", sizes)
     print(f"diameter (max flips to sort): {len(sizes) - 1}")
@@ -123,7 +151,7 @@ def main():
                 width=1, chunk_rows=args.chunk_rows)
             all_lst.destroy()
         assert sizes == want, (sizes, want)
-        print("check: matches the single-shard level counts exactly")
+        print("check: matches an uninterrupted single-shard run exactly")
 
 
 if __name__ == "__main__":

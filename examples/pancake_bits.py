@@ -88,13 +88,15 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
 
 
 def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
-        shard_mode: str = "spawn"):
+        shard_mode: str = "spawn", checkpoint_dir=None,
+        checkpoint_every: int = 1, resume: bool = False, stop_after=None):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
           f"bit array = {-(-total // 4)} bytes packed"
           + (f", shards={shards}" if shards > 1 else ""))
 
+    max_levels = stop_after if stop_after is not None else 10_000
     DBA.reset_stats()
     t0 = time.perf_counter()
     if tier == "j":
@@ -108,9 +110,12 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
             sizes, bits = disk_implicit_bfs(
                 wd, total, [start_rank], neighbors_np(n),
                 chunk_elems=chunk_elems, nshards=shards,
-                shard_mode=shard_mode)
-            hist = bits.count_values()
-            assert hist[0] == 0, "unreached states — graph not connected?"
+                shard_mode=shard_mode, max_levels=max_levels,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume)
+            if stop_after is None:
+                hist = bits.count_values()
+                assert hist[0] == 0, "unreached states — graph not connected?"
             bits.destroy()
         io_line = (f"bytes touched: {DBA.STATS['bytes_read']} read "
                    f"{DBA.STATS['bytes_written']} written"
@@ -118,6 +123,11 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
                    "the workers; see benchmarks/bfs.py --shards)")
     dt = time.perf_counter() - t0
 
+    if stop_after is not None and sum(sizes) < total:
+        print("level sizes so far:", sizes)
+        print(f"stopped after level {len(sizes) - 1} (checkpoint kept in "
+              f"{checkpoint_dir}) — rerun with --resume to finish")
+        return
     assert sum(sizes) == total, "did not enumerate the full graph!"
     print(f"{'flips':>6} {'states':>12} {'cumulative':>12}")
     cum = 0
@@ -156,14 +166,34 @@ def main():
                     default="spawn")
     ap.add_argument("--check", action="store_true",
                     help="cross-validate: vs the sorted-list engine "
-                         "(n<=8), or vs a single-shard run when "
-                         "--shards > 1")
+                         "(n<=8), or vs an uninterrupted single-shard "
+                         "run when --shards > 1 or --resume")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="persist mid-search checkpoints to DIR "
+                         "(disk tier; see docs/checkpointing.md)")
+    ap.add_argument("--checkpoint-every", type=int, default=1, metavar="N",
+                    help="checkpoint every N completed levels")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir instead of starting over")
+    ap.add_argument("--stop-after", type=int, default=None, metavar="LEVEL",
+                    help="stop ('kill') the search after LEVEL completed "
+                         "levels — pair with --checkpoint-dir, then rerun "
+                         "with --resume")
     args = ap.parse_args()
     assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
     assert args.shards == 1 or args.tier == "disk", \
         "--shards is a disk-tier (Tier D) feature"
+    assert (args.checkpoint_dir is not None
+            or not (args.resume or args.stop_after is not None)), \
+        "--resume/--stop-after need --checkpoint-dir"
+    assert args.checkpoint_dir is None or args.tier == "disk", \
+        "checkpointing is a disk-tier (Tier D) feature"
+    assert not (args.check and args.stop_after is not None), \
+        "--check compares COMPLETE searches; drop --stop-after"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
-        args.shard_mode)
+        args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
+        args.resume, args.stop_after)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 from .bfs import breadth_first_search, implicit_bfs, level_step
 from .bitarray import DiskBitArray
 from .buckets import block_owner_np, hash_owner_np, hash_rows_np
+from .checkpoint import CheckpointError, SearchCheckpoint
 from .cluster import (ShardedDiskBitArray, ShardedDiskHashTable,
                       ShardedDiskList, ShardRuntime)
 from .darray import DiskArray
@@ -18,8 +19,9 @@ from .passes import PassPlan
 from .store import ChunkStore
 
 __all__ = [
-    "ChunkStore", "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
-    "MembershipProbe", "PassPlan", "ShardRuntime", "ShardedDiskBitArray",
+    "CheckpointError", "ChunkStore", "DiskArray", "DiskBitArray",
+    "DiskHashTable", "DiskList", "MembershipProbe", "PassPlan",
+    "SearchCheckpoint", "ShardRuntime", "ShardedDiskBitArray",
     "ShardedDiskHashTable", "ShardedDiskList", "SortedRunSet",
     "block_owner_np", "breadth_first_search", "external_sort",
     "hash_owner_np", "hash_rows_np", "implicit_bfs", "level_step",

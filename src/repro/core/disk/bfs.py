@@ -25,7 +25,8 @@ indices into a 2-bit :class:`~repro.core.disk.bitarray.DiskBitArray`
 (UNSEEN/CUR/NEXT/DONE) and a level is ONE fused read-write pass with no
 sorting at all — the expand read piggybacks on the mark/rotate write via
 the pass planner (passes.py) — the paper's actual pancake construction.
-See ROADMAP "Two BFS representations" for when each engine wins.
+See docs/architecture.md "Two BFS representations" for when each
+engine wins.
 """
 from __future__ import annotations
 
@@ -35,8 +36,10 @@ from typing import Callable, List
 
 import numpy as np
 
+from . import checkpoint as ckpt
 from . import extsort
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
+from .checkpoint import SearchCheckpoint
 from .dlist import DiskList
 from .lsm import SortedRunSet
 from .passes import PassPlan
@@ -108,6 +111,43 @@ def _sharded_runtime(workdir: str, nshards: int, runtime, shard_mode: str):
                         mode=shard_mode), True
 
 
+def _ckpt_sorted(ck: SearchCheckpoint, all_runs: SortedRunSet,
+                 cur: ChunkStore, level_sizes: List[int], width: int,
+                 prev: dict) -> None:
+    """Publish one single-process sorted-engine checkpoint (end of level).
+
+    ``prev`` carries {dir, names} of THIS search's previous published
+    snapshot so unchanged runs hard-link instead of re-copying
+    (checkpoint.snapshot_sorted_state's incremental rule); it is updated
+    in place after a successful publish."""
+    version = ck.next_version()
+    stage = ck.begin(version)
+    state = ckpt.snapshot_sorted_state(stage, all_runs, cur,
+                                       prev_dir=prev.get("dir"),
+                                       prev_names=prev.get("names"))
+    sealed = ck.publish(
+        version, {"engine": "sorted", "sharded": False, "nshards": 1,
+                  "width": width, "n_states": 0,
+                  "level_sizes": list(level_sizes),
+                  "golden": ckpt.golden_owner_values(1, width, 0),
+                  "state": state})
+    prev["dir"], prev["names"] = sealed, set(state["runs"])
+
+
+def _ckpt_implicit(ck: SearchCheckpoint, bits: DiskBitArray,
+                   level_sizes: List[int], n_states: int) -> None:
+    """Publish one single-process implicit-engine checkpoint: the rotated
+    array plus the op logs holding the NEXT level's queued marks."""
+    version = ck.next_version()
+    stage = ck.begin(version)
+    state = ckpt.snapshot_implicit_state(stage, bits)
+    ck.publish(version, {"engine": "implicit", "sharded": False,
+                         "nshards": 1, "width": 1, "n_states": n_states,
+                         "level_sizes": list(level_sizes),
+                         "golden": ckpt.golden_owner_values(1, 1, n_states),
+                         "state": state})
+
+
 def breadth_first_search(
     workdir: str,
     start_rows: np.ndarray,
@@ -124,6 +164,9 @@ def breadth_first_search(
     runtime=None,
     shard_mode: str = "spawn",
     bucket_capacity=None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
 
@@ -143,7 +186,23 @@ def breadth_first_search(
     are identical to the single-process engine for any nshards.  In
     spawn mode ``gen_next`` must be picklable; ``shard_mode="inline"``
     runs the same protocol in-process (closure-friendly).
+
+    ``checkpoint_dir=`` enables durable checkpoint/restart
+    (disk/checkpoint.py, format in docs/checkpointing.md): every
+    ``checkpoint_every`` completed levels the visited run set and the
+    frontier are snapshotted with the atomic-publish discipline, so a
+    killed search resumes (``resume=True``) from its last checkpoint with
+    level counts identical to an uninterrupted run, paying only the
+    remaining levels' sort passes (checkpoint I/O is booked under the
+    separate ``ckpt_*`` STATS counters).  ``resume=True`` with no
+    published checkpoint starts fresh; a corrupt or structurally
+    mismatched checkpoint raises
+    :class:`~repro.core.disk.checkpoint.CheckpointError`.  Checkpointing
+    requires the fused engine.
     """
+    if checkpoint_dir is not None and not fused:
+        raise ValueError("checkpointing requires the fused engine "
+                         "(fused=True)")
     if runtime is not None or nshards > 1:
         if not fused:
             raise ValueError("the sharded engine is fused-only: "
@@ -155,36 +214,51 @@ def breadth_first_search(
             rt, start_rows, gen_next, width, chunk_rows=chunk_rows,
             max_levels=max_levels, run_rows=run_rows, max_runs=max_runs,
             compaction=compaction, size_ratio=size_ratio,
-            bucket_capacity=bucket_capacity)
+            bucket_capacity=bucket_capacity, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume)
         handle._own_runtime = own
         return sizes, handle
     if not fused:
         return _breadth_first_search_unfused(
             workdir, start_rows, gen_next, width, chunk_rows, max_levels)
 
-    start_rows = np.asarray(start_rows, np.uint32).reshape(-1, width)
     # One scratch dir for every level's sort runs (run stores are destroyed
     # each level; reusing the parent avoids leaking one empty dir per level).
     tmp_dir = os.path.join(workdir, "bfs_tmp")
-    seed = ChunkStore(os.path.join(workdir, "bfs_seed"), width,
-                      chunk_rows=chunk_rows, fresh=True)
-    seed.append(start_rows)
-    seed.flush()
-    cur = ChunkStore(os.path.join(workdir, "bfs_lev0"), width,
-                     chunk_rows=chunk_rows, fresh=True)
-    extsort.external_sort(seed, cur, tmp_dir, run_rows=run_rows, dedupe=True)
-    seed.destroy()
-
     all_runs = SortedRunSet(workdir, width, chunk_rows, max_runs=max_runs,
                             name="bfs_all", policy=compaction,
                             size_ratio=size_ratio)
-    all_runs.add_run(cur)
-
-    level_sizes: List[int] = [cur.size]
-    if cur.size == 0:
-        shutil.rmtree(tmp_dir, ignore_errors=True)
-        return [], all_runs
-    for lev in range(1, max_levels + 1):
+    ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    ck_prev: dict = {}
+    state = ck.latest() if (ck is not None and resume) else None
+    if state is not None:
+        ckpt.validate_resume(state, "sorted", 1, width, 0, sharded=False)
+        cur = ckpt.restore_sorted_state(ck.snapshot_dir(state),
+                                        state["state"], all_runs, workdir,
+                                        width, chunk_rows)
+        assert cur is not None, "single-process checkpoint lost its frontier"
+        level_sizes: List[int] = [int(x) for x in state["level_sizes"]]
+        start_lev = len(level_sizes)
+    else:
+        start_rows = np.asarray(start_rows, np.uint32).reshape(-1, width)
+        seed = ChunkStore(os.path.join(workdir, "bfs_seed"), width,
+                          chunk_rows=chunk_rows, fresh=True)
+        seed.append(start_rows)
+        seed.flush()
+        cur = ChunkStore(os.path.join(workdir, "bfs_lev0"), width,
+                         chunk_rows=chunk_rows, fresh=True)
+        extsort.external_sort(seed, cur, tmp_dir, run_rows=run_rows,
+                              dedupe=True)
+        seed.destroy()
+        all_runs.add_run(cur)
+        level_sizes = [cur.size]
+        if cur.size == 0:
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            return [], all_runs
+        start_lev = 1
+        if ck is not None:      # level-0 snapshot: any kill is resumable
+            _ckpt_sorted(ck, all_runs, cur, level_sizes, width, ck_prev)
+    for lev in range(start_lev, max_levels + 1):
         # Expansion streams straight into sorted run construction: the raw
         # frontier is never written unsorted to disk and read back (the one
         # sort pass happens as the neighbours are generated).
@@ -208,6 +282,8 @@ def breadth_first_search(
         all_runs.add_run(nxt)
         cur = nxt
         level_sizes.append(cur.size)
+        if ck is not None and lev % checkpoint_every == 0:
+            _ckpt_sorted(ck, all_runs, cur, level_sizes, width, ck_prev)
     shutil.rmtree(tmp_dir, ignore_errors=True)
     return level_sizes, all_runs
 
@@ -226,6 +302,9 @@ def implicit_bfs(
     runtime=None,
     shard_mode: str = "spawn",
     bucket_capacity=None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
 ):
     """The paper's *second* BFS engine: implicit search over a 2-bit array.
 
@@ -256,8 +335,8 @@ def implicit_bfs(
     Memory is O(chunk + expand_batch·fanout) regardless of frontier size;
     disk is n_states/4 bytes + queued marks.  Wins over the sorted-list
     engine when levels are a large fraction of the state space (see
-    ROADMAP "Two BFS representations"); completes 9! states where the
-    single-word sorted encodings stop at 8!.
+    docs/architecture.md "Two BFS representations"); completes 9! states
+    where the single-word sorted encodings stop at 8!.
 
     Returns (level_sizes, bits) — ``bits`` holds the final DONE marks
     (distance parity is not recoverable; level_sizes is the histogram).
@@ -270,7 +349,19 @@ def implicit_bfs(
     single-process engine for any nshards.  In spawn mode
     ``gen_neighbors`` must be picklable; ``shard_mode="inline"`` runs the
     protocol in-process.
+
+    ``checkpoint_dir=`` / ``checkpoint_every=`` / ``resume=`` enable
+    durable checkpoint/restart exactly as in
+    :func:`breadth_first_search`: a snapshot captures the rotated 2-bit
+    array AND the op logs holding the next level's queued marks, so a
+    resumed run continues mid-search with identical level counts and only
+    the remaining levels' array passes (fused engine only; the chunk
+    layout is pinned by the checkpoint — on resume the snapshot's
+    ``chunk_elems`` wins over the argument).
     """
+    if checkpoint_dir is not None and not fused:
+        raise ValueError("checkpointing requires the fused engine "
+                         "(fused=True)")
     if runtime is not None or nshards > 1:
         if not fused:
             raise ValueError("the sharded engine is fused-only: "
@@ -281,14 +372,23 @@ def implicit_bfs(
         sizes, handle = sharded_implicit_bfs(
             rt, n_states, start_idx, gen_neighbors, chunk_elems=chunk_elems,
             max_levels=max_levels, expand_batch=expand_batch,
-            log_buf_rows=log_buf_rows, bucket_capacity=bucket_capacity)
+            log_buf_rows=log_buf_rows, bucket_capacity=bucket_capacity,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            resume=resume)
         handle._own_runtime = own
         return sizes, handle
+    ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    state = ck.latest() if (ck is not None and resume) else None
+    if state is not None:
+        ckpt.validate_resume(state, "implicit", 1, 1, n_states,
+                             sharded=False)
+        # The snapshot pins the chunk layout: adopt with ITS chunk_elems.
+        chunk_elems = int(state["state"]["chunk_elems"])
+    # On resume every chunk arrives from the snapshot: skip the zero-fill
+    # (writing n/4 bytes of zeros just to overwrite them).
     bits = DiskBitArray(workdir, n_states, chunk_elems=chunk_elems,
-                        name="bfs_bits", log_buf_rows=log_buf_rows)
-    start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
-    assert start.size and start.min() >= 0 and start.max() < n_states
-    bits.update(start, np.full(start.shape, CUR, np.uint8))
+                        name="bfs_bits", log_buf_rows=log_buf_rows,
+                        init_chunks=state is None)
 
     def expand(chunk_start: int, vals: np.ndarray) -> None:
         (cur_pos,) = np.nonzero(vals == CUR)
@@ -298,6 +398,9 @@ def implicit_bfs(
             bits.update(nbrs, np.full(nbrs.shape, NEXT, np.uint8))
 
     if not fused:
+        start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
+        assert start.size and start.min() >= 0 and start.max() < n_states
+        bits.update(start, np.full(start.shape, CUR, np.uint8))
         return _implicit_bfs_unfused(bits, start, expand, max_levels)
 
     nxt_count = 0
@@ -310,14 +413,25 @@ def implicit_bfs(
         vals = np.where(vals == CUR, np.uint8(DONE), vals)
         return np.where(vals == NEXT, np.uint8(CUR), vals)
 
-    # Pass 0: apply the seed marks (overwrite), count them, and expand them
-    # — the level-1 expand read already rides the seed write pass.  The
-    # array is freshly zeroed, so CUR can only exist in the seeds' (dirty)
-    # chunks: dirty_only skips the guaranteed-no-op read of the rest.
-    bits.run_pass(PassPlan("bfs-seed", dirty_only=True)
-                  .reads(count_cur).reads(expand))
-    level_sizes: List[int] = [nxt_count]
-    for _ in range(max_levels):
+    if state is not None:
+        ckpt.restore_implicit_state(ck.snapshot_dir(state), bits)
+        level_sizes: List[int] = [int(x) for x in state["level_sizes"]]
+    else:
+        start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
+        assert start.size and start.min() >= 0 and start.max() < n_states
+        bits.update(start, np.full(start.shape, CUR, np.uint8))
+        # Pass 0: apply the seed marks (overwrite), count them, and expand
+        # them — the level-1 expand read already rides the seed write pass.
+        # The array is freshly zeroed, so CUR can only exist in the seeds'
+        # (dirty) chunks: dirty_only skips the guaranteed-no-op read of the
+        # rest.
+        bits.run_pass(PassPlan("bfs-seed", dirty_only=True)
+                      .reads(count_cur).reads(expand))
+        level_sizes = [nxt_count]
+        if ck is not None:      # level-0 snapshot: any kill is resumable
+            _ckpt_implicit(ck, bits, level_sizes, n_states)
+    lev = len(level_sizes) - 1          # highest level already counted
+    while lev < max_levels:
         nxt_count = 0
         # One fused read-write pass: marks from the previous expansion
         # apply (UNSEEN→NEXT), the chunk rotates, the new frontier is
@@ -330,6 +444,9 @@ def implicit_bfs(
         if nxt_count == 0:
             break
         level_sizes.append(nxt_count)
+        lev += 1
+        if ck is not None and lev % checkpoint_every == 0:
+            _ckpt_implicit(ck, bits, level_sizes, n_states)
     return level_sizes, bits
 
 

@@ -94,7 +94,13 @@ class DiskBitArray:
     """Chunked packed 2-bit array with per-chunk delayed-update op logs."""
 
     def __init__(self, workdir: str, n: int, chunk_elems: int = 1 << 22,
-                 name: str | None = None, log_buf_rows: int = 1 << 20):
+                 name: str | None = None, log_buf_rows: int = 1 << 20,
+                 init_chunks: bool = True):
+        """``init_chunks=False`` skips writing the zeroed chunk files —
+        ONLY for a caller about to :meth:`adopt_snapshot` (which supplies
+        every chunk): resuming a large search must not write n/4 bytes of
+        zeros just to overwrite them.  The array is unusable until the
+        adoption lands."""
         assert chunk_elems % VALS_PER_BYTE == 0
         self.n = int(n)
         self.chunk_elems = int(chunk_elems)
@@ -105,10 +111,11 @@ class DiskBitArray:
         if os.path.isdir(self.path):
             shutil.rmtree(self.path)
         os.makedirs(self.path)
-        for c in range(self.n_chunks):
-            rows = self._chunk_rows(c)
-            np.save(self._chunk_path(c),
-                    np.zeros(-(-rows // VALS_PER_BYTE), np.uint8))
+        if init_chunks:
+            for c in range(self.n_chunks):
+                rows = self._chunk_rows(c)
+                np.save(self._chunk_path(c),
+                        np.zeros(-(-rows // VALS_PER_BYTE), np.uint8))
         self._log_bufs: List[List[np.ndarray]] = [[] for _ in range(self.n_chunks)]
         self._log_buffered = 0
 
@@ -269,6 +276,41 @@ class DiskBitArray:
                 # mid-pass leaves the snapshot for the next pass to re-adopt
                 # instead of silently dropping this chunk's queued ops.
                 os.remove(sp)
+
+    # ------------------------------------------------------- checkpoint
+    def snapshot_to(self, dst: str) -> int:
+        """Copy the array's durable state — packed chunks, spilled op logs,
+        and any ``.pass`` snapshot an aborted pass left behind — into
+        ``dst``.  RAM-buffered ops are flushed first so the snapshot is
+        self-contained: adopting it replays exactly the marks that were
+        queued here.  Bytes are booked under the checkpoint counters
+        (``extsort.STATS['ckpt_bytes_written']``), never the array/log
+        ledgers, so pass budgets are unchanged.  Returns bytes copied.
+        """
+        from .checkpoint import copy_dir_booked
+        self._flush_logs()
+        return copy_dir_booked(self.path, dst, "ckpt_bytes_written")
+
+    def adopt_snapshot(self, src: str) -> int:
+        """Replace this array's on-disk state with a snapshot taken by
+        :meth:`snapshot_to` (same ``n`` / ``chunk_elems`` layout — the
+        checkpoint layer validates that before calling).  Clears RAM log
+        buffers and any local log files first so nothing of the pre-adopt
+        life leaks into the restored state.  Returns bytes copied
+        (booked under ``ckpt_bytes_read``).
+        """
+        from .checkpoint import copy_dir_booked
+        self._log_bufs = [[] for _ in range(self.n_chunks)]
+        self._log_buffered = 0
+        for fn in os.listdir(self.path):
+            p = os.path.join(self.path, fn)
+            if os.path.isfile(p) and not fn.startswith("b"):
+                os.remove(p)            # stale op logs / .pass snapshots
+        total = copy_dir_booked(src, self.path, "ckpt_bytes_read")
+        for c in range(self.n_chunks):
+            assert os.path.isfile(self._chunk_path(c)), \
+                f"snapshot is missing chunk {c} — torn checkpoint payload"
+        return total
 
     # -------------------------------------------------------- streaming
     def map_chunks(self, fn: Callable[[int, np.ndarray], None]) -> None:

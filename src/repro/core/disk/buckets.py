@@ -1,5 +1,13 @@
 """Disk-backed delayed-op buckets — the paper's per-(src,dst) bucket files.
 
+Invariant: readers only ever see *sealed* (atomically renamed) bucket
+files — a writer killed mid-epoch leaves nothing but ignorable ``.tmp``
+strays — and the numpy owner maps here are bit-identical to Tier J's
+``core/sharding.py`` maps (golden-pinned in tests/test_cluster.py),
+since an ownership disagreement silently corrupts a sharded structure.
+Overflow past a bucket's per-epoch capacity is dropped AND counted
+exactly, never silently.
+
 Roomy ships every delayed operation to the disk that owns its target in
 fixed-capacity bucket files, one per (source, destination) pair, and applies
 them in a streaming batch at sync (paper §2–3).  Tier J already has the

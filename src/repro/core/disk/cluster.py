@@ -1,5 +1,14 @@
 """ShardRuntime — the multiprocess sharded Tier D runtime.
 
+Invariant: partitions are disjoint under the static owner functions and
+every delayed op reaches its owner exactly once through sealed bucket
+files, so for ANY nshards the sharded structures and both sharded BFS
+engines are element-wise equivalent to their single-process forms, and
+the per-level pass budgets hold PER SHARD (the exchange adds bucket I/O,
+never a sort or an extra traversal).  A completed ``map`` is the
+collective barrier; checkpoint epochs snapshot every shard at that
+barrier before the coordinator publishes (docs/checkpointing.md).
+
 The paper's promise is that "all aspects of parallelism and remote I/O are
 hidden within the library": a structure is partitioned over workers by a
 static owner function, delayed operations are buffered into per-(src,dst)
@@ -53,11 +62,13 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from . import checkpoint as ckpt
 from . import extsort
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .bitarray import STATS as BITS_STATS
 from .buckets import (BucketWriter, block_owner_np, block_size, cleanup_strays,
                       hash_owner_np, iter_incoming)
+from .checkpoint import SearchCheckpoint
 from .dhash import DiskHashTable
 from .dlist import DiskList
 from .lsm import SortedRunSet
@@ -343,10 +354,10 @@ def _w_make(ctx: ShardContext, spec: dict) -> None:
     elif kind == "bits":
         per = spec["per"]
         n_local = max(0, min(per, spec["n"] - ctx.shard * per))
-        ctx.objects[name] = DiskBitArray(ctx.dir, n_local,
-                                         chunk_elems=spec["chunk_elems"],
-                                         name=name,
-                                         log_buf_rows=spec["log_buf_rows"])
+        ctx.objects[name] = DiskBitArray(
+            ctx.dir, n_local, chunk_elems=spec["chunk_elems"], name=name,
+            log_buf_rows=spec["log_buf_rows"],
+            init_chunks=spec.get("init_chunks", True))
     else:
         raise ValueError(f"unknown structure kind {kind!r}")
 
@@ -612,11 +623,12 @@ class ShardedDiskBitArray(_ShardedBase):
     def __init__(self, runtime: ShardRuntime, n: int,
                  name: str | None = None, chunk_elems: int = 1 << 22,
                  log_buf_rows: int = 1 << 20,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, init_chunks: bool = True):
         spec = {"kind": "bits", "name": name or runtime.next_name("sbits"),
                 "n": int(n), "per": block_size(int(n), runtime.nshards),
                 "chunk_elems": chunk_elems, "log_buf_rows": log_buf_rows,
-                "rec_width": 2, "rec_dtype": "int64", "capacity": capacity}
+                "rec_width": 2, "rec_dtype": "int64", "capacity": capacity,
+                "init_chunks": init_chunks}
         super().__init__(runtime, spec)
         self.n = int(n)
         self.per = spec["per"]
@@ -752,6 +764,46 @@ def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
     return nxt.size
 
 
+def _w_bfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
+                    prev_root: Optional[str]) -> dict:
+    """Snapshot this shard's partition of a sorted-list search — the
+    visited run stack and the current frontier — into its subdirectory of
+    the coordinator's staging dir.  Runs at the level barrier (a completed
+    map IS the barrier), so every shard's snapshot describes the same
+    level.  Runs this worker already exported into the previous published
+    snapshot (``prev_root``, tracked worker-side in ``st["ckpt_names"]``)
+    hard-link instead of re-copying.  Returns the picklable per-shard
+    state for the manifest."""
+    st = ctx.objects[spec["name"]]
+    sub = f"shard{ctx.shard:03d}"
+    prev_dir = os.path.join(prev_root, sub) if prev_root else None
+    state = ckpt.snapshot_sorted_state(
+        os.path.join(stage_root, sub), st["all"], st["cur"],
+        prev_dir=prev_dir, prev_names=st.get("ckpt_names"))
+    st["ckpt_names"] = set(state["runs"])
+    state["lev"] = st["lev"]
+    return state
+
+
+def _w_bfs_restore(ctx: ShardContext, spec: dict, snap_root: str,
+                   state: dict) -> None:
+    """Rebuild this shard's search state from a sealed snapshot (the
+    inverse of :func:`_w_bfs_snapshot`); a ``cur_index`` of None means the
+    shard's frontier was empty at snapshot time."""
+    _w_bfs_init(ctx, spec)
+    st = ctx.objects[spec["name"]]
+    cur = ckpt.restore_sorted_state(
+        os.path.join(snap_root, f"shard{ctx.shard:03d}"), state, st["all"],
+        ctx.dir, spec["width"], spec["chunk_rows"])
+    if cur is None:
+        cur = ChunkStore(os.path.join(ctx.dir, f"{spec['name']}_empty"),
+                         spec["width"], chunk_rows=spec["chunk_rows"],
+                         fresh=True)
+        cur.flush(mark_sorted=True)
+    st["cur"] = cur
+    st["lev"] = int(state["lev"])
+
+
 def _w_bfs_visited_size(ctx: ShardContext, name: str) -> int:
     return ctx.objects[name]["all"].size()
 
@@ -795,11 +847,33 @@ class ShardedVisited:
             self.runtime.shutdown()
 
 
+def _ckpt_sharded_sorted(ck: SearchCheckpoint, runtime: ShardRuntime,
+                         spec: dict, level_sizes: List[int],
+                         dropped: int, prev: dict) -> None:
+    """One coordinated checkpoint epoch (sorted engine): every shard
+    snapshots its partition at the level barrier, then the coordinator
+    seals and publishes — so the manifest is either absent (crash
+    mid-stage: previous checkpoint adoptable) or names a snapshot every
+    shard completed.  ``prev`` carries this search's previous sealed
+    snapshot dir so shards hard-link unchanged runs; updated in place."""
+    version = ck.next_version()
+    stage = ck.begin(version)
+    shards = runtime.bcast(_w_bfs_snapshot, spec, stage, prev.get("dir"))
+    prev["dir"] = ck.publish(version, {
+        "engine": "sorted", "sharded": True, "nshards": runtime.nshards,
+        "width": spec["width"], "n_states": 0,
+        "level_sizes": list(level_sizes), "dropped": int(dropped),
+        "golden": ckpt.golden_owner_values(runtime.nshards, spec["width"], 0),
+        "shards": shards})
+
+
 def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
                 width: int, chunk_rows: int = 1 << 16,
                 max_levels: int = 10_000, run_rows: int = 1 << 18,
                 max_runs: int = 8, compaction: str = "full",
-                size_ratio: int = 2, bucket_capacity: Optional[int] = None):
+                size_ratio: int = 2, bucket_capacity: Optional[int] = None,
+                checkpoint_dir: Optional[str] = None,
+                checkpoint_every: int = 1, resume: bool = False):
     """Distributed sorted-list BFS: each shard owns the states hashing to
     it, sorts only its own partition (one sort pass per level per shard),
     and ships cross-shard expansion rows through the bucket exchange.
@@ -808,32 +882,58 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
     instance — see examples/pancake_bfs.py).  Returns (level_sizes,
     ShardedVisited); level counts are exactly the single-process
     engine's for any nshards.
+
+    ``checkpoint_dir=`` adds the coordinated checkpoint epoch of
+    docs/checkpointing.md: each shard snapshots its partition at the
+    level (sync) barrier, the coordinator publishes atomically.  Resume
+    re-validates nshards and the owner-function golden values before any
+    shard adopts its partition.
     """
     spec = {"kind": "bfs", "name": runtime.next_name("bfs"), "width": width,
             "chunk_rows": chunk_rows, "run_rows": run_rows,
             "max_runs": max_runs, "compaction": compaction,
             "size_ratio": size_ratio, "rec_width": width,
             "rec_dtype": "uint32", "capacity": bucket_capacity}
-    runtime.bcast(_w_bfs_init, spec)
-
-    start_rows = np.ascontiguousarray(start_rows,
-                                      np.uint32).reshape(-1, width)
-    writer = runtime.driver.writer(spec)
-    writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
-    epoch = runtime.next_epoch()
-    dropped = int(writer.seal(epoch).sum())
-    sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
-
-    level_sizes: List[int] = [sum(sizes)]
-    if level_sizes[0] == 0:
-        return [], ShardedVisited(runtime, spec, dropped)
-    for _lev in range(1, max_levels + 1):
+    ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    ck_prev: dict = {}
+    state = ck.latest() if (ck is not None and resume) else None
+    if state is not None:
+        ckpt.validate_resume(state, "sorted", runtime.nshards, width, 0,
+                             sharded=True)
+        runtime.bcast(_w_bfs_init, spec)
+        snap = ck.snapshot_dir(state)
+        runtime.map(_w_bfs_restore,
+                    [(spec, snap, state["shards"][s])
+                     for s in range(runtime.nshards)])
+        level_sizes: List[int] = [int(x) for x in state["level_sizes"]]
+        dropped = int(state.get("dropped", 0))
+        start_lev = len(level_sizes)
+    else:
+        runtime.bcast(_w_bfs_init, spec)
+        start_rows = np.ascontiguousarray(start_rows,
+                                          np.uint32).reshape(-1, width)
+        writer = runtime.driver.writer(spec)
+        writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
+        epoch = runtime.next_epoch()
+        dropped = int(writer.seal(epoch).sum())
+        sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
+        level_sizes = [sum(sizes)]
+        if level_sizes[0] == 0:
+            return [], ShardedVisited(runtime, spec, dropped)
+        start_lev = 1
+        if ck is not None:      # level-0 snapshot: any kill is resumable
+            _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
+                                 ck_prev)
+    for lev in range(start_lev, max_levels + 1):
         epoch = runtime.next_epoch()
         dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next, epoch))
         total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
         if total == 0:
             break
         level_sizes.append(total)
+        if ck is not None and lev % checkpoint_every == 0:
+            _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
+                                 ck_prev)
     return level_sizes, ShardedVisited(runtime, spec, dropped)
 
 
@@ -899,37 +999,90 @@ def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
     return count, int(writer.seal(epoch_out).sum())
 
 
+def _w_ibfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
+                     epoch_pending: int) -> dict:
+    """Snapshot this shard's block of the bit array at the level barrier.
+
+    Marks bucket-shipped here at ``epoch_pending`` (the epoch the pass we
+    just ran sealed, not yet absorbed) are folded into the local op log
+    FIRST, so the snapshot is self-contained: bucket files are consumed,
+    and the live run's next pass simply finds that epoch already drained.
+    """
+    obj: DiskBitArray = ctx.objects[spec["name"]]
+    base = ctx.shard * spec["per"]
+    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
+                                   epoch_pending, 2, "int64"):
+        obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
+    return ckpt.snapshot_implicit_state(
+        os.path.join(stage_root, f"shard{ctx.shard:03d}"), obj)
+
+
+def _w_ibfs_restore(ctx: ShardContext, spec: dict, snap_root: str) -> None:
+    """Adopt this shard's block (packed chunks + queued-mark logs) from a
+    sealed snapshot, replacing the freshly zeroed local array."""
+    ckpt.restore_implicit_state(
+        os.path.join(snap_root, f"shard{ctx.shard:03d}"),
+        ctx.objects[spec["name"]])
+
+
 def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
                          gen_neighbors, chunk_elems: int = 1 << 22,
                          max_levels: int = 10_000,
                          expand_batch: int = 1 << 16,
                          log_buf_rows: int = 1 << 20,
-                         bucket_capacity: Optional[int] = None):
+                         bucket_capacity: Optional[int] = None,
+                         checkpoint_dir: Optional[str] = None,
+                         checkpoint_every: int = 1, resume: bool = False):
     """Distributed implicit BFS: the 2-bit array is block-distributed,
     each shard runs ONE fused mark/rotate/count/expand pass per level
     over its own block, and cross-shard marks ride the bucket exchange
     into the owner's snapshot-isolated op log.
 
     In spawn mode ``gen_neighbors`` must be picklable.  Returns
-    (level_sizes, ShardedDiskBitArray)."""
+    (level_sizes, ShardedDiskBitArray).
+
+    ``checkpoint_dir=`` adds the coordinated checkpoint epoch
+    (docs/checkpointing.md): each shard absorbs its pending bucket marks
+    into the local op log and snapshots its block at the level barrier;
+    the coordinator publishes atomically.  Resume re-validates nshards,
+    n_states, the chunk layout, and the owner-function golden values
+    before any shard adopts its block.
+    """
+    ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    state = ck.latest() if (ck is not None and resume) else None
+    if state is not None:
+        ckpt.validate_resume(state, "implicit", runtime.nshards, 1,
+                             n_states, sharded=True)
+        # The snapshot pins the chunk layout: adopt with ITS chunk_elems.
+        chunk_elems = int(state["chunk_elems"])
+    # On resume every chunk arrives from the snapshot: skip the zero-fill.
     bits = ShardedDiskBitArray(runtime, n_states, chunk_elems=chunk_elems,
                                log_buf_rows=log_buf_rows,
-                               capacity=bucket_capacity)
+                               capacity=bucket_capacity,
+                               init_chunks=state is None)
     spec = dict(bits.spec)
     spec["expand_batch"] = expand_batch
-    start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
-    assert start.size and start.min() >= 0 and start.max() < n_states
-    bits.update(start, np.full(start.shape, CUR, np.uint8))
-    epoch = runtime.next_epoch()
-    dropped = int(runtime.driver.writer(bits.spec).seal(epoch).sum())
-    # The first worker pass absorbs the sealed seed buckets itself
-    # (epoch_in == the seed epoch): seeds queue as delayed ops, the
-    # dirty-only seed pass applies/counts/expands them.
-
-    level_sizes: List[int] = []
-    seed = True
-    epoch_in = epoch
-    for _ in range(max_levels + 1):
+    if state is not None:
+        runtime.bcast(_w_ibfs_restore, spec, ck.snapshot_dir(state))
+        level_sizes: List[int] = [int(x) for x in state["level_sizes"]]
+        dropped = int(state.get("dropped", 0))
+        seed = False
+        # All queued marks live in the adopted op logs; a fresh epoch has
+        # no bucket files, so the first resumed pass absorbs nothing.
+        epoch_in = runtime.next_epoch()
+    else:
+        start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
+        assert start.size and start.min() >= 0 and start.max() < n_states
+        bits.update(start, np.full(start.shape, CUR, np.uint8))
+        epoch = runtime.next_epoch()
+        dropped = int(runtime.driver.writer(bits.spec).seal(epoch).sum())
+        # The first worker pass absorbs the sealed seed buckets itself
+        # (epoch_in == the seed epoch): seeds queue as delayed ops, the
+        # dirty-only seed pass applies/counts/expands them.
+        level_sizes = []
+        seed = True
+        epoch_in = epoch
+    while len(level_sizes) - 1 < max_levels:
         epoch_out = runtime.next_epoch()
         res = runtime.map(_w_ibfs_pass,
                           [(spec, gen_neighbors, epoch_in, epoch_out, seed)]
@@ -941,5 +1094,18 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
         level_sizes.append(total)
         seed = False
         epoch_in = epoch_out
+        lev = len(level_sizes) - 1
+        if ck is not None and lev % checkpoint_every == 0:
+            version = ck.next_version()
+            stage = ck.begin(version)
+            runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
+            ck.publish(version, {
+                "engine": "implicit", "sharded": True,
+                "nshards": runtime.nshards,
+                "width": 1, "n_states": int(n_states),
+                "chunk_elems": int(chunk_elems),
+                "level_sizes": list(level_sizes), "dropped": int(dropped),
+                "golden": ckpt.golden_owner_values(runtime.nshards, 1,
+                                                   int(n_states))})
     bits.dropped = dropped
     return level_sizes, bits

@@ -51,9 +51,15 @@ __all__ = [
 # ``piggybacked_stages`` for every consumer stage that rode a producer's
 # traversal instead of paying its own pass (the planner's savings, and the
 # budget the implicit-BFS tests pin: ONE rw pass per level, zero extra).
+# Checkpoint/restart I/O (disk/checkpoint.py) is booked ONLY under the
+# ``ckpt_*`` counters — snapshot copies must never inflate the sort/merge/
+# pass ledgers, so the per-level budgets hold with checkpointing on and a
+# resumed run provably pays only the remaining levels' passes.
 STATS = {"sort_passes": 0, "rows_sorted": 0, "merge_passes": 0,
          "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0,
-         "rw_passes": 0, "read_passes": 0, "piggybacked_stages": 0}
+         "rw_passes": 0, "read_passes": 0, "piggybacked_stages": 0,
+         "ckpt_bytes_read": 0, "ckpt_bytes_written": 0,
+         "ckpt_snapshots": 0, "ckpt_restores": 0}
 
 
 def reset_stats() -> None:

@@ -52,6 +52,20 @@ class SortedRunSet:
         self._seq = 0
 
     # ---------------------------------------------------------- mutation
+    def adopt_runs(self, runs: List[ChunkStore], seq: int) -> None:
+        """Adopt a restored run stack wholesale (checkpoint/restart path).
+
+        ``seq`` must be the compaction sequence recorded at snapshot time:
+        compaction output dirs are named ``{name}.compact{seq}`` with
+        ``fresh=True``, so replaying from a smaller seq could wipe a live
+        run directory.  Every adopted run must hold the sortedness claim.
+        """
+        assert not self.runs, "adopt_runs on a non-empty run set"
+        for r in runs:
+            assert r.sorted, "adopt_runs requires sorted stores"
+        self.runs = list(runs)
+        self._seq = max(self._seq, int(seq))
+
     def add_run(self, store: ChunkStore) -> None:
         """Fold a sorted run in (ownership moves here). O(1) — no merge."""
         assert store.sorted, "SortedRunSet.add_run requires a sorted store"

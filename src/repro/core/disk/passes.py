@@ -1,5 +1,12 @@
 """Streaming pass planner (Tier D) — one traversal, many stages.
 
+Invariant: a pass applies exactly the updates queued strictly BEFORE it
+opened (op logs are promoted to a read-only snapshot at open; stages'
+mid-pass updates land in the next pass's log), and every planned
+traversal is booked once in ``extsort.STATS`` — so "one fused read-write
+pass per BFS level" is countable and CI-enforced
+(docs/architecture.md §"Pass-budget contract").
+
 Roomy prices every operation in streaming passes over chunked storage
 (paper §2), so the cheapest pass is the one that never runs.  A
 :class:`PassPlan` names the stages that want to see each chunk of ONE

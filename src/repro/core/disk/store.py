@@ -96,6 +96,9 @@ class ChunkStore:
             self.total_rows = 0
         self._buf: List[np.ndarray] = []
         self._buf_rows = 0
+        # True whenever the on-disk manifest lags the in-memory state
+        # (chunks flushed since the last _write_meta).
+        self._meta_dirty = not os.path.exists(self._meta_path)
 
     # ------------------------------------------------------------- write
     def append(self, rows: np.ndarray) -> None:
@@ -132,6 +135,7 @@ class ChunkStore:
             self._chunk_ranges.append(None)
         self.n_chunks += 1
         self.total_rows += chunk.shape[0]
+        self._meta_dirty = True
         self._buf = [rest] if rest.shape[0] else []
         self._buf_rows = rest.shape[0]
         # Meta is deliberately NOT rewritten here: one JSON serialization +
@@ -150,6 +154,7 @@ class ChunkStore:
                            [r[0].hex(), r[1].hex()] if r else None
                            for r in self._chunk_ranges]}, f)
         os.replace(tmp, self._meta_path)       # atomic
+        self._meta_dirty = False
 
     def _validate_sorted_ranges(self) -> None:
         for i in range(1, self.n_chunks):
@@ -170,6 +175,31 @@ class ChunkStore:
         self._validate_sorted_ranges()
         self.sorted = True
         self._write_meta()
+
+    # ------------------------------------------------------------ export
+    def export_to(self, dst: str) -> int:
+        """Copy this store (chunks + manifest) to ``dst``, byte-identical.
+
+        Requires a flushed store — the manifest is the durable contract,
+        and exporting unflushed RAM state would seal a store whose manifest
+        disagrees with its chunk files.  A store whose chunks auto-flushed
+        without a manifest write (append of an exact chunk multiple) gets
+        its manifest synced here first, so the export can never undercount
+        chunks.  Used by the checkpoint layer (disk/checkpoint.py), which
+        books the returned byte count under the dedicated ``ckpt_*`` STATS
+        counters.  Returns bytes copied.
+        """
+        assert self._buf_rows == 0, "flush() before export_to()"
+        if self._meta_dirty:
+            self._write_meta()
+        os.makedirs(dst, exist_ok=True)
+        total = 0
+        for fn in sorted(os.listdir(self.path)):
+            p = os.path.join(self.path, fn)
+            if os.path.isfile(p):
+                shutil.copyfile(p, os.path.join(dst, fn))
+                total += os.path.getsize(p)
+        return total
 
     # -------------------------------------------------------------- read
     def _chunk_path(self, i: int) -> str:

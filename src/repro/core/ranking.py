@@ -1,5 +1,12 @@
 """Permutation rank/unrank — the index space of the implicit bit-array BFS.
 
+Invariant: ``rank`` and ``unrank`` are exact inverses forming a bijection
+{permutations of n} ↔ [0, n!), identical bit-for-bit between the numpy
+(Tier D) and jax (Tier J) implementations, and rank *rows* sort
+lexicographically in rank order (word 0 most significant).  The implicit
+BFS engines index 2-bit state arrays with these ranks, so any deviation
+silently conflates distinct states.
+
 The paper's pancake computation never stores permutations as row keys: a
 permutation IS its index into a RoomyArray of 2-bit elements, via a
 rank/unrank bijection {permutations of n} ↔ [0, n!).  We use the

@@ -1,0 +1,369 @@
+"""Checkpoint/restart of mid-search BFS runs (disk/checkpoint.py).
+
+Pins the two contracts of docs/checkpointing.md:
+
+  * Resume equivalence — a search killed after ANY level and resumed
+    produces level counts identical to an uninterrupted run, on both Tier
+    D engines, single-process and sharded (inline workers, nshards=2).
+  * Budget separation — kill + resume together pay exactly the
+    uninterrupted run's sort/merge/array-pass budgets; checkpoint I/O is
+    booked ONLY under the ``ckpt_*`` counters.
+
+And the corruption paths: truncated manifest, stray ``.tmp`` snapshot
+from a killed writer, version rollback, shard-count mismatch, and
+owner-golden tampering all either adopt a previous checkpoint or fail
+loudly (CheckpointError) — never silently corrupt.
+
+Hypothesis-free (deterministic pancake inputs), like test_passes.py.
+"""
+import json
+import math
+import os
+import shutil
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import ranking as R
+from repro.core.disk import (CheckpointError, SearchCheckpoint,
+                             breadth_first_search, implicit_bfs)
+from repro.core.disk import bitarray as DBA
+from repro.core.disk import extsort
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+from pancake_bfs import GenNextNp, start_code          # noqa: E402
+from pancake_bits import NeighborsNp                   # noqa: E402
+
+N = 5
+TOTAL = math.factorial(N)
+START_ROWS = np.array([[start_code(N)]], np.uint32)
+START_RANK = int(R.rank_np(np.arange(N)[None, :])[0])
+
+
+def run_sorted(wd, nshards=1, **kw):
+    sizes, handle = breadth_first_search(
+        str(wd), START_ROWS, GenNextNp(N), width=1, chunk_rows=1 << 8,
+        nshards=nshards, shard_mode="inline", **kw)
+    handle.destroy()
+    return sizes
+
+
+def run_implicit(wd, nshards=1, **kw):
+    sizes, bits = implicit_bfs(
+        str(wd), TOTAL, [START_RANK], NeighborsNp(N), chunk_elems=1 << 6,
+        nshards=nshards, shard_mode="inline", **kw)
+    bits.destroy()
+    return sizes
+
+
+ENGINES = {"sorted": run_sorted, "implicit": run_implicit}
+
+
+@pytest.fixture(scope="module")
+def want():
+    """Uninterrupted level counts (identical for both engines — pinned)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as wd:
+        s = run_sorted(os.path.join(wd, "s"))
+        i = run_implicit(os.path.join(wd, "i"))
+    assert s == i and sum(s) == TOTAL
+    return s
+
+
+class TestResumeEquivalence:
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    @pytest.mark.parametrize("nshards", [1, 2])
+    @pytest.mark.parametrize("kill_after", [0, 2, 4])
+    def test_kill_resume_equals_uninterrupted(self, tmp_path, want, engine,
+                                              nshards, kill_after):
+        run = ENGINES[engine]
+        ckdir = str(tmp_path / "ck")
+        partial = run(tmp_path / "w1", nshards=nshards, checkpoint_dir=ckdir,
+                      checkpoint_every=1, max_levels=kill_after)
+        assert partial == want[:kill_after + 1]
+        got = run(tmp_path / "w2", nshards=nshards, checkpoint_dir=ckdir,
+                  resume=True)
+        assert got == want
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    def test_checkpoint_every_coarser_than_kill(self, tmp_path, want, engine):
+        """Kill between checkpoints: resume adopts the last published one
+        and replays the gap — counts still identical."""
+        run = ENGINES[engine]
+        ckdir = str(tmp_path / "ck")
+        run(tmp_path / "w1", checkpoint_dir=ckdir, checkpoint_every=2,
+            max_levels=3)                  # checkpoints at levels 0 and 2
+        got = run(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+        assert got == want
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    def test_resume_without_checkpoint_starts_fresh(self, tmp_path, want,
+                                                    engine):
+        got = ENGINES[engine](tmp_path / "w", checkpoint_dir=str(
+            tmp_path / "empty"), resume=True)
+        assert got == want
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    def test_resume_of_finished_search(self, tmp_path, want, engine):
+        """Resuming a checkpoint of a COMPLETED search terminates with the
+        full (unchanged) level counts."""
+        run = ENGINES[engine]
+        ckdir = str(tmp_path / "ck")
+        assert run(tmp_path / "w1", checkpoint_dir=ckdir) == want
+        assert run(tmp_path / "w2", checkpoint_dir=ckdir,
+                   resume=True) == want
+
+    def test_checkpoint_requires_fused(self, tmp_path):
+        with pytest.raises(ValueError, match="fused"):
+            run_sorted(tmp_path, checkpoint_dir=str(tmp_path / "ck"),
+                       fused=False)
+        with pytest.raises(ValueError, match="fused"):
+            run_implicit(tmp_path, checkpoint_dir=str(tmp_path / "ck"),
+                         fused=False)
+
+
+class TestBudgetSeparation:
+    """kill + resume == uninterrupted, counter for counter — checkpointing
+    adds NO sort/merge/pass work, and books its I/O only under ckpt_*."""
+
+    def _phases(self, run, tmp_path, kill_after):
+        def measure(fn):
+            extsort.reset_stats()
+            DBA.reset_stats()
+            fn()
+            return dict(extsort.STATS), dict(DBA.STATS)
+
+        full = measure(lambda: run(tmp_path / "full"))
+        ckdir = str(tmp_path / "ck")
+        kill = measure(lambda: run(tmp_path / "w1", checkpoint_dir=ckdir,
+                                   checkpoint_every=1, max_levels=kill_after))
+        res = measure(lambda: run(tmp_path / "w2", checkpoint_dir=ckdir,
+                                  resume=True))
+        return full, kill, res
+
+    def test_sorted_pays_only_remaining_levels(self, tmp_path):
+        full, kill, res = self._phases(run_sorted, tmp_path, kill_after=2)
+        for key in ("sort_passes", "rows_sorted", "merge_passes"):
+            assert kill[0][key] + res[0][key] == full[0][key], key
+        # No checkpoint I/O leaks into a plain run; kill/resume book theirs
+        # under the dedicated counters only.
+        assert full[0]["ckpt_bytes_written"] == 0
+        assert full[0]["ckpt_snapshots"] == 0
+        assert kill[0]["ckpt_bytes_written"] > 0
+        assert kill[0]["ckpt_snapshots"] == 3          # levels 0, 1, 2
+        assert res[0]["ckpt_bytes_read"] > 0
+        assert res[0]["ckpt_restores"] == 1
+
+    def test_implicit_pays_only_remaining_passes(self, tmp_path):
+        full, kill, res = self._phases(run_implicit, tmp_path, kill_after=2)
+        for key in ("rw_passes", "read_passes", "piggybacked_stages"):
+            assert kill[0][key] + res[0][key] == full[0][key], key
+        # Array traversal bytes (total minus op-log bytes) — the implicit
+        # engine's per-level budget unit — also sum exactly.
+        for total_key, log_key in (("bytes_read", "log_bytes_read"),
+                                   ("bytes_written", "log_bytes_written")):
+            assert (kill[1][total_key] - kill[1][log_key]
+                    + res[1][total_key] - res[1][log_key]
+                    == full[1][total_key] - full[1][log_key]), total_key
+        assert full[0]["ckpt_bytes_written"] == 0
+        assert kill[0]["ckpt_bytes_written"] > 0
+        assert res[0]["ckpt_restores"] == 1
+
+
+class TestCorruptionPaths:
+    """Never silently corrupt: adopt a previous checkpoint or fail loudly."""
+
+    def _checkpointed(self, tmp_path, engine="implicit", max_levels=2):
+        ckdir = str(tmp_path / "ck")
+        ENGINES[engine](tmp_path / "w1", checkpoint_dir=ckdir,
+                        checkpoint_every=1, max_levels=max_levels)
+        return ckdir
+
+    def test_truncated_manifest_adopts_sealed_snapshot(self, tmp_path, want):
+        ckdir = self._checkpointed(tmp_path)
+        with open(os.path.join(ckdir, "CHECKPOINT"), "w") as f:
+            f.write('{"vers')                      # torn mid-write
+        got = run_implicit(tmp_path / "w2", checkpoint_dir=ckdir,
+                           resume=True)
+        assert got == want
+
+    def test_truncated_manifest_no_snapshot_fails_loudly(self, tmp_path):
+        ckdir = self._checkpointed(tmp_path)
+        with open(os.path.join(ckdir, "CHECKPOINT"), "w") as f:
+            f.write("garbage")
+        for fn in os.listdir(ckdir):               # remove all sealed dirs
+            if fn != "CHECKPOINT":
+                shutil.rmtree(os.path.join(ckdir, fn))
+        with pytest.raises(CheckpointError, match="corrupt"):
+            run_implicit(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+
+    def test_stray_tmp_snapshot_ignored(self, tmp_path, want):
+        """A killed writer's half-staged v*.tmp is garbage: adoption uses
+        the sealed previous version and the next publish sweeps the stray."""
+        ckdir = self._checkpointed(tmp_path)
+        ck = SearchCheckpoint(ckdir)
+        sealed = ck.latest()["version"]
+        stray = os.path.join(ckdir, f"v{sealed + 1:06d}.tmp")
+        os.makedirs(stray)
+        with open(os.path.join(stray, "halfwritten.bin"), "wb") as f:
+            f.write(b"\x00" * 17)
+        got = run_implicit(tmp_path / "w2", checkpoint_dir=ckdir,
+                           resume=True)
+        assert got == want
+        assert not any(fn.endswith(".tmp") for fn in os.listdir(ckdir))
+
+    def test_sealed_but_unpublished_version_ignored(self, tmp_path):
+        """Crash between the snapshot seal and the manifest publish: the
+        manifest's (older) version stays authoritative."""
+        ckdir = self._checkpointed(tmp_path)
+        ck = SearchCheckpoint(ckdir)
+        meta = ck.latest()
+        v = meta["version"]
+        orphan = os.path.join(ckdir, f"v{v + 1:06d}")
+        shutil.copytree(os.path.join(ckdir, f"v{v:06d}"), orphan)
+        payload = json.load(open(os.path.join(orphan, "META.json")))
+        payload["version"] = v + 1
+        payload["level_sizes"] = [999]             # would corrupt if adopted
+        json.dump(payload, open(os.path.join(orphan, "META.json"), "w"))
+        assert SearchCheckpoint(ckdir).latest()["version"] == v
+        assert SearchCheckpoint(ckdir).latest()["level_sizes"] != [999]
+
+    def test_missing_manifest_adopts_highest_sealed(self, tmp_path, want):
+        ckdir = self._checkpointed(tmp_path)
+        os.remove(os.path.join(ckdir, "CHECKPOINT"))
+        got = run_implicit(tmp_path / "w2", checkpoint_dir=ckdir,
+                           resume=True)
+        assert got == want
+
+    def test_version_rollback_fails_loudly(self, tmp_path):
+        """Manifest names a version whose snapshot is gone — refusing to
+        guess beats resuming from the wrong state."""
+        ckdir = self._checkpointed(tmp_path)
+        with open(os.path.join(ckdir, "CHECKPOINT"), "w") as f:
+            json.dump({"version": 1}, f)           # v1 was GC'd long ago
+        with pytest.raises(CheckpointError, match="rollback"):
+            run_implicit(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    def test_shard_count_mismatch_fails_loudly(self, tmp_path, engine):
+        ckdir = str(tmp_path / "ck")
+        ENGINES[engine](tmp_path / "w1", nshards=2, checkpoint_dir=ckdir,
+                        checkpoint_every=1, max_levels=2)
+        with pytest.raises(CheckpointError, match="nshards"):
+            ENGINES[engine](tmp_path / "w2", nshards=1, checkpoint_dir=ckdir,
+                            resume=True)
+
+    def test_golden_owner_tamper_fails_loudly(self, tmp_path):
+        ckdir = self._checkpointed(tmp_path, engine="sorted")
+        ck = SearchCheckpoint(ckdir)
+        v = ck.latest()["version"]
+        mpath = os.path.join(ckdir, f"v{v:06d}", "META.json")
+        payload = json.load(open(mpath))
+        payload["golden"]["hash"] = [7] * len(payload["golden"]["hash"])
+        json.dump(payload, open(mpath, "w"))
+        with pytest.raises(CheckpointError, match="golden"):
+            run_sorted(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+
+    def test_engine_mismatch_fails_loudly(self, tmp_path):
+        ckdir = self._checkpointed(tmp_path, engine="sorted")
+        with pytest.raises(CheckpointError, match="engine"):
+            run_implicit(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    def test_single_process_checkpoint_vs_sharded_resume(self, tmp_path,
+                                                         engine):
+        """Single-process and sharded snapshots have different payload
+        layouts — resuming one with the other (even at nshards=1, via an
+        explicit runtime=) must raise, not KeyError its way into the
+        payload."""
+        from repro.core.disk import ShardRuntime
+        ckdir = self._checkpointed(tmp_path, engine=engine)   # nshards=1
+        rt = ShardRuntime(str(tmp_path / "rt"), 1, mode="inline")
+        with pytest.raises(CheckpointError, match="single-process"):
+            if engine == "sorted":
+                breadth_first_search(
+                    str(tmp_path / "w2"), START_ROWS, GenNextNp(N), width=1,
+                    chunk_rows=1 << 8, runtime=rt,
+                    checkpoint_dir=ckdir, resume=True)
+            else:
+                implicit_bfs(
+                    str(tmp_path / "w2"), TOTAL, [START_RANK],
+                    NeighborsNp(N), chunk_elems=1 << 6, runtime=rt,
+                    checkpoint_dir=ckdir, resume=True)
+
+    @pytest.mark.parametrize("key", ["nshards", "n_states", "golden"])
+    def test_missing_structural_key_fails_loudly(self, tmp_path, key):
+        """Deleting a structural key must not vacuously pass validation
+        (a .get(key, caller_value) default would)."""
+        ckdir = self._checkpointed(tmp_path)
+        ck = SearchCheckpoint(ckdir)
+        v = ck.latest()["version"]
+        mpath = os.path.join(ckdir, f"v{v:06d}", "META.json")
+        payload = json.load(open(mpath))
+        del payload[key]
+        json.dump(payload, open(mpath, "w"))
+        with pytest.raises(CheckpointError, match="missing"):
+            run_implicit(tmp_path / "w2", checkpoint_dir=ckdir, resume=True)
+
+
+class TestIncrementalSnapshots:
+    """Visited runs are immutable between compactions, so checkpoint L+1
+    hard-links the runs checkpoint L already holds instead of re-copying:
+    total checkpoint I/O stays O(|visited| + compaction), not
+    O(levels x |visited|)."""
+
+    def _run(self, wd, name, rows):
+        from repro.core.disk import ChunkStore
+        from repro.core.disk.extsort import sort_rows
+        st = ChunkStore(os.path.join(str(wd), name), 1, chunk_rows=1 << 8,
+                        fresh=True)
+        st.append(sort_rows(np.asarray(rows, np.uint32).reshape(-1, 1)))
+        st.flush(mark_sorted=True)
+        return st
+
+    def test_second_snapshot_links_previous_runs(self, tmp_path):
+        from repro.core.disk import SortedRunSet
+        from repro.core.disk import checkpoint as CK
+        rs = SortedRunSet(str(tmp_path), 1, name="rs")
+        rs.add_run(self._run(tmp_path, "lev0", [1, 2, 3]))
+        rs.add_run(self._run(tmp_path, "lev1", [4, 5]))
+        ck = SearchCheckpoint(str(tmp_path / "ck"))
+        extsort.reset_stats()
+        v = ck.next_version()
+        s1 = CK.snapshot_sorted_state(ck.begin(v), rs, rs.runs[-1])
+        sealed = ck.publish(v, {"state": s1})
+        first_bytes = extsort.STATS["ckpt_bytes_written"]
+        assert first_bytes > 0
+
+        rs.add_run(self._run(tmp_path, "lev2", [6]))
+        extsort.reset_stats()
+        v = ck.next_version()
+        s2 = CK.snapshot_sorted_state(ck.begin(v), rs, rs.runs[-1],
+                                      prev_dir=sealed,
+                                      prev_names=set(s1["runs"]))
+        new_run_bytes = sum(
+            os.path.getsize(os.path.join(str(tmp_path), "lev2", fn))
+            for fn in os.listdir(os.path.join(str(tmp_path), "lev2")))
+        # Only the NEW run paid copy I/O; lev0/lev1 were hard-linked.
+        assert extsort.STATS["ckpt_bytes_written"] == new_run_bytes
+        snap2 = ck.publish(v, {"state": s2})
+        # The sealed snapshot is still complete and readable.
+        from repro.core.disk import ChunkStore
+        got = []
+        for dname in s2["runs"]:
+            got += ChunkStore(os.path.join(snap2, dname),
+                              1).read_all()[:, 0].tolist()
+        assert sorted(got) == [1, 2, 3, 4, 5, 6]
+
+    def test_end_to_end_snapshot_stays_complete(self, tmp_path, want):
+        run_sorted(tmp_path / "w", checkpoint_dir=str(tmp_path / "ck"),
+                   checkpoint_every=1)
+        ck = SearchCheckpoint(str(tmp_path / "ck"))
+        meta = ck.latest()
+        snap = ck.snapshot_dir(meta)
+        from repro.core.disk import ChunkStore
+        total = sum(ChunkStore(os.path.join(snap, dname), 1).size
+                    for dname in meta["state"]["runs"])
+        assert total == sum(want)
