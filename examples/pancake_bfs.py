@@ -12,6 +12,7 @@ watch the working directory instead of your memory.
 """
 import argparse
 import math
+import os
 import tempfile
 import time
 
@@ -20,6 +21,7 @@ import numpy as np
 
 from repro.core import constructs as C
 from repro.core.disk import breadth_first_search as disk_bfs
+from repro.core.disk import extsort, faults
 
 
 def start_code(n):
@@ -99,6 +101,12 @@ def main():
                     help="stop ('kill') the search after LEVEL completed "
                          "levels — pair with --checkpoint-dir, then rerun "
                          "with --resume")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run under a seeded fault storm (ROOMY_FAULTS, "
+                         "docs/fault-tolerance.md): torn appends + "
+                         "transient I/O flakes, plus a real worker kill "
+                         "when --shards > 1 — the search must self-heal "
+                         "to the exact fault-free level counts")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12, "4-bit packing supports n <= 12"
@@ -111,6 +119,15 @@ def main():
         "checkpointing is a disk-tier (Tier D) feature"
     assert not (args.check and args.stop_after is not None), \
         "--check compares COMPLETE searches; drop --stop-after"
+    assert args.chaos is None or args.tier == "disk", \
+        "--chaos is a disk-tier (Tier D) feature"
+    chaos = args.chaos is not None
+    if chaos and not os.environ.get(faults.ENV_VAR):
+        # An explicit ROOMY_FAULTS (the CI chaos matrix) wins; --chaos
+        # alone gets the default seeded storm.  The env var is how spawn
+        # workers inherit the plan.
+        os.environ[faults.ENV_VAR] = faults.default_chaos_spec(
+            args.chaos, args.shards)
     total = math.factorial(n)
     print(f"pancake n={n}: {total} states, tier={args.tier}"
           + (f", shards={args.shards}" if args.shards > 1 else ""))
@@ -125,14 +142,31 @@ def main():
         sizes = res.level_sizes
     else:
         with tempfile.TemporaryDirectory() as wd:
+            ckdir = args.checkpoint_dir
+            if chaos and ckdir is None:
+                # Surviving a kill needs checkpoints: --chaos turns them
+                # on in the scratch dir when none were requested.
+                ckdir = os.path.join(wd, "chaos_ck")
             sizes, all_lst = disk_bfs(
                 wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
                 width=1, chunk_rows=args.chunk_rows, nshards=args.shards,
                 shard_mode=args.shard_mode, max_levels=max_levels,
-                checkpoint_dir=args.checkpoint_dir,
-                checkpoint_every=args.checkpoint_every, resume=args.resume)
+                checkpoint_dir=ckdir,
+                checkpoint_every=args.checkpoint_every, resume=args.resume,
+                max_recoveries=8 if chaos else 0)
             all_lst.destroy()
     dt = time.perf_counter() - t0
+
+    if chaos:
+        print(f"chaos: ROOMY_FAULTS={os.environ[faults.ENV_VAR]!r}")
+        print(f"chaos: io_retries={extsort.STATS['io_retries']} "
+              f"io_giveups={extsort.STATS['io_giveups']} "
+              f"recoveries={extsort.STATS['recoveries']} "
+              f"replayed_levels={extsort.STATS['replayed_levels']}")
+        # The storm stays out of everything after the search — in
+        # particular the --check reference run must be fault-free.
+        os.environ.pop(faults.ENV_VAR, None)
+        faults.uninstall()
 
     if args.stop_after is not None and sum(sizes) < total:
         print("level sizes so far:", sizes)

@@ -19,6 +19,7 @@ ROADMAP "scale past 8!" item.  Known diameters (OEIS A058986):
 """
 import argparse
 import math
+import os
 import tempfile
 import time
 
@@ -29,6 +30,7 @@ from repro.core import constructs as C
 from repro.core import ranking as R
 from repro.core.disk import bitarray as DBA
 from repro.core.disk import breadth_first_search as disk_bfs
+from repro.core.disk import extsort, faults
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
 
@@ -89,12 +91,18 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
 
 def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         shard_mode: str = "spawn", checkpoint_dir=None,
-        checkpoint_every: int = 1, resume: bool = False, stop_after=None):
+        checkpoint_every: int = 1, resume: bool = False, stop_after=None,
+        chaos=None):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
           f"bit array = {-(-total // 4)} bytes packed"
           + (f", shards={shards}" if shards > 1 else ""))
+    if chaos is not None and not os.environ.get(faults.ENV_VAR):
+        # An explicit ROOMY_FAULTS (the CI chaos matrix) wins; --chaos
+        # alone gets the default seeded storm.  The env var is how spawn
+        # workers inherit the plan.
+        os.environ[faults.ENV_VAR] = faults.default_chaos_spec(chaos, shards)
 
     max_levels = stop_after if stop_after is not None else 10_000
     DBA.reset_stats()
@@ -107,12 +115,17 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
                    f"(packed array, read+written)")
     else:
         with tempfile.TemporaryDirectory() as wd:
+            if chaos is not None and checkpoint_dir is None:
+                # Surviving a kill needs checkpoints: --chaos turns them
+                # on in the scratch dir when none were requested.
+                checkpoint_dir = os.path.join(wd, "chaos_ck")
             sizes, bits = disk_implicit_bfs(
                 wd, total, [start_rank], neighbors_np(n),
                 chunk_elems=chunk_elems, nshards=shards,
                 shard_mode=shard_mode, max_levels=max_levels,
                 checkpoint_dir=checkpoint_dir,
-                checkpoint_every=checkpoint_every, resume=resume)
+                checkpoint_every=checkpoint_every, resume=resume,
+                max_recoveries=8 if chaos is not None else 0)
             if stop_after is None:
                 hist = bits.count_values()
                 assert hist[0] == 0, "unreached states — graph not connected?"
@@ -122,6 +135,17 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
                    if shards == 1 else "(per-shard byte counters live in "
                    "the workers; see benchmarks/bfs.py --shards)")
     dt = time.perf_counter() - t0
+
+    if chaos is not None:
+        print(f"chaos: ROOMY_FAULTS={os.environ[faults.ENV_VAR]!r}")
+        print(f"chaos: io_retries={extsort.STATS['io_retries']} "
+              f"io_giveups={extsort.STATS['io_giveups']} "
+              f"recoveries={extsort.STATS['recoveries']} "
+              f"replayed_levels={extsort.STATS['replayed_levels']}")
+        # The storm stays out of everything after the search — in
+        # particular the --check reference runs must be fault-free.
+        os.environ.pop(faults.ENV_VAR, None)
+        faults.uninstall()
 
     if stop_after is not None and sum(sizes) < total:
         print("level sizes so far:", sizes)
@@ -180,6 +204,12 @@ def main():
                     help="stop ('kill') the search after LEVEL completed "
                          "levels — pair with --checkpoint-dir, then rerun "
                          "with --resume")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run under a seeded fault storm (ROOMY_FAULTS, "
+                         "docs/fault-tolerance.md): torn appends + "
+                         "transient I/O flakes, plus a real worker kill "
+                         "when --shards > 1 — the search must self-heal "
+                         "to the exact fault-free level counts")
     args = ap.parse_args()
     assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
     assert args.shards == 1 or args.tier == "disk", \
@@ -191,9 +221,11 @@ def main():
         "checkpointing is a disk-tier (Tier D) feature"
     assert not (args.check and args.stop_after is not None), \
         "--check compares COMPLETE searches; drop --stop-after"
+    assert args.chaos is None or args.tier == "disk", \
+        "--chaos is a disk-tier (Tier D) feature"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
         args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
-        args.resume, args.stop_after)
+        args.resume, args.stop_after, args.chaos)
 
 
 if __name__ == "__main__":

@@ -3,12 +3,14 @@
 Real chunked disk files, streaming passes, external merge sort; see
 DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 """
+from . import faults
 from .bfs import breadth_first_search, implicit_bfs, level_step
 from .bitarray import DiskBitArray
 from .buckets import block_owner_np, hash_owner_np, hash_rows_np
 from .checkpoint import CheckpointError, SearchCheckpoint
 from .cluster import (ShardedDiskBitArray, ShardedDiskHashTable,
-                      ShardedDiskList, ShardRuntime)
+                      ShardedDiskList, ShardFailure, ShardRuntime,
+                      WorkerLost)
 from .darray import DiskArray
 from .dhash import DiskHashTable
 from .dlist import DiskList
@@ -21,9 +23,10 @@ from .store import ChunkStore
 __all__ = [
     "CheckpointError", "ChunkStore", "DiskArray", "DiskBitArray",
     "DiskHashTable", "DiskList", "MembershipProbe", "PassPlan",
-    "SearchCheckpoint", "ShardRuntime", "ShardedDiskBitArray",
-    "ShardedDiskHashTable", "ShardedDiskList", "SortedRunSet",
-    "block_owner_np", "breadth_first_search", "external_sort",
-    "hash_owner_np", "hash_rows_np", "implicit_bfs", "level_step",
-    "merge_difference", "row_keys", "sort_rows", "stream_dedupe",
+    "SearchCheckpoint", "ShardFailure", "ShardRuntime",
+    "ShardedDiskBitArray", "ShardedDiskHashTable", "ShardedDiskList",
+    "SortedRunSet", "WorkerLost", "block_owner_np", "breadth_first_search",
+    "external_sort", "faults", "hash_owner_np", "hash_rows_np",
+    "implicit_bfs", "level_step", "merge_difference", "row_keys",
+    "sort_rows", "stream_dedupe",
 ]

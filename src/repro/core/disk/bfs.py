@@ -167,6 +167,7 @@ def breadth_first_search(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    max_recoveries: int = 0,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
 
@@ -199,6 +200,12 @@ def breadth_first_search(
     mismatched checkpoint raises
     :class:`~repro.core.disk.checkpoint.CheckpointError`.  Checkpointing
     requires the fused engine.
+
+    ``max_recoveries=`` > 0 (sharded runs only) arms in-run self-healing:
+    worker death, collective timeout, or a fatal I/O error rolls every
+    shard back to the last coordinated checkpoint and replays, up to the
+    budget; an unrecoverable failure raises a structured
+    :class:`~repro.core.disk.cluster.ShardFailure` (docs/fault-tolerance.md).
     """
     if checkpoint_dir is not None and not fused:
         raise ValueError("checkpointing requires the fused engine "
@@ -215,7 +222,8 @@ def breadth_first_search(
             max_levels=max_levels, run_rows=run_rows, max_runs=max_runs,
             compaction=compaction, size_ratio=size_ratio,
             bucket_capacity=bucket_capacity, checkpoint_dir=checkpoint_dir,
-            checkpoint_every=checkpoint_every, resume=resume)
+            checkpoint_every=checkpoint_every, resume=resume,
+            max_recoveries=max_recoveries)
         handle._own_runtime = own
         return sizes, handle
     if not fused:
@@ -305,6 +313,7 @@ def implicit_bfs(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    max_recoveries: int = 0,
 ):
     """The paper's *second* BFS engine: implicit search over a 2-bit array.
 
@@ -358,6 +367,10 @@ def implicit_bfs(
     the remaining levels' array passes (fused engine only; the chunk
     layout is pinned by the checkpoint — on resume the snapshot's
     ``chunk_elems`` wins over the argument).
+
+    ``max_recoveries=`` > 0 (sharded runs only) arms in-run self-healing
+    from the coordinated checkpoints, exactly as in
+    :func:`breadth_first_search`.
     """
     if checkpoint_dir is not None and not fused:
         raise ValueError("checkpointing requires the fused engine "
@@ -374,7 +387,7 @@ def implicit_bfs(
             max_levels=max_levels, expand_batch=expand_batch,
             log_buf_rows=log_buf_rows, bucket_capacity=bucket_capacity,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            resume=resume)
+            resume=resume, max_recoveries=max_recoveries)
         handle._own_runtime = own
         return sizes, handle
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None

@@ -38,6 +38,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from . import faults
 from .extsort import segment_combine_ordered
 from .passes import PassPlan, record_pass
 
@@ -174,8 +175,11 @@ class DiskBitArray:
             if not buf:
                 continue
             rec = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
-            with open(self._log_path(c), "ab") as f:
-                f.write(np.ascontiguousarray(rec, np.int64).tobytes())
+            # Positioned truncate-on-retry append: a torn spill attempt can
+            # never leave a partial (idx, val) record in the op log.
+            faults.append_bytes(
+                "oplog_append", self._log_path(c),
+                np.ascontiguousarray(rec, np.int64).tobytes(), chunk=c)
             STATS["bytes_written"] += rec.nbytes
             STATS["log_bytes_written"] += rec.nbytes
             self._log_bufs[c] = []
@@ -269,7 +273,9 @@ class DiskBitArray:
             assert vals.shape[0] == rows
             if has_log or plan.writes_chunks:
                 out = pack2(vals)
-                np.save(self._chunk_path(c), out)
+                faults.retry_io("chunk_flush",
+                                lambda: np.save(self._chunk_path(c), out),
+                                chunk=c)
                 STATS["bytes_written"] += out.nbytes
             if has_log:
                 # Consumed only after the chunk lands: a stage raising

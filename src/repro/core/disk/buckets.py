@@ -43,6 +43,8 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from . import faults
+
 __all__ = [
     "hash_rows_np", "hash_owner_np", "block_owner_np", "block_size",
     "BucketWriter", "iter_incoming", "incoming_files", "cleanup_strays",
@@ -155,8 +157,12 @@ class BucketWriter:
             if not buf:
                 continue
             rec = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
-            with open(self._tmp_path(d), "ab") as f:
-                f.write(np.ascontiguousarray(rec, self.dtype).tobytes())
+            # Positioned, truncate-on-retry append: a torn or transiently
+            # failed spill can never leave partial records in the bucket.
+            faults.append_bytes(
+                "bucket_spill", self._tmp_path(d),
+                np.ascontiguousarray(rec, self.dtype).tobytes(),
+                shard=self.src, dst=d)
             self._bufs[d] = []
         self._nbuf = 0
 
@@ -170,8 +176,11 @@ class BucketWriter:
         for d in range(self.nshards):
             tmp = self._tmp_path(d)
             if os.path.exists(tmp):
-                os.replace(tmp, os.path.join(
-                    self.root, _bucket_name(epoch, self.src, d)))
+                final = os.path.join(
+                    self.root, _bucket_name(epoch, self.src, d))
+                faults.retry_io("bucket_seal",
+                                lambda t=tmp, f=final: os.replace(t, f),
+                                shard=self.src, dst=d)
         dropped = self._dropped.copy()
         self._accepted[:] = 0
         self._dropped[:] = 0
@@ -214,17 +223,28 @@ def iter_incoming(root: str, dst: int, epoch: int, width: int,
 # ---------------------------------------------------------------- cleanup
 
 def cleanup_strays(root: str) -> List[str]:
-    """Remove in-flight ``.tmp`` buckets orphaned by a killed worker.
+    """Remove in-flight strays orphaned by a killed worker: ``.tmp``
+    buckets, plus any foreign ``.pass`` files (op-log pass snapshots
+    belong under structure dirs, never in an exchange dir — one here is
+    wreckage).  What gets swept is booked, not silently discarded:
+    ``extsort.STATS['stray_files_swept'/'stray_bytes_swept']`` report the
+    count and bytes so a fresh=False startup says what it cleaned.
 
     Sealed files are NOT touched — an epoch sealed but not yet applied is
     real queued data; only the runtime's ``fresh`` wipe discards those.
     Returns the removed paths (tests assert on them)."""
+    from . import extsort          # lazy: extsort is downstream of us
     removed = []
     if not os.path.isdir(root):
         return removed
     for fn in sorted(os.listdir(root)):
-        if fn.endswith(".tmp"):
+        if fn.endswith(".tmp") or fn.endswith(".pass"):
             path = os.path.join(root, fn)
+            try:
+                extsort.STATS["stray_bytes_swept"] += os.path.getsize(path)
+            except OSError:
+                pass
             os.remove(path)
+            extsort.STATS["stray_files_swept"] += 1
             removed.append(path)
     return removed

@@ -56,7 +56,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from . import extsort
+from . import extsort, faults
 from .buckets import block_owner_np, hash_owner_np
 from .lsm import SortedRunSet
 from .store import ChunkStore
@@ -300,11 +300,22 @@ class SearchCheckpoint:
         stage = self._vdir(version) + ".tmp"
         with open(os.path.join(stage, META), "w") as f:
             json.dump(meta, f)
-        os.rename(stage, self._vdir(version))          # atomic seal
-        tmp = self._manifest_path() + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"version": version}, f)
-        os.replace(tmp, self._manifest_path())         # atomic publish
+        # Both steps are atomic renames (idempotent: re-running a rename
+        # whose source already moved is caught by the exists() guard in the
+        # closure), so transient-errno retry is safe; a giveup here leaves
+        # the previous checkpoint adoptable per the crash rules above.
+        faults.retry_io(
+            "ckpt_publish",
+            lambda: (os.path.isdir(stage)
+                     and os.rename(stage, self._vdir(version))),
+            version=version)                           # atomic seal
+
+        def _point_manifest() -> None:
+            tmp = self._manifest_path() + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"version": version}, f)
+            os.replace(tmp, self._manifest_path())     # atomic publish
+        faults.retry_io("ckpt_publish", _point_manifest, version=version)
         extsort.STATS["ckpt_snapshots"] += 1
         for fn in os.listdir(self.root):               # best-effort GC
             m = _VDIR_RE.match(fn)

@@ -63,7 +63,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from . import checkpoint as ckpt
-from . import extsort
+from . import extsort, faults
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .bitarray import STATS as BITS_STATS
 from .buckets import (BucketWriter, block_owner_np, block_size, cleanup_strays,
@@ -76,11 +76,48 @@ from .passes import PassPlan
 from .store import ChunkStore
 
 __all__ = [
-    "ShardContext", "ShardRuntime", "ShardedDiskList", "ShardedDiskHashTable",
+    "ShardContext", "ShardRuntime", "ShardFailure", "WorkerLost",
+    "ShardedDiskList", "ShardedDiskHashTable",
     "ShardedDiskBitArray", "sharded_bfs", "sharded_implicit_bfs",
 ]
 
 _MAP_TIMEOUT = 600.0          # seconds a collective phase may take
+
+
+class WorkerLost(RuntimeError):
+    """A shard worker died or timed out mid-collective.  Carries the shard
+    id and the collective's name so the recovery path (and a human reading
+    the log) knows exactly where the pool broke."""
+
+    def __init__(self, msg: str, shard: Optional[int] = None,
+                 phase: Optional[str] = None):
+        super().__init__(msg)
+        self.shard = shard
+        self.phase = phase
+
+
+class ShardFailure(RuntimeError):
+    """Unrecoverable sharded-run failure — the loud, structured end state.
+
+    Raised when in-run recovery is impossible (no adoptable coordinated
+    checkpoint, ``max_recoveries`` budget exhausted, or a fatal errno
+    survived the retry layer): the run stops HERE, naming the shard, the
+    fault site/phase, the exchange epoch and the BFS level, instead of
+    hanging on a dead queue or silently desynchronizing partitions."""
+
+    def __init__(self, reason: str, *, shard=None, site=None, epoch=None,
+                 level=None, recoveries: int = 0):
+        self.shard = shard
+        self.site = site
+        self.epoch = epoch
+        self.level = level
+        self.recoveries = recoveries
+        detail = ", ".join(
+            f"{k}={v}" for k, v in (("shard", shard), ("site", site),
+                                    ("epoch", epoch), ("level", level),
+                                    ("recoveries", recoveries))
+            if v is not None)
+        super().__init__(f"{reason} [{detail}]")
 
 
 # ============================================================== worker side
@@ -118,14 +155,21 @@ def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q) -> None:
     """Command loop of one spawned worker.  Every command is a picklable
     ``(fn, args)`` executed against the persistent :class:`ShardContext`;
     exceptions travel back as formatted strings (tracebacks don't
-    pickle)."""
+    pickle).  The fault plan (if ``$ROOMY_FAULTS`` is set) is installed
+    with ``allow_exit=True``: ``kill`` rules here are a real ``os._exit``,
+    the hard-death shape the coordinator's recovery must survive."""
     ctx = ShardContext(shard, nshards, root)
+    faults.install_from_env(state_dir=os.path.join(root, "_faults"),
+                            shard=shard, allow_exit=True)
     while True:
         msg = cmd_q.get()
         if msg is None:
             return
         fn, args = msg
         try:
+            if faults.ACTIVE:     # barrier site: delay/kill before dispatch
+                faults.fire("barrier", shard=shard,
+                            fn=getattr(fn, "__name__", str(fn)))
             res_q.put((True, fn(ctx, *args)))
         except BaseException:
             res_q.put((False, traceback.format_exc()))
@@ -176,8 +220,10 @@ class ShardRuntime:
 
     The runtime owns ``root``: per-shard directories ``shard{k:03d}/``
     and the shared ``exchange/`` bucket area.  ``fresh=True`` (default)
-    wipes leftovers from a previous (possibly killed) run; otherwise
-    only ignorable ``.tmp`` strays are swept.
+    wipes leftovers from a previous (possibly killed) run; otherwise only
+    ignorable ``.tmp``/``.pass`` strays are swept — and what the sweep
+    cleaned is booked in ``extsort.STATS`` (``stray_files_swept`` /
+    ``stray_bytes_swept``), never silently discarded.
     """
 
     def __init__(self, root: str, nshards: int, mode: str = "spawn",
@@ -198,6 +244,11 @@ class ShardRuntime:
         os.makedirs(exch, exist_ok=True)
         for sub in sorted(os.listdir(exch)):
             cleanup_strays(os.path.join(exch, sub))
+        # The coordinator runs the same fault plan as the workers (if any)
+        # but never exits the process: kill rules become WorkerKilled
+        # raises, which inline mode and the BFS recovery path catch.
+        faults.install_from_env(state_dir=os.path.join(root, "_faults"),
+                                allow_exit=False)
         # The coordinator acts as bucket source ``nshards`` (one past the
         # worker ids) — its delayed ops ride the same files.
         self.driver = ShardContext(self.nshards, self.nshards, root)
@@ -209,17 +260,20 @@ class ShardRuntime:
             self._inline_ctxs = [ShardContext(s, self.nshards, root)
                                  for s in range(self.nshards)]
         else:
-            import multiprocessing as mp
-            mpctx = mp.get_context("spawn")
-            for s in range(self.nshards):
-                cq, rq = mpctx.Queue(), mpctx.Queue()
-                p = mpctx.Process(target=_worker_main,
-                                  args=(s, self.nshards, root, cq, rq),
-                                  daemon=True)
-                p.start()
-                self._procs.append(p)
-                self._cmd_qs.append(cq)
-                self._res_qs.append(rq)
+            self._spawn_workers()
+
+    def _spawn_workers(self) -> None:
+        import multiprocessing as mp
+        mpctx = mp.get_context("spawn")
+        for s in range(self.nshards):
+            cq, rq = mpctx.Queue(), mpctx.Queue()
+            p = mpctx.Process(target=_worker_main,
+                              args=(s, self.nshards, self.root, cq, rq),
+                              daemon=True)
+            p.start()
+            self._procs.append(p)
+            self._cmd_qs.append(cq)
+            self._res_qs.append(rq)
 
     # ------------------------------------------------------------ plumbing
     def next_epoch(self) -> int:
@@ -242,11 +296,13 @@ class ShardRuntime:
                 return self._res_qs[s].get(timeout=2.0)
             except _queue.Empty:
                 if not self._procs[s].is_alive():
-                    raise RuntimeError(
-                        f"shard {s} died during {fn_name}") from None
+                    raise WorkerLost(
+                        f"shard {s} died during {fn_name}",
+                        shard=s, phase=fn_name) from None
                 if _time.monotonic() >= deadline:
-                    raise RuntimeError(
-                        f"shard {s} timed out during {fn_name}") from None
+                    raise WorkerLost(
+                        f"shard {s} timed out during {fn_name}",
+                        shard=s, phase=fn_name) from None
 
     def map(self, fn: Callable, args: Optional[Sequence[tuple]] = None
             ) -> list:
@@ -256,11 +312,18 @@ class ShardRuntime:
         argl = list(args) if args is not None else [()] * self.nshards
         assert len(argl) == self.nshards
         if self.mode == "inline":
-            return [fn(ctx, *a) for ctx, a in zip(self._inline_ctxs, argl)]
+            outs = []
+            for ctx, a in zip(self._inline_ctxs, argl):
+                if faults.ACTIVE:     # same barrier site the workers fire
+                    faults.fire("barrier", shard=ctx.shard,
+                                fn=getattr(fn, "__name__", str(fn)))
+                outs.append(fn(ctx, *a))
+            return outs
         if self._broken:
             raise RuntimeError(
                 "ShardRuntime is desynchronized (a previous collective "
-                "timed out or lost a worker) — build a fresh runtime")
+                "timed out or lost a worker) — recover() or build a "
+                "fresh runtime")
         fn_name = getattr(fn, "__name__", str(fn))
         for q, a in zip(self._cmd_qs, argl):
             q.put((fn, tuple(a)))
@@ -316,17 +379,65 @@ class ShardRuntime:
 
     # ------------------------------------------------------------ lifecycle
     def shutdown(self) -> None:
-        """Stop the workers (spawn mode).  Shard directories stay on disk."""
+        """Stop the workers (spawn mode).  Shard directories stay on disk.
+        Always returns, even for a broken pool: see _teardown_workers."""
+        self._teardown_workers()
+
+    def _teardown_workers(self) -> None:
+        """Tear the worker pool down without ever hanging.
+
+        A worker blocked writing a large result cannot exit until its
+        result queue drains, and a Queue's feeder thread will block
+        interpreter exit unless cancelled — so the order is: send stop
+        sentinels (non-blocking), drain every result queue, escalate
+        join → terminate → kill, then close and ``cancel_join_thread()``
+        every queue.  Safe on an already-dead or desynchronized pool."""
+        if not self._procs and not self._cmd_qs:
+            return
+        import queue as _queue
         for q in self._cmd_qs:
             try:
-                q.put(None)
+                q.put_nowait(None)
             except Exception:
                 pass
+        for rq in self._res_qs:
+            while True:
+                try:
+                    rq.get_nowait()
+                except (_queue.Empty, OSError, ValueError):
+                    break
         for p in self._procs:
-            p.join(timeout=30)
+            p.join(timeout=10)
             if p.is_alive():
                 p.terminate()
+                p.join(timeout=10)
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=10)
+        for q in list(self._cmd_qs) + list(self._res_qs):
+            try:
+                q.close()
+                q.cancel_join_thread()
+            except Exception:
+                pass
         self._procs, self._cmd_qs, self._res_qs = [], [], []
+
+    def recover(self) -> None:
+        """Return a broken runtime to a usable state after a failed
+        collective: tear down the (dead, wedged, or desynchronized) worker
+        pool, respawn it, and drop coordinator-side buffered bucket
+        writers.  Shard directories are NOT touched — the caller is
+        expected to re-adopt a coordinated checkpoint (the BFS recovery
+        path) or rebuild its structures before issuing new collectives:
+        respawned workers start with empty object registries."""
+        self.driver._writers = {}
+        if self.mode == "inline":
+            self._inline_ctxs = [ShardContext(s, self.nshards, self.root)
+                                 for s in range(self.nshards)]
+        else:
+            self._teardown_workers()
+            self._spawn_workers()
+        self._broken = False
 
     def destroy(self) -> None:
         """Shutdown and remove every shard/exchange directory."""
@@ -707,11 +818,14 @@ def _w_bfs_seed(ctx: ShardContext, spec: dict, epoch: int) -> int:
     return lev0.size
 
 
-def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int) -> int:
+def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int,
+                  lev: int = 0) -> int:
     """Expand the local frontier: locally-owned neighbours stream straight
     into this shard's RunBuilder (the level's ONE sort pass, paid as the
     rows are generated); remote neighbours go to the owner's bucket.
     Seals the epoch's buckets — map completion is the barrier."""
+    if faults.ACTIVE:     # the worker-kill-at-level-k site
+        faults.fire("worker_level", shard=ctx.shard, level=lev)
     st = ctx.objects[spec["name"]]
     builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
                                  spec["width"], chunk_rows=spec["chunk_rows"],
@@ -867,13 +981,62 @@ def _ckpt_sharded_sorted(ck: SearchCheckpoint, runtime: ShardRuntime,
         "shards": shards})
 
 
+def _roll_back(runtime: ShardRuntime, ck: Optional[SearchCheckpoint],
+               spec: dict, exc: BaseException, lev: int,
+               recoveries: int, max_recoveries: int) -> dict:
+    """In-run recovery shared by both sharded BFS engines.
+
+    Called when a level's collective (or its checkpoint publish) failed
+    with ``exc``.  Either readies the runtime for re-adoption of the last
+    coordinated checkpoint and returns its manifest state (the caller
+    rebuilds every shard from it), or raises a structured
+    :class:`ShardFailure` — never hangs, never leaves the pool
+    desynchronized.  Steps: validate that recovery is possible (an
+    adoptable checkpoint exists, the ``max_recoveries`` budget is not
+    exhausted), drain and respawn the worker pool (:meth:`ShardRuntime.
+    recover`), wipe the structure's exchange dir (in-flight buckets of
+    the failed epoch are dead traffic).  Books the rollback under
+    ``extsort.STATS['recoveries']`` and the levels that must be re-run
+    under ``'replayed_levels'`` — separate from the pass ledgers, so the
+    per-level pass budgets still hold for the non-replayed work."""
+    shard = getattr(exc, "shard", None)
+    site = getattr(exc, "phase", None) or type(exc).__name__
+    state = None
+    if ck is not None:
+        try:
+            state = ck.latest()
+        except ckpt.CheckpointError:
+            state = None
+    if state is None:
+        raise ShardFailure(
+            "sharded BFS failed and no coordinated checkpoint is "
+            "adoptable — enable checkpoint_dir= to make runs recoverable",
+            shard=shard, site=site, epoch=runtime.epoch, level=lev,
+            recoveries=recoveries) from exc
+    if recoveries >= max_recoveries:
+        raise ShardFailure(
+            f"sharded BFS failed and the recovery budget is exhausted "
+            f"({recoveries}/{max_recoveries} used) — raise max_recoveries= "
+            "to keep self-healing",
+            shard=shard, site=site, epoch=runtime.epoch, level=lev,
+            recoveries=recoveries) from exc
+    extsort.STATS["recoveries"] += 1
+    runtime.recover()
+    shutil.rmtree(runtime.driver.exchange_dir(spec["name"]),
+                  ignore_errors=True)
+    extsort.STATS["replayed_levels"] += max(
+        0, lev - (len(state["level_sizes"]) - 1))
+    return state
+
+
 def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
                 width: int, chunk_rows: int = 1 << 16,
                 max_levels: int = 10_000, run_rows: int = 1 << 18,
                 max_runs: int = 8, compaction: str = "full",
                 size_ratio: int = 2, bucket_capacity: Optional[int] = None,
                 checkpoint_dir: Optional[str] = None,
-                checkpoint_every: int = 1, resume: bool = False):
+                checkpoint_every: int = 1, resume: bool = False,
+                max_recoveries: int = 0):
     """Distributed sorted-list BFS: each shard owns the states hashing to
     it, sorts only its own partition (one sort pass per level per shard),
     and ships cross-shard expansion rows through the bucket exchange.
@@ -888,6 +1051,13 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
     level (sync) barrier, the coordinator publishes atomically.  Resume
     re-validates nshards and the owner-function golden values before any
     shard adopts its partition.
+
+    ``max_recoveries=`` > 0 arms in-run self-healing: a worker death,
+    collective timeout, or fatal I/O error rolls every shard back to the
+    last coordinated checkpoint and resumes from that level (respawning
+    the spawn pool), up to the budget — with level counts provably equal
+    to the fault-free run (docs/fault-tolerance.md).  When recovery is
+    impossible the run raises a structured :class:`ShardFailure`.
     """
     spec = {"kind": "bfs", "name": runtime.next_name("bfs"), "width": width,
             "chunk_rows": chunk_rows, "run_rows": run_rows,
@@ -896,18 +1066,22 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
             "rec_dtype": "uint32", "capacity": bucket_capacity}
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
     ck_prev: dict = {}
+
+    def _adopt(st: dict):
+        """Rebuild every shard from a sealed snapshot; returns the
+        (level_sizes, dropped) the manifest pins."""
+        snap = ck.snapshot_dir(st)
+        runtime.map(_w_bfs_restore,
+                    [(spec, snap, st["shards"][s])
+                     for s in range(runtime.nshards)])
+        return [int(x) for x in st["level_sizes"]], int(st.get("dropped", 0))
+
     state = ck.latest() if (ck is not None and resume) else None
     if state is not None:
         ckpt.validate_resume(state, "sorted", runtime.nshards, width, 0,
                              sharded=True)
         runtime.bcast(_w_bfs_init, spec)
-        snap = ck.snapshot_dir(state)
-        runtime.map(_w_bfs_restore,
-                    [(spec, snap, state["shards"][s])
-                     for s in range(runtime.nshards)])
-        level_sizes: List[int] = [int(x) for x in state["level_sizes"]]
-        dropped = int(state.get("dropped", 0))
-        start_lev = len(level_sizes)
+        level_sizes, dropped = _adopt(state)
     else:
         runtime.bcast(_w_bfs_init, spec)
         start_rows = np.ascontiguousarray(start_rows,
@@ -920,27 +1094,46 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
         level_sizes = [sum(sizes)]
         if level_sizes[0] == 0:
             return [], ShardedVisited(runtime, spec, dropped)
-        start_lev = 1
         if ck is not None:      # level-0 snapshot: any kill is resumable
             _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
                                  ck_prev)
-    for lev in range(start_lev, max_levels + 1):
-        epoch = runtime.next_epoch()
-        dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next, epoch))
-        total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
-        if total == 0:
-            break
-        level_sizes.append(total)
-        if ck is not None and lev % checkpoint_every == 0:
-            _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
-                                 ck_prev)
+    recoveries = 0
+    lev = len(level_sizes)
+    while lev <= max_levels:
+        try:
+            epoch = runtime.next_epoch()
+            dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next,
+                                         epoch, lev))
+            total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
+            if total == 0:
+                break
+            level_sizes.append(total)
+            if ck is not None and lev % checkpoint_every == 0:
+                _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
+                                     ck_prev)
+        except (RuntimeError, OSError) as exc:
+            # Worker death/timeout (WorkerLost), an in-worker exception, or
+            # a coordinator-side fatal I/O error: roll back to the last
+            # coordinated checkpoint and replay, or die loudly.
+            state = _roll_back(runtime, ck, spec, exc, lev, recoveries,
+                               max_recoveries)
+            runtime.bcast(_w_bfs_init, spec)
+            level_sizes, dropped = _adopt(state)
+            recoveries += 1
+            # Respawned workers carry no incremental-link history: the next
+            # snapshot full-copies (safe; linking resumes after it).
+            ck_prev.clear()
+            lev = len(level_sizes)
+            continue
+        lev += 1
     return level_sizes, ShardedVisited(runtime, spec, dropped)
 
 
 # ================================================= distributed BFS (implicit)
 
 def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
-                 epoch_in: int, epoch_out: int, seed: bool) -> tuple:
+                 epoch_in: int, epoch_out: int, seed: bool,
+                 lev: int = 0) -> tuple:
     """One fused BFS level on this shard's block of the bit array.
 
     Absorbs the marks bucket-shipped here at epoch_in (they join the
@@ -950,6 +1143,8 @@ def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
     straight into the (snapshot-isolated) op log; marks for remote states
     go to the owner's bucket, sealed at epoch_out.  Per-shard budget:
     exactly ONE rw pass over the local array per level, zero sorts."""
+    if faults.ACTIVE:     # the worker-kill-at-level-k site
+        faults.fire("worker_level", shard=ctx.shard, level=lev)
     obj: DiskBitArray = ctx.objects[spec["name"]]
     base = ctx.shard * spec["per"]
     n, nshards = spec["n"], ctx.nshards
@@ -1032,7 +1227,8 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
                          log_buf_rows: int = 1 << 20,
                          bucket_capacity: Optional[int] = None,
                          checkpoint_dir: Optional[str] = None,
-                         checkpoint_every: int = 1, resume: bool = False):
+                         checkpoint_every: int = 1, resume: bool = False,
+                         max_recoveries: int = 0):
     """Distributed implicit BFS: the 2-bit array is block-distributed,
     each shard runs ONE fused mark/rotate/count/expand pass per level
     over its own block, and cross-shard marks ride the bucket exchange
@@ -1047,6 +1243,10 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
     the coordinator publishes atomically.  Resume re-validates nshards,
     n_states, the chunk layout, and the owner-function golden values
     before any shard adopts its block.
+
+    ``max_recoveries=`` > 0 arms in-run self-healing exactly as in
+    :func:`sharded_bfs`: roll back to the last coordinated checkpoint,
+    respawn the pool, replay — or raise :class:`ShardFailure` loudly.
     """
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
     state = ck.latest() if (ck is not None and resume) else None
@@ -1082,30 +1282,50 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
         level_sizes = []
         seed = True
         epoch_in = epoch
+    recoveries = 0
     while len(level_sizes) - 1 < max_levels:
-        epoch_out = runtime.next_epoch()
-        res = runtime.map(_w_ibfs_pass,
-                          [(spec, gen_neighbors, epoch_in, epoch_out, seed)]
-                          * runtime.nshards)
-        total = sum(c for c, _d in res)
-        dropped += sum(d for _c, d in res)
-        if not seed and total == 0:
-            break
-        level_sizes.append(total)
-        seed = False
-        epoch_in = epoch_out
-        lev = len(level_sizes) - 1
-        if ck is not None and lev % checkpoint_every == 0:
-            version = ck.next_version()
-            stage = ck.begin(version)
-            runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
-            ck.publish(version, {
-                "engine": "implicit", "sharded": True,
-                "nshards": runtime.nshards,
-                "width": 1, "n_states": int(n_states),
-                "chunk_elems": int(chunk_elems),
-                "level_sizes": list(level_sizes), "dropped": int(dropped),
-                "golden": ckpt.golden_owner_values(runtime.nshards, 1,
-                                                   int(n_states))})
+        try:
+            epoch_out = runtime.next_epoch()
+            lev_now = len(level_sizes)     # the level this pass computes
+            res = runtime.map(_w_ibfs_pass,
+                              [(spec, gen_neighbors, epoch_in, epoch_out,
+                                seed, lev_now)] * runtime.nshards)
+            total = sum(c for c, _d in res)
+            dropped += sum(d for _c, d in res)
+            if not seed and total == 0:
+                break
+            level_sizes.append(total)
+            seed = False
+            epoch_in = epoch_out
+            lev = len(level_sizes) - 1
+            if ck is not None and lev % checkpoint_every == 0:
+                version = ck.next_version()
+                stage = ck.begin(version)
+                runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
+                ck.publish(version, {
+                    "engine": "implicit", "sharded": True,
+                    "nshards": runtime.nshards,
+                    "width": 1, "n_states": int(n_states),
+                    "chunk_elems": int(chunk_elems),
+                    "level_sizes": list(level_sizes), "dropped": int(dropped),
+                    "golden": ckpt.golden_owner_values(runtime.nshards, 1,
+                                                       int(n_states))})
+        except (RuntimeError, OSError) as exc:
+            state = _roll_back(runtime, ck, spec, exc, len(level_sizes),
+                               recoveries, max_recoveries)
+            # Respawned workers re-make their (empty) blocks and adopt the
+            # snapshot: packed chunks + queued-mark op logs.  The adopted
+            # logs carry all in-flight marks, and a fresh epoch has no
+            # bucket files, so the replayed pass absorbs nothing stale.
+            rspec = dict(spec)
+            rspec["init_chunks"] = False
+            runtime.bcast(_w_make, rspec)
+            runtime.bcast(_w_ibfs_restore, spec, ck.snapshot_dir(state))
+            level_sizes = [int(x) for x in state["level_sizes"]]
+            dropped = int(state.get("dropped", 0))
+            seed = False
+            epoch_in = runtime.next_epoch()
+            recoveries += 1
+            continue
     bits.dropped = dropped
     return level_sizes, bits

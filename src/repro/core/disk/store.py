@@ -38,6 +38,8 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from . import faults
+
 
 def _lex_extreme_key(rows: np.ndarray, mode: str) -> bytes:
     """Byte key of the lexicographic min/max row — O(width) column passes
@@ -127,7 +129,10 @@ class ChunkStore:
     def _flush_chunk(self, nrows: int) -> None:
         buf = np.concatenate(self._buf, axis=0) if len(self._buf) > 1 else self._buf[0]
         chunk, rest = buf[:nrows], buf[nrows:]
-        np.save(self._chunk_path(self.n_chunks), chunk)
+        # Whole-file rewrite → idempotent → safe under transient retry.
+        faults.retry_io(
+            "chunk_flush",
+            lambda: np.save(self._chunk_path(self.n_chunks), chunk))
         if self._keyed():
             self._chunk_ranges.append((_lex_extreme_key(chunk, "min"),
                                        _lex_extreme_key(chunk, "max")))
@@ -143,17 +148,19 @@ class ChunkStore:
         # meta churn. flush() persists; in-memory state rules in between.
 
     def _write_meta(self) -> None:
-        tmp = self._meta_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"width": self.width, "dtype": self.dtype.name,
-                       "chunk_rows": self.chunk_rows,
-                       "n_chunks": self.n_chunks,
-                       "total_rows": self.total_rows,
-                       "sorted": self.sorted,
-                       "chunk_ranges": [
-                           [r[0].hex(), r[1].hex()] if r else None
-                           for r in self._chunk_ranges]}, f)
-        os.replace(tmp, self._meta_path)       # atomic
+        def _do() -> None:
+            tmp = self._meta_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"width": self.width, "dtype": self.dtype.name,
+                           "chunk_rows": self.chunk_rows,
+                           "n_chunks": self.n_chunks,
+                           "total_rows": self.total_rows,
+                           "sorted": self.sorted,
+                           "chunk_ranges": [
+                               [r[0].hex(), r[1].hex()] if r else None
+                               for r in self._chunk_ranges]}, f)
+            os.replace(tmp, self._meta_path)       # atomic
+        faults.retry_io("meta_write", _do)
         self._meta_dirty = False
 
     def _validate_sorted_ranges(self) -> None:

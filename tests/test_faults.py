@@ -1,0 +1,489 @@
+"""Self-healing runtime (disk/faults.py + the recovery path in cluster.py).
+
+Covers the ISSUE-6 fault-tolerance layer end to end:
+
+  * the ``ROOMY_FAULTS`` spec grammar and the determinism contract (same
+    seed + same bind → the identical firing sequence, so a failing chaos
+    run replays exactly),
+  * ``once`` markers persisting across plan re-installs (the cross-process
+    guarantee that a recovered run does not re-fire the kill on replay),
+  * zero cost when disabled: no plan installed → ``faults.ACTIVE`` is
+    False, a fault-free BFS books zero fault counters,
+  * retry_io / append_bytes: transient errnos heal with booked retries,
+    fatal errnos give up immediately, torn appends can never leave
+    partial or duplicated records,
+  * the fresh=False startup sweep booking ``.tmp``/``.pass`` strays,
+  * hardened teardown: a wedged (delayed) worker breaks the collective
+    but neither shutdown() nor recover() ever hangs,
+  * the headline contract — a worker killed at any (level, site) pair
+    recovers in-run from the last coordinated checkpoint on BOTH sharded
+    engines, nshards ∈ {1, 2}, with final level counts IDENTICAL to the
+    fault-free run and the rollback booked under STATS['recoveries'];
+    unrecoverable runs raise a structured ShardFailure, never hang.
+
+Spawn-mode kill tests re-import the generator classes from the examples
+(the test_cluster.py convention); the full spawn sweep stays behind
+ROOMY_SHARDS like the rest of the spawn matrix.
+"""
+import errno
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.disk import buckets as B
+from repro.core.disk import extsort, faults
+from repro.core.disk import breadth_first_search, implicit_bfs
+from repro.core.disk.cluster import ShardFailure, ShardRuntime, WorkerLost
+
+from _hypothesis_compat import given, settings, st
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+from pancake_bfs import GenNextNp, start_code         # noqa: E402
+from pancake_bits import NeighborsNp                  # noqa: E402
+
+ROOMY_SHARDS = int(os.environ.get("ROOMY_SHARDS", "0"))
+
+# Fault-free pancake-5 flip-distance histogram (pinned by test_bfs /
+# test_cluster): every recovered run below must land EXACTLY here.
+PANCAKE5 = [1, 4, 12, 35, 48, 20]
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """Every test starts with no plan, no env spec, zeroed counters."""
+    saved = os.environ.pop(faults.ENV_VAR, None)
+    faults.uninstall()
+    extsort.reset_stats()
+    yield
+    faults.uninstall()
+    if saved is None:
+        os.environ.pop(faults.ENV_VAR, None)
+    else:
+        os.environ[faults.ENV_VAR] = saved
+
+
+def _sorted_levels(wd: str, n: int = 5, nshards: int = 2,
+                   mode: str = "inline", **kw):
+    """Sharded sorted-list pancake BFS; returns level sizes."""
+    rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode=mode)
+    try:
+        sizes, vis = breadth_first_search(
+            os.path.join(wd, "bfs"), np.array([[start_code(n)]], np.uint32),
+            GenNextNp(n), width=1, chunk_rows=1 << 10, runtime=rt, **kw)
+        vis.destroy()
+    finally:
+        rt.shutdown()
+    return sizes
+
+
+def _implicit_levels(wd: str, n: int = 5, nshards: int = 2,
+                     mode: str = "inline", **kw):
+    """Sharded implicit (2-bit array) pancake BFS; returns level sizes."""
+    from repro.core import ranking as R
+    total = math.factorial(n)
+    start = int(R.rank_np(np.arange(n)[None, :])[0])
+    rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode=mode)
+    try:
+        sizes, bits = implicit_bfs(
+            os.path.join(wd, "bfs"), total, [start], NeighborsNp(n),
+            chunk_elems=1 << 5, runtime=rt, **kw)
+        bits.destroy()
+    finally:
+        rt.shutdown()
+    return sizes
+
+
+_ENGINES = {"sorted": _sorted_levels, "implicit": _implicit_levels}
+
+
+# ------------------------------------------------------------- spec grammar
+
+class TestSpecParse:
+
+    def test_grammar(self):
+        plan = faults.parse(
+            "seed=7;bucket_seal:transient:every=2:times=3;"
+            "worker_level:kill:shard=1:level=2;"
+            "oplog_append:torn:at=4:once=0;barrier:delay:secs=1.5")
+        assert plan.seed == 7
+        r0, r1, r2, r3 = plan.rules
+        assert (r0.site, r0.kind, r0.every, r0.times) == \
+            ("bucket_seal", "transient", 2, 3)
+        assert not r0.once                     # transient defaults once=0
+        assert (r1.site, r1.kind, r1.shard, r1.level) == \
+            ("worker_level", "kill", 1, 2)
+        assert r1.once                         # kill defaults once=1
+        assert (r2.at, r2.once) == (4, False)  # explicit once=0 wins
+        assert r3.kind == "delay" and r3.secs == 1.5 and r3.once
+
+    def test_rejects_bad_rules(self):
+        with pytest.raises(ValueError):
+            faults.parse("justasite")
+        with pytest.raises(ValueError):
+            faults.parse("bucket_seal:transient:bogus=1")
+        with pytest.raises((AssertionError, ValueError)):
+            faults.parse("bucket_seal:explode")
+
+    def test_install_from_env_noop_when_unset(self):
+        os.environ.pop(faults.ENV_VAR, None)
+        assert not faults.install_from_env()
+        assert not faults.ACTIVE
+
+
+# -------------------------------------------------------------- determinism
+
+def _fire_trace(plan: faults.FaultPlan, hits: int = 100):
+    out = []
+    for _ in range(hits):
+        try:
+            plan.fire("chunk_flush", shard=0)
+            out.append(0)
+        except OSError:
+            out.append(1)
+    return out
+
+
+class TestDeterminism:
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_same_seed_same_trace(self, seed):
+        spec = f"seed={seed};chunk_flush:transient:p=0.3:once=0"
+        a = faults.parse(spec).bind()
+        b = faults.parse(spec).bind()
+        assert _fire_trace(a) == _fire_trace(b)
+
+    def test_shard_salt_changes_rng_stream_deterministically(self):
+        spec = "seed=11;chunk_flush:transient:p=0.5:once=0"
+        t3a = _fire_trace(faults.parse(spec).bind(shard=3))
+        t3b = _fire_trace(faults.parse(spec).bind(shard=3))
+        assert t3a == t3b
+        assert sum(t3a) > 0                  # p=0.5 over 100 hits fires
+
+    def test_at_and_every_and_times(self):
+        plan = faults.parse("meta_write:transient:at=3:times=2:once=0").bind()
+        trace = []
+        for _ in range(6):
+            try:
+                plan.fire("meta_write")
+                trace.append(0)
+            except OSError:
+                trace.append(1)
+        assert trace == [0, 0, 1, 1, 0, 0]   # 3rd hit + a burst of 2
+
+
+# ------------------------------------------------------------- once markers
+
+class TestOnceMarkers:
+
+    def test_marker_survives_reinstall(self, tmp_path):
+        spec = "worker_level:kill:level=2"
+        state = str(tmp_path / "faults")
+        a = faults.parse(spec).bind(state_dir=state)
+        with pytest.raises(faults.WorkerKilled):
+            a.fire("worker_level", shard=0, level=2)
+        # A fresh plan (a respawned worker) sees the marker: no re-fire.
+        b = faults.parse(spec).bind(state_dir=state)
+        assert b.fire("worker_level", shard=0, level=2) is None
+        # ...but a different level is a different marker key.
+        c = faults.parse("worker_level:kill").bind(state_dir=state)
+        with pytest.raises(faults.WorkerKilled):
+            c.fire("worker_level", shard=0, level=3)
+
+    def test_in_process_fallback_without_state_dir(self):
+        plan = faults.parse("ckpt_publish:fatal").bind()
+        with pytest.raises(OSError):
+            plan.fire("ckpt_publish")
+        assert plan.fire("ckpt_publish") is None
+
+
+# ---------------------------------------------------------------- zero cost
+
+class TestZeroCost:
+
+    def test_inactive_by_default(self):
+        assert faults.ACTIVE is False
+        assert faults.fire("bucket_seal", shard=0) is None
+
+    def test_install_toggles_active(self):
+        faults.install(faults.parse("bucket_seal:transient").bind())
+        assert faults.ACTIVE
+        faults.uninstall()
+        assert not faults.ACTIVE
+
+    def test_fault_free_run_books_nothing(self, tmp_path):
+        sizes = _sorted_levels(str(tmp_path), nshards=2)
+        assert sizes == PANCAKE5
+        for k in ("io_retries", "io_giveups", "recoveries",
+                  "replayed_levels"):
+            assert extsort.STATS[k] == 0, k
+
+
+# ------------------------------------------------------------ retry wrappers
+
+class TestRetryIO:
+
+    def test_transient_heals_with_booked_retries(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise OSError(errno.EIO, "flake")
+            return "ok"
+
+        assert faults.retry_io("meta_write", flaky) == "ok"
+        assert extsort.STATS["io_retries"] == 2
+        assert extsort.STATS["io_giveups"] == 0
+
+    def test_fatal_errno_gives_up_immediately(self):
+        def fatal():
+            raise OSError(errno.ENOSPC, "disk full")
+
+        with pytest.raises(OSError):
+            faults.retry_io("meta_write", fatal)
+        assert extsort.STATS["io_retries"] == 0
+        assert extsort.STATS["io_giveups"] == 1
+
+    def test_exhausting_the_attempt_budget_gives_up(self):
+        def always():
+            raise OSError(errno.EAGAIN, "never heals")
+
+        with pytest.raises(OSError):
+            faults.retry_io("meta_write", always, attempts=3,
+                            base_delay=0.0001)
+        assert extsort.STATS["io_retries"] == 2
+        assert extsort.STATS["io_giveups"] == 1
+
+    def test_injected_transient_burst_heals(self):
+        faults.install(
+            faults.parse("meta_write:transient:at=1:times=2:once=0").bind())
+        assert faults.retry_io("meta_write", lambda: "ok") == "ok"
+        assert extsort.STATS["io_retries"] == 2
+
+    def test_torn_on_rewrite_site_degrades_to_transient(self):
+        faults.install(
+            faults.parse("chunk_flush:torn:at=1:once=0").bind())
+        assert faults.retry_io("chunk_flush", lambda: "ok") == "ok"
+        assert extsort.STATS["io_retries"] == 1
+
+
+class TestAppendBytes:
+
+    def test_torn_append_never_leaves_partial_records(self, tmp_path):
+        path = str(tmp_path / "oplog.bin")
+        faults.append_bytes("oplog_append", path, b"AAAA" * 8)
+        faults.install(
+            faults.parse("oplog_append:torn:at=1:once=0").bind())
+        faults.append_bytes("oplog_append", path, b"BBBB" * 8)
+        with open(path, "rb") as f:
+            assert f.read() == b"AAAA" * 8 + b"BBBB" * 8
+        assert extsort.STATS["io_retries"] == 1
+
+    def test_creates_missing_file(self, tmp_path):
+        path = str(tmp_path / "new.bin")
+        faults.append_bytes("oplog_append", path, b"xyz")
+        with open(path, "rb") as f:
+            assert f.read() == b"xyz"
+
+
+# -------------------------------------------------------------- stray sweep
+
+class TestStraySweep:
+
+    def test_cleanup_books_count_and_bytes(self, tmp_path):
+        d = str(tmp_path)
+        with open(os.path.join(d, "b_000_001.e7.tmp"), "wb") as f:
+            f.write(b"x" * 100)
+        with open(os.path.join(d, "log.0.pass"), "wb") as f:
+            f.write(b"y" * 28)
+        with open(os.path.join(d, "b_000_001.e7"), "wb") as f:
+            f.write(b"sealed")                  # real data: must survive
+        removed = B.cleanup_strays(d)
+        assert len(removed) == 2
+        assert extsort.STATS["stray_files_swept"] == 2
+        assert extsort.STATS["stray_bytes_swept"] == 128
+        assert os.path.exists(os.path.join(d, "b_000_001.e7"))
+
+    def test_fresh_false_startup_sweeps_and_books(self, tmp_path):
+        root = str(tmp_path / "rt")
+        sub = os.path.join(root, "exchange", "bfs1")
+        os.makedirs(sub)
+        with open(os.path.join(sub, "dead.tmp"), "wb") as f:
+            f.write(b"z" * 64)
+        rt = ShardRuntime(root, 2, mode="inline", fresh=False)
+        rt.shutdown()
+        assert not os.path.exists(os.path.join(sub, "dead.tmp"))
+        assert extsort.STATS["stray_files_swept"] == 1
+        assert extsort.STATS["stray_bytes_swept"] == 64
+
+
+# -------------------------------------------------- hardened teardown (spawn)
+
+class TestTeardown:
+
+    def test_wedged_worker_breaks_then_recovers_never_hangs(self, tmp_path):
+        # The delay rule wedges shard 0 past the collective timeout: the
+        # map must fail fast (WorkerLost), recover() must bring the pool
+        # back (the `once` marker stops a re-fire), and shutdown must
+        # return even though a worker was mid-sleep when it broke.
+        os.environ[faults.ENV_VAR] = "barrier:delay:secs=4:shard=0"
+        rt = ShardRuntime(str(tmp_path / "rt"), 2, mode="spawn", timeout=1.0)
+        try:
+            with pytest.raises(WorkerLost):
+                rt.barrier()
+            with pytest.raises(RuntimeError, match="recover"):
+                rt.barrier()                   # poisoned, not hung
+            rt.recover()
+            rt.barrier()                       # healthy again
+        finally:
+            rt.shutdown()
+        assert rt._procs == [] and rt._cmd_qs == []
+        rt.shutdown()                          # idempotent
+
+    def test_shutdown_after_worker_death(self, tmp_path):
+        os.environ[faults.ENV_VAR] = "barrier:kill:shard=1"
+        rt = ShardRuntime(str(tmp_path / "rt"), 2, mode="spawn", timeout=30)
+        try:
+            with pytest.raises(WorkerLost) as ei:
+                rt.barrier()
+            assert ei.value.shard == 1
+        finally:
+            rt.shutdown()
+        assert rt._procs == []
+
+
+# ------------------------------------------------- in-run recovery (inline)
+
+def _ck(tmp_path):
+    return str(tmp_path / "ck")
+
+
+class TestRecoveryInline:
+    """The headline contract, on the in-process runtime (same protocol,
+    same on-disk state, same recovery path — kills are WorkerKilled
+    raises instead of os._exit)."""
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    @pytest.mark.parametrize("nshards", (1, 2))
+    @pytest.mark.parametrize("lev", (1, 2, 3))
+    def test_kill_at_every_level(self, tmp_path, engine, nshards, lev):
+        shard = nshards - 1
+        os.environ[faults.ENV_VAR] = \
+            f"worker_level:kill:shard={shard}:level={lev}"
+        sizes = _ENGINES[engine](str(tmp_path), nshards=nshards,
+                                 checkpoint_dir=_ck(tmp_path),
+                                 max_recoveries=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
+        assert extsort.STATS["replayed_levels"] >= 1
+
+    @pytest.mark.parametrize("engine,site,at", [
+        ("sorted", "bucket_spill", 3),
+        ("sorted", "bucket_seal", 4),
+        ("sorted", "chunk_flush", 3),
+        ("sorted", "meta_write", 4),
+        ("sorted", "ckpt_publish", 3),
+        ("sorted", "barrier", 9),
+        ("implicit", "bucket_spill", 8),
+        ("implicit", "oplog_append", 12),
+        ("implicit", "chunk_flush", 3),
+        ("implicit", "ckpt_publish", 3),
+        ("implicit", "barrier", 9),
+    ])
+    def test_kill_at_every_site(self, tmp_path, engine, site, at):
+        # `at` is tuned past the seed phase so a checkpoint exists —
+        # killing before the first publish is the ShardFailure test below.
+        os.environ[faults.ENV_VAR] = f"{site}:kill:at={at}"
+        sizes = _ENGINES[engine](str(tmp_path), nshards=2,
+                                 checkpoint_dir=_ck(tmp_path),
+                                 max_recoveries=3)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
+
+    @pytest.mark.parametrize("engine,site,at", [
+        ("sorted", "bucket_spill", 1),
+        ("sorted", "bucket_spill", 4),
+        ("implicit", "oplog_append", 1),
+        ("implicit", "oplog_append", 5),
+    ])
+    def test_torn_write_heals_without_rollback(self, tmp_path, engine,
+                                               site, at):
+        os.environ[faults.ENV_VAR] = f"{site}:torn:at={at}:once=0"
+        sizes = _ENGINES[engine](str(tmp_path), nshards=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["io_retries"] >= 1
+        assert extsort.STATS["recoveries"] == 0
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    def test_transient_storm_heals_without_rollback(self, tmp_path, engine):
+        os.environ[faults.ENV_VAR] = (
+            "seed=5;bucket_spill:transient:every=4:times=2:once=0;"
+            "bucket_seal:transient:every=3:once=0;"
+            "chunk_flush:transient:every=5:once=0;"
+            "meta_write:transient:every=3:once=0;"
+            "ckpt_publish:transient:every=2:once=0;"
+            "oplog_append:transient:every=4:once=0")
+        sizes = _ENGINES[engine](str(tmp_path), nshards=2,
+                                 checkpoint_dir=_ck(tmp_path),
+                                 max_recoveries=1)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["io_retries"] > 0
+        assert extsort.STATS["io_giveups"] == 0
+        assert extsort.STATS["recoveries"] == 0
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    def test_no_checkpoint_is_a_loud_shard_failure(self, tmp_path, engine):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:level=2"
+        with pytest.raises(ShardFailure, match="no coordinated checkpoint"):
+            _ENGINES[engine](str(tmp_path), nshards=2, max_recoveries=2)
+        assert extsort.STATS["recoveries"] == 0
+
+    def test_recovery_budget_exhausted_is_loud(self, tmp_path):
+        os.environ[faults.ENV_VAR] = ("worker_level:kill:shard=0:level=1;"
+                                      "worker_level:kill:shard=0:level=2")
+        with pytest.raises(ShardFailure, match="budget is exhausted") as ei:
+            _sorted_levels(str(tmp_path), nshards=2,
+                           checkpoint_dir=_ck(tmp_path), max_recoveries=1)
+        assert ei.value.recoveries == 1
+        assert extsort.STATS["recoveries"] == 1
+
+    def test_kill_recovers_on_pancake_6(self, tmp_path):
+        want = _sorted_levels(str(tmp_path / "ref"), n=6, nshards=2)
+        extsort.reset_stats()
+        os.environ[faults.ENV_VAR] = "worker_level:kill:shard=1:level=3"
+        sizes = _sorted_levels(str(tmp_path / "chaos"), n=6, nshards=2,
+                               checkpoint_dir=_ck(tmp_path),
+                               max_recoveries=2)
+        assert sizes == want
+        assert extsort.STATS["recoveries"] == 1
+
+
+# ----------------------------------------------- in-run recovery (spawn mode)
+
+class TestSpawnRecovery:
+    """Real worker processes, real ``os._exit`` death — the acceptance
+    criterion of the fault-tolerance layer."""
+
+    def test_spawn_worker_hard_kill_recovers_sorted(self, tmp_path):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:shard=1:level=2"
+        sizes = _sorted_levels(str(tmp_path), nshards=2, mode="spawn",
+                               checkpoint_dir=_ck(tmp_path),
+                               max_recoveries=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
+
+    @pytest.mark.skipif(ROOMY_SHARDS < 2,
+                        reason="spawn implicit kill sweep runs on the "
+                               "ROOMY_SHARDS CI leg")
+    def test_spawn_worker_hard_kill_recovers_implicit(self, tmp_path):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:shard=1:level=2"
+        sizes = _implicit_levels(str(tmp_path), nshards=2, mode="spawn",
+                                 checkpoint_dir=_ck(tmp_path),
+                                 max_recoveries=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
