@@ -35,12 +35,10 @@ sys.path.append(os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "examples"))
 
 from repro.core import constructs as C
+from repro.core import obs
 from repro.core import ranking as R
 from repro.core import rlist as RL
-from repro.core import types as T
-from repro.core.disk import bitarray as DBA
 from repro.core.disk import breadth_first_search as disk_bfs
-from repro.core.disk import extsort
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
 from .pancake import _gen_next_jnp, _gen_next_np, _start, oracle_levels
@@ -84,30 +82,35 @@ def _bench_disk(tag: str, gen_np, start: np.uint32, want: List[int],
     """Returns (row, best_level_time). Best-of-N to damp disk-cache noise."""
     levels = len(want) - 1
     best_wall, best_level = 1e18, 1e18
+    es: dict = {}
     for _ in range(repeats):
         timed = _TimedGen(gen_np)
         with tempfile.TemporaryDirectory() as wd:
-            extsort.reset_stats()
-            t0 = time.perf_counter()
-            sizes, all_obj = disk_bfs(wd, np.array([[start]], np.uint32),
-                                      timed, width=1, chunk_rows=chunk_rows,
-                                      fused=fused)
-            wall = time.perf_counter() - t0
-            assert sizes == want, (tag, sizes, want)
-            all_obj.destroy()
+            # Per-repeat counter window: an obs.scope() delta instead of
+            # the old global reset_stats(), which silently zeroed every
+            # other observer's ledger (including a live trace summary)
+            # between best-of repeats.
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, all_obj = disk_bfs(wd, np.array([[start]], np.uint32),
+                                          timed, width=1,
+                                          chunk_rows=chunk_rows, fused=fused)
+                wall = time.perf_counter() - t0
+                assert sizes == want, (tag, sizes, want)
+                all_obj.destroy()
+            es = sc.delta()["extsort"]
         best_wall = min(best_wall, wall)
         best_level = min(best_level, wall - timed.t)
     # Per-expansion accounting: both paths run levels+1 expansions (the
     # last one discovers the empty frontier); the fused path additionally
     # pays one seed-sort pass, excluded here so the metric matches the
     # one-sort-per-level claim exactly (1.00 fused, 2.00 unfused).
-    spe = ((extsort.STATS["sort_passes"] - (1 if fused else 0))
-           / (levels + 1))
+    spe = (es["sort_passes"] - (1 if fused else 0)) / (levels + 1)
     name = f"bfs_{tag}_tierD_{'fused' if fused else 'unfused'}"
     row = (name, best_wall * 1e6,
            f"{n_states/best_level:.3g} level states/s "
            f"sorts/expansion={spe:.2f}")
-    return row, best_level
+    return row, best_level, es
 
 
 def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
@@ -121,27 +124,29 @@ def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
     had a frontier)."""
     levels = len(want) - 1
     best_wall, best_level = 1e18, 1e18
+    es: dict = {}
     for _ in range(repeats):
         timed = _TimedGen(gen_np)
         with tempfile.TemporaryDirectory() as wd:
-            extsort.reset_stats()
-            t0 = time.perf_counter()
-            sizes, vis = disk_bfs(wd, np.array([[start]], np.uint32),
-                                  timed, width=1, chunk_rows=chunk_rows,
-                                  nshards=shards, shard_mode="inline")
-            wall = time.perf_counter() - t0
-            assert sizes == want, (tag, sizes, want)
-            vis.destroy()
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, vis = disk_bfs(wd, np.array([[start]], np.uint32),
+                                      timed, width=1, chunk_rows=chunk_rows,
+                                      nshards=shards, shard_mode="inline")
+                wall = time.perf_counter() - t0
+                assert sizes == want, (tag, sizes, want)
+                vis.destroy()
+            es = sc.delta()["extsort"]
         best_wall = min(best_wall, wall)
         best_level = min(best_level, wall - timed.t)
     # One seed sort pass (the single seed row lands on one shard); every
     # other sort pass is a shard's per-level frontier sort.
-    spe = (extsort.STATS["sort_passes"] - 1) / ((levels + 1) * shards)
+    spe = (es["sort_passes"] - 1) / ((levels + 1) * shards)
     name = f"bfs_{tag}_tierD_sharded{shards}"
     return (name, best_wall * 1e6,
             f"{n_states/best_level:.3g} level states/s "
             f"sorts/expansion={spe:.2f} rows_sorted="
-            f"{extsort.STATS['rows_sorted']}")
+            f"{es['rows_sorted']}")
 
 
 def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
@@ -157,20 +162,21 @@ def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
     for _ in range(repeats):
         timed = _TimedGen(bits_neighbors_np(n))
         with tempfile.TemporaryDirectory() as wd:
-            DBA.reset_stats()
-            t0 = time.perf_counter()
-            sizes, bits = disk_implicit_bfs(
-                wd, n_total, [start_rank], timed,
-                chunk_elems=chunk_elems, nshards=shards, shard_mode="inline")
-            wall = time.perf_counter() - t0
-            assert sizes == want, (sizes, want)
-            bits.destroy()
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, bits = disk_implicit_bfs(
+                    wd, n_total, [start_rank], timed, chunk_elems=chunk_elems,
+                    nshards=shards, shard_mode="inline")
+                wall = time.perf_counter() - t0
+                assert sizes == want, (sizes, want)
+                bits.destroy()
+            bs = sc.delta()["bits"]
         best_wall = min(best_wall, wall)
         best_level = min(best_level, wall - timed.t)
-        arr_lvl = (DBA.STATS["bytes_read"] + DBA.STATS["bytes_written"]
-                   - DBA.STATS["log_bytes_read"]
-                   - DBA.STATS["log_bytes_written"]) / (levels + 1)
-        passes_lvl = (DBA.STATS["sync_passes"] + DBA.STATS["scan_passes"]
+        arr_lvl = (bs["bytes_read"] + bs["bytes_written"]
+                   - bs["log_bytes_read"]
+                   - bs["log_bytes_written"]) / (levels + 1)
+        passes_lvl = (bs["sync_passes"] + bs["scan_passes"]
                       ) / ((levels + 1) * shards)
     name = f"bfs_pancake{n}_tierD_implicit_sharded{shards}"
     return (name, best_wall * 1e6,
@@ -189,16 +195,17 @@ def _ops_per_level(fused: bool):
     all_small = RL.from_rows(jnp.array([[1]], jnp.uint32), capacity=4)
     nrows = jnp.array([[2], [3]], jnp.uint32)
     valid = jnp.ones((2,), bool)
-    T.reset_sort_stats()
-    if fused:
-        C.dedupe_subtract_fold(nrows, valid, all_small, 4)
-    else:
-        nxt = RL.make(4, 1)
-        nxt, _ = RL.add(nxt, nrows, valid)
-        nxt = RL.remove_dupes(nxt)
-        nxt = RL.remove_all(nxt, all_small)
-        RL.add_all(all_small, nxt)
-    return T.SORT_STATS["lexsorts"], T.SORT_STATS["scatters"]
+    with obs.scope() as sc:
+        if fused:
+            C.dedupe_subtract_fold(nrows, valid, all_small, 4)
+        else:
+            nxt = RL.make(4, 1)
+            nxt, _ = RL.add(nxt, nrows, valid)
+            nxt = RL.remove_dupes(nxt)
+            nxt = RL.remove_all(nxt, all_small)
+            RL.add_all(all_small, nxt)
+    tj = sc.delta()["tierj"]
+    return tj["lexsorts"], tj["scatters"]
 
 
 def _bench_disk_implicit(n: int, want: List[int], n_total: int,
@@ -218,23 +225,23 @@ def _bench_disk_implicit(n: int, want: List[int], n_total: int,
     for _ in range(repeats):
         timed = _TimedGen(bits_neighbors_np(n))
         with tempfile.TemporaryDirectory() as wd:
-            DBA.reset_stats()
-            t0 = time.perf_counter()
-            sizes, bits = disk_implicit_bfs(wd, n_total, [start_rank], timed,
-                                            chunk_elems=chunk_elems,
-                                            fused=fused)
-            wall = time.perf_counter() - t0
-            assert sizes == want, (sizes, want)
-            bits.destroy()
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, bits = disk_implicit_bfs(wd, n_total, [start_rank],
+                                                timed,
+                                                chunk_elems=chunk_elems,
+                                                fused=fused)
+                wall = time.perf_counter() - t0
+                assert sizes == want, (sizes, want)
+                bits.destroy()
+            bs = sc.delta()["bits"]
         best_wall = min(best_wall, wall)
         best_level = min(best_level, wall - timed.t)
-        bytes_lvl = (DBA.STATS["bytes_read"]
-                     + DBA.STATS["bytes_written"]) / (levels + 1)
-        arr_lvl = (DBA.STATS["bytes_read"] + DBA.STATS["bytes_written"]
-                   - DBA.STATS["log_bytes_read"]
-                   - DBA.STATS["log_bytes_written"]) / (levels + 1)
-        passes_lvl = (DBA.STATS["sync_passes"]
-                      + DBA.STATS["scan_passes"]) / (levels + 1)
+        bytes_lvl = (bs["bytes_read"] + bs["bytes_written"]) / (levels + 1)
+        arr_lvl = (bs["bytes_read"] + bs["bytes_written"]
+                   - bs["log_bytes_read"]
+                   - bs["log_bytes_written"]) / (levels + 1)
+        passes_lvl = (bs["sync_passes"] + bs["scan_passes"]) / (levels + 1)
     name = (f"bfs_pancake{n}_tierD_implicit"
             + ("" if fused else "_unfused"))
     return ((name, best_wall * 1e6,
@@ -258,19 +265,19 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
     # floor (noise only ever ADDS time) and keep the regression gate quiet.
     repeats = 10 if n <= 5 else 2
 
-    fused_row, t_f = _bench_disk(f"pancake{n}", _gen_next_np(n), start, want,
-                                 total, chunk_rows, fused=True,
-                                 repeats=repeats)
+    fused_row, t_f, es_f = _bench_disk(f"pancake{n}", _gen_next_np(n), start,
+                                       want, total, chunk_rows, fused=True,
+                                       repeats=repeats)
     # Bytes touched per level by the sorted engine: rows streamed through
     # sort passes plus visited-set chunks probed, at 4·width bytes/row
-    # (STATS reflect the last repeat — representative, the runs are
+    # (the last repeat's scope delta — representative, the runs are
     # identical). The implicit row reports its exact analogue.
-    sorted_bytes_lvl = 4 * (extsort.STATS["rows_sorted"]
-                            + extsort.STATS["chunks_probed"] * chunk_rows
+    sorted_bytes_lvl = 4 * (es_f["rows_sorted"]
+                            + es_f["chunks_probed"] * chunk_rows
                             ) / (levels + 1)
-    unfused_row, t_u = _bench_disk(f"pancake{n}", _gen_next_np(n), start,
-                                   want, total, chunk_rows, fused=False,
-                                   repeats=repeats)
+    unfused_row, t_u, _ = _bench_disk(f"pancake{n}", _gen_next_np(n), start,
+                                      want, total, chunk_rows, fused=False,
+                                      repeats=repeats)
     rows.append((fused_row[0], fused_row[1],
                  fused_row[2] + f" bytes/level={sorted_bytes_lvl:.3g}"
                  f" speedup_vs_unfused={t_u/t_f:.2f}x"))
@@ -344,8 +351,8 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
 
     crepeats = 10 if cn <= 5 else 2
     crepeats_j = 3 if cn <= 5 else 1
-    crow, _ = _bench_disk(f"cayley{cn}", cayley_gen_np(cn), cstart, cwant,
-                          ctotal, chunk_rows, fused=True, repeats=crepeats)
+    crow, _, _ = _bench_disk(f"cayley{cn}", cayley_gen_np(cn), cstart, cwant,
+                             ctotal, chunk_rows, fused=True, repeats=crepeats)
     rows.append(crow)
 
     def run_cayley_j():

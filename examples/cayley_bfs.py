@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import constructs as C
 from repro.core.disk import breadth_first_search as disk_bfs
+from repro.core.disk import trace
 
 
 def mahonian(n):
@@ -88,6 +89,10 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="distribute the disk-tier search over N shard "
                          "workers")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a structured JSONL trace of the run to "
+                         "PATH and print the per-level report at exit "
+                         "(docs/observability.md)")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12
@@ -98,6 +103,13 @@ def main():
     want = mahonian(n)
     print(f"S_{n} bubble-sort Cayley graph: {total} vertices, "
           f"diameter should be {n*(n-1)//2}")
+
+    if args.trace:
+        # Start BEFORE the search builds its runtime: spawn workers read
+        # $ROOMY_TRACE at startup to buffer shard-tagged spans.
+        trace.start(args.trace, meta={"example": "cayley_bfs", "n": n,
+                                      "tier": args.tier,
+                                      "nshards": args.shards})
 
     if args.tier == "j":
         res = C.breadth_first_search(
@@ -111,6 +123,9 @@ def main():
                                       chunk_rows=1 << 13,
                                       nshards=args.shards)
             all_lst.destroy()
+
+    if args.trace:
+        trace.report(trace.stop())
 
     print("level sizes:", sizes)
     assert sizes == want, f"Mahonian mismatch!\n got {sizes}\nwant {want}"

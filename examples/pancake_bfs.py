@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import constructs as C
 from repro.core.disk import breadth_first_search as disk_bfs
-from repro.core.disk import extsort, faults
+from repro.core.disk import extsort, faults, trace
 
 
 def start_code(n):
@@ -107,6 +107,11 @@ def main():
                          "transient I/O flakes, plus a real worker kill "
                          "when --shards > 1 — the search must self-heal "
                          "to the exact fault-free level counts")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a structured JSONL trace of the run to "
+                         "PATH and print the per-level report at exit "
+                         "(docs/observability.md); composes with --shards "
+                         "and --chaos")
     args = ap.parse_args()
     n = args.n
     assert 3 <= n <= 12, "4-bit packing supports n <= 12"
@@ -131,6 +136,13 @@ def main():
     total = math.factorial(n)
     print(f"pancake n={n}: {total} states, tier={args.tier}"
           + (f", shards={args.shards}" if args.shards > 1 else ""))
+
+    if args.trace:
+        # Start BEFORE the search builds its runtime: spawn workers read
+        # $ROOMY_TRACE at startup to buffer shard-tagged spans.
+        trace.start(args.trace, meta={"example": "pancake_bfs", "n": n,
+                                      "tier": args.tier,
+                                      "nshards": args.shards})
 
     max_levels = args.stop_after if args.stop_after is not None else 10_000
     t0 = time.perf_counter()
@@ -167,6 +179,11 @@ def main():
         # particular the --check reference run must be fault-free.
         os.environ.pop(faults.ENV_VAR, None)
         faults.uninstall()
+
+    if args.trace:
+        # Close before the --check reference run: the trace describes the
+        # (possibly sharded, possibly chaos-ridden) run above, nothing else.
+        trace.report(trace.stop())
 
     if args.stop_after is not None and sum(sizes) < total:
         print("level sizes so far:", sizes)

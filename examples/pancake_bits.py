@@ -27,10 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import constructs as C
+from repro.core import obs
 from repro.core import ranking as R
-from repro.core.disk import bitarray as DBA
 from repro.core.disk import breadth_first_search as disk_bfs
-from repro.core.disk import extsort, faults
+from repro.core.disk import extsort, faults, trace
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
 
@@ -92,7 +92,7 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
 def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         shard_mode: str = "spawn", checkpoint_dir=None,
         checkpoint_every: int = 1, resume: bool = False, stop_after=None,
-        chaos=None):
+        chaos=None, trace_path=None):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
@@ -103,9 +103,14 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         # alone gets the default seeded storm.  The env var is how spawn
         # workers inherit the plan.
         os.environ[faults.ENV_VAR] = faults.default_chaos_spec(chaos, shards)
+    if trace_path:
+        # Start BEFORE the search builds its runtime: spawn workers read
+        # $ROOMY_TRACE at startup to buffer shard-tagged spans.
+        trace.start(trace_path, meta={"example": "pancake_bits", "n": n,
+                                      "tier": tier, "nshards": shards})
 
     max_levels = stop_after if stop_after is not None else 10_000
-    DBA.reset_stats()
+    sco = obs.Scope()        # this search's counter window (no global reset)
     t0 = time.perf_counter()
     if tier == "j":
         sizes, jbits = C.implicit_bfs(total, [start_rank], neighbor_jnp(n))
@@ -130,10 +135,13 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
                 hist = bits.count_values()
                 assert hist[0] == 0, "unreached states — graph not connected?"
             bits.destroy()
-        io_line = (f"bytes touched: {DBA.STATS['bytes_read']} read "
-                   f"{DBA.STATS['bytes_written']} written"
-                   if shards == 1 else "(per-shard byte counters live in "
-                   "the workers; see benchmarks/bfs.py --shards)")
+        # Complete in every mode: single-process books directly, inline
+        # workers share this process's registry, and spawn workers' deltas
+        # are folded back at each level barrier (ShardRuntime.collect_obs).
+        bs = sco.delta()["bits"]
+        io_line = (f"bytes touched: {bs['bytes_read']} read "
+                   f"{bs['bytes_written']} written"
+                   + (" (incl. folded worker totals)" if shards > 1 else ""))
     dt = time.perf_counter() - t0
 
     if chaos is not None:
@@ -146,6 +154,11 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         # particular the --check reference runs must be fault-free.
         os.environ.pop(faults.ENV_VAR, None)
         faults.uninstall()
+
+    if trace_path:
+        # Close before the --check reference runs: the trace describes the
+        # (possibly sharded, possibly chaos-ridden) run above, nothing else.
+        trace.report(trace.stop())
 
     if stop_after is not None and sum(sizes) < total:
         print("level sizes so far:", sizes)
@@ -210,6 +223,11 @@ def main():
                          "transient I/O flakes, plus a real worker kill "
                          "when --shards > 1 — the search must self-heal "
                          "to the exact fault-free level counts")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a structured JSONL trace of the run to "
+                         "PATH and print the per-level report at exit "
+                         "(docs/observability.md); composes with --shards "
+                         "and --chaos")
     args = ap.parse_args()
     assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
     assert args.shards == 1 or args.tier == "disk", \
@@ -225,7 +243,7 @@ def main():
         "--chaos is a disk-tier (Tier D) feature"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
         args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
-        args.resume, args.stop_after, args.chaos)
+        args.resume, args.stop_after, args.chaos, args.trace)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,7 @@
 See DESIGN.md. Submodules:
 
   types       element codecs, sentinels, sort/segment helpers
+  obs         metrics registry + span tracer (stdlib-only; docs/observability.md)
   rlist       RoomyList        (unordered multiset)
   rset        RoomySet         (native sorted-unique set — paper's §3 roadmap)
   array       RoomyArray       (delayed access/update + sync)
@@ -26,7 +27,7 @@ import importlib
 
 __all__ = [
     "array", "bitarray", "constructs", "delayed", "disk", "hashtable",
-    "paged", "ranking", "rlist", "rset", "sharding", "types",
+    "obs", "paged", "ranking", "rlist", "rset", "sharding", "types",
 ]
 
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from . import array as RA
 from . import bitarray as BA
+from . import obs
 from . import rlist as RL
 from . import types as T
 
@@ -284,8 +285,10 @@ def implicit_bfs(
                                      neighbor_fn=neighbor_fn, impl=impl,
                                      fused=fused))
     for _ in range(max_levels):
-        data, cnt = step(data)
-        c = int(cnt)
+        with obs.span("bfs.level", level=len(level_sizes), tier="j",
+                      engine="implicit"):
+            data, cnt = step(data)
+            c = int(cnt)
         if c == 0:
             break
         level_sizes.append(c)
@@ -327,21 +330,23 @@ def breadth_first_search(
         if int(cur.count) == 0:
             res.level_sizes.pop()              # last level was empty
             break
-        next_cap = max(level_capacity, int(cur.count) * fanout)
-        nxt, all2, overflow = step(cur, all_lst, next_cap=next_cap)
-        if bool(overflow):
-            # Grow the 'all' list and redo this level (pure functional state
-            # means the failed attempt had no side effects).
-            all_capacity *= 2
-            grown = RL.make(all_capacity, width)
-            grown, _ = RL.add_all(grown, all_lst)
-            all_lst = grown
+        with obs.span("bfs.level", level=res.levels_run + 1, tier="j",
+                      engine="sorted", frontier=int(cur.count)):
+            next_cap = max(level_capacity, int(cur.count) * fanout)
             nxt, all2, overflow = step(cur, all_lst, next_cap=next_cap)
             if bool(overflow):
-                raise MemoryError("BFS capacity growth failed twice")
-        cur, all_lst = nxt, all2
-        res.levels_run += 1
-        res.level_sizes.append(int(cur.count))
+                # Grow the 'all' list and redo this level (pure functional
+                # state means the failed attempt had no side effects).
+                all_capacity *= 2
+                grown = RL.make(all_capacity, width)
+                grown, _ = RL.add_all(grown, all_lst)
+                all_lst = grown
+                nxt, all2, overflow = step(cur, all_lst, next_cap=next_cap)
+                if bool(overflow):
+                    raise MemoryError("BFS capacity growth failed twice")
+            cur, all_lst = nxt, all2
+            res.levels_run += 1
+            res.level_sizes.append(int(cur.count))
         if int(cur.count) == 0:
             res.level_sizes.pop()
             break

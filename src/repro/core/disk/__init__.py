@@ -3,6 +3,9 @@
 Real chunked disk files, streaming passes, external merge sort; see
 DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 """
+# trace is intentionally NOT imported here: pre-importing it makes
+# ``python -m repro.core.disk.trace`` warn about the double import, and
+# ``from repro.core.disk import trace`` resolves the submodule anyway.
 from . import faults
 from .bfs import breadth_first_search, implicit_bfs, level_step
 from .bitarray import DiskBitArray

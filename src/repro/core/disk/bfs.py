@@ -36,6 +36,7 @@ from typing import Callable, List
 
 import numpy as np
 
+from .. import obs
 from . import checkpoint as ckpt
 from . import extsort
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
@@ -267,31 +268,40 @@ def breadth_first_search(
         if ck is not None:      # level-0 snapshot: any kill is resumable
             _ckpt_sorted(ck, all_runs, cur, level_sizes, width, ck_prev)
     for lev in range(start_lev, max_levels + 1):
-        # Expansion streams straight into sorted run construction: the raw
-        # frontier is never written unsorted to disk and read back (the one
-        # sort pass happens as the neighbours are generated).
-        builder = extsort.RunBuilder(tmp_dir, width, chunk_rows=chunk_rows,
-                                     run_rows=run_rows)
-        for chunk in cur.iter_chunks():
-            builder.add(gen_next(np.asarray(chunk)))
-        runs = builder.finish()
-        # cur is fully consumed; compaction may now merge (and destroy) it.
-        all_runs.maybe_compact()
-        nxt = ChunkStore(os.path.join(workdir, f"bfs_lev{lev}"), width,
-                         chunk_rows=chunk_rows, fresh=True)
-        try:
-            _merge_subtract(runs, all_runs.runs, nxt)
-        finally:
-            for r in runs:
-                r.destroy()
-        if nxt.size == 0:
-            nxt.destroy()
+        with obs.span("bfs.level", level=lev, engine="sorted",
+                      frontier=cur.size):
+            # Expansion streams straight into sorted run construction: the
+            # raw frontier is never written unsorted to disk and read back
+            # (the one sort pass happens as the neighbours are generated).
+            builder = extsort.RunBuilder(tmp_dir, width,
+                                         chunk_rows=chunk_rows,
+                                         run_rows=run_rows)
+            for chunk in cur.iter_chunks():
+                builder.add(gen_next(np.asarray(chunk)))
+            runs = builder.finish()
+            # cur is fully consumed; compaction may now merge (and destroy)
+            # it.
+            all_runs.maybe_compact()
+            nxt = ChunkStore(os.path.join(workdir, f"bfs_lev{lev}"), width,
+                             chunk_rows=chunk_rows, fresh=True)
+            try:
+                _merge_subtract(runs, all_runs.runs, nxt)
+            finally:
+                for r in runs:
+                    r.destroy()
+            if nxt.size == 0:
+                nxt.destroy()
+                empty = True
+            else:
+                empty = False
+                all_runs.add_run(nxt)
+                cur = nxt
+                level_sizes.append(cur.size)
+                if ck is not None and lev % checkpoint_every == 0:
+                    _ckpt_sorted(ck, all_runs, cur, level_sizes, width,
+                                 ck_prev)
+        if empty:
             break
-        all_runs.add_run(nxt)
-        cur = nxt
-        level_sizes.append(cur.size)
-        if ck is not None and lev % checkpoint_every == 0:
-            _ckpt_sorted(ck, all_runs, cur, level_sizes, width, ck_prev)
     shutil.rmtree(tmp_dir, ignore_errors=True)
     return level_sizes, all_runs
 
@@ -445,21 +455,23 @@ def implicit_bfs(
             _ckpt_implicit(ck, bits, level_sizes, n_states)
     lev = len(level_sizes) - 1          # highest level already counted
     while lev < max_levels:
-        nxt_count = 0
-        # One fused read-write pass: marks from the previous expansion
-        # apply (UNSEEN→NEXT), the chunk rotates, the new frontier is
-        # counted, and its expansion queues marks for the NEXT pass.
-        bits.run_pass(
-            PassPlan("bfs-level").writes(rotate).reads(count_cur)
-            .reads(expand),
-            combine=lambda p, q: p,            # every mark payload == NEXT
-            apply=lambda old, agg: np.where(old == UNSEEN, agg, old))
+        with obs.span("bfs.level", level=lev + 1, engine="implicit"):
+            nxt_count = 0
+            # One fused read-write pass: marks from the previous expansion
+            # apply (UNSEEN→NEXT), the chunk rotates, the new frontier is
+            # counted, and its expansion queues marks for the NEXT pass.
+            bits.run_pass(
+                PassPlan("bfs-level").writes(rotate).reads(count_cur)
+                .reads(expand),
+                combine=lambda p, q: p,        # every mark payload == NEXT
+                apply=lambda old, agg: np.where(old == UNSEEN, agg, old))
+            if nxt_count:
+                level_sizes.append(nxt_count)
+                lev += 1
+                if ck is not None and lev % checkpoint_every == 0:
+                    _ckpt_implicit(ck, bits, level_sizes, n_states)
         if nxt_count == 0:
             break
-        level_sizes.append(nxt_count)
-        lev += 1
-        if ck is not None and lev % checkpoint_every == 0:
-            _ckpt_implicit(ck, bits, level_sizes, n_states)
     return level_sizes, bits
 
 

@@ -38,6 +38,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .. import obs
 from . import faults
 from .extsort import segment_combine_ordered
 from .passes import PassPlan, record_pass
@@ -54,9 +55,10 @@ UNSEEN, CUR, NEXT, DONE = 0, 1, 2, 3
 # the op-log subset, so packed-ARRAY traversal bytes — the planner's unit
 # of saving — are exactly bytes_read - log_bytes_read (ditto written), and
 # tests can pin "one array traversal per fused BFS level" to the byte.
-STATS = {"bytes_read": 0, "bytes_written": 0, "log_bytes_read": 0,
-         "log_bytes_written": 0, "sync_passes": 0, "scan_passes": 0,
-         "ops_applied": 0}
+STATS = obs.counters("bits", {
+    "bytes_read": 0, "bytes_written": 0, "log_bytes_read": 0,
+    "log_bytes_written": 0, "sync_passes": 0, "scan_passes": 0,
+    "ops_applied": 0})
 
 
 def reset_stats() -> None:
@@ -229,59 +231,67 @@ class DiskBitArray:
             combine = np.bitwise_or
         if apply is None:
             apply = lambda old, agg: agg
-        self._flush_logs()
-        # Promote current logs to a read-only snapshot (.pass); mid-pass
-        # updates re-open fresh .bin logs this traversal never reads. A
-        # leftover snapshot from an aborted pass is re-adopted in front of
-        # the newer records so no queued op is ever lost.
-        any_log = False
-        for c in range(self.n_chunks):
-            lp, sp = self._log_path(c), self._log_path(c) + ".pass"
-            if os.path.exists(sp):
-                if os.path.exists(lp):
-                    with open(sp, "ab") as dst, open(lp, "rb") as src:
-                        dst.write(src.read())
-                    os.remove(lp)
-            elif os.path.exists(lp):
-                os.replace(lp, sp)
-            any_log = any_log or os.path.exists(sp)
-        STATS["sync_passes"] += 1
-        record_pass(plan.n_stages + (1 if any_log else 0),
-                    writes=plan.writes_chunks or any_log)
-        for c in range(self.n_chunks):
-            sp = self._log_path(c) + ".pass"
-            has_log = os.path.exists(sp)
-            if not has_log and not plan.forces_full_traversal:
-                continue
-            rows = self._chunk_rows(c)
-            packed = np.load(self._chunk_path(c))
-            STATS["bytes_read"] += packed.nbytes
-            vals = unpack2(packed, rows)
-            if has_log:
-                log = np.fromfile(sp, dtype=np.int64).reshape(-1, 2)
-                STATS["bytes_read"] += log.nbytes
-                STATS["log_bytes_read"] += log.nbytes
-                if log.shape[0]:
-                    local = log[:, 0] - c * self.chunk_elems
-                    pay = log[:, 1].astype(np.uint8)
-                    order = np.argsort(local, kind="stable")
-                    uniq, agg = segment_combine_ordered(
-                        local[order], pay[order], combine)
-                    vals[uniq] = apply(vals[uniq], agg)
-                    STATS["ops_applied"] += int(log.shape[0])
-            vals = plan.apply_chunk(c * self.chunk_elems, vals)
-            assert vals.shape[0] == rows
-            if has_log or plan.writes_chunks:
-                out = pack2(vals)
-                faults.retry_io("chunk_flush",
-                                lambda: np.save(self._chunk_path(c), out),
-                                chunk=c)
-                STATS["bytes_written"] += out.nbytes
-            if has_log:
-                # Consumed only after the chunk lands: a stage raising
-                # mid-pass leaves the snapshot for the next pass to re-adopt
-                # instead of silently dropping this chunk's queued ops.
-                os.remove(sp)
+        any_log = any(
+            bool(self._log_bufs[c]) or os.path.exists(self._log_path(c))
+            or os.path.exists(self._log_path(c) + ".pass")
+            for c in range(self.n_chunks))
+        writes = plan.writes_chunks or any_log
+        # The span opens BEFORE the log flush/promotion so the queued-op
+        # spill bytes land in this pass's metrics — a shard's pass spans
+        # then carry its complete byte ledger (the trace acceptance pin).
+        with obs.span("pass.rw" if writes else "pass.read", plan=plan.name,
+                      chunks=self.n_chunks):
+            self._flush_logs()
+            # Promote current logs to a read-only snapshot (.pass); mid-pass
+            # updates re-open fresh .bin logs this traversal never reads. A
+            # leftover snapshot from an aborted pass is re-adopted in front
+            # of the newer records so no queued op is ever lost.
+            for c in range(self.n_chunks):
+                lp, sp = self._log_path(c), self._log_path(c) + ".pass"
+                if os.path.exists(sp):
+                    if os.path.exists(lp):
+                        with open(sp, "ab") as dst, open(lp, "rb") as src:
+                            dst.write(src.read())
+                        os.remove(lp)
+                elif os.path.exists(lp):
+                    os.replace(lp, sp)
+            STATS["sync_passes"] += 1
+            record_pass(plan.n_stages + (1 if any_log else 0), writes=writes)
+            for c in range(self.n_chunks):
+                sp = self._log_path(c) + ".pass"
+                has_log = os.path.exists(sp)
+                if not has_log and not plan.forces_full_traversal:
+                    continue
+                rows = self._chunk_rows(c)
+                packed = np.load(self._chunk_path(c))
+                STATS["bytes_read"] += packed.nbytes
+                vals = unpack2(packed, rows)
+                if has_log:
+                    log = np.fromfile(sp, dtype=np.int64).reshape(-1, 2)
+                    STATS["bytes_read"] += log.nbytes
+                    STATS["log_bytes_read"] += log.nbytes
+                    if log.shape[0]:
+                        local = log[:, 0] - c * self.chunk_elems
+                        pay = log[:, 1].astype(np.uint8)
+                        order = np.argsort(local, kind="stable")
+                        uniq, agg = segment_combine_ordered(
+                            local[order], pay[order], combine)
+                        vals[uniq] = apply(vals[uniq], agg)
+                        STATS["ops_applied"] += int(log.shape[0])
+                vals = plan.apply_chunk(c * self.chunk_elems, vals)
+                assert vals.shape[0] == rows
+                if has_log or plan.writes_chunks:
+                    out = pack2(vals)
+                    faults.retry_io("chunk_flush",
+                                    lambda: np.save(self._chunk_path(c), out),
+                                    chunk=c)
+                    STATS["bytes_written"] += out.nbytes
+                if has_log:
+                    # Consumed only after the chunk lands: a stage raising
+                    # mid-pass leaves the snapshot for the next pass to
+                    # re-adopt instead of silently dropping this chunk's
+                    # queued ops.
+                    os.remove(sp)
 
     # ------------------------------------------------------- checkpoint
     def snapshot_to(self, dst: str) -> int:

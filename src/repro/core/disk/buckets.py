@@ -43,6 +43,7 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from . import faults
 
 __all__ = [
@@ -172,19 +173,21 @@ class BucketWriter:
         Returns the (nshards,) per-destination dropped counts for the
         epoch.  Destinations that received no rows publish no file — the
         reader treats absence as an empty bucket."""
-        self._spill()
-        for d in range(self.nshards):
-            tmp = self._tmp_path(d)
-            if os.path.exists(tmp):
-                final = os.path.join(
-                    self.root, _bucket_name(epoch, self.src, d))
-                faults.retry_io("bucket_seal",
-                                lambda t=tmp, f=final: os.replace(t, f),
-                                shard=self.src, dst=d)
-        dropped = self._dropped.copy()
-        self._accepted[:] = 0
-        self._dropped[:] = 0
-        return dropped
+        with obs.span("bucket.seal", epoch=epoch, src=self.src,
+                      rows=int(self._accepted.sum())):
+            self._spill()
+            for d in range(self.nshards):
+                tmp = self._tmp_path(d)
+                if os.path.exists(tmp):
+                    final = os.path.join(
+                        self.root, _bucket_name(epoch, self.src, d))
+                    faults.retry_io("bucket_seal",
+                                    lambda t=tmp, f=final: os.replace(t, f),
+                                    shard=self.src, dst=d)
+            dropped = self._dropped.copy()
+            self._accepted[:] = 0
+            self._dropped[:] = 0
+            return dropped
 
 
 # ----------------------------------------------------------------- reader
@@ -211,13 +214,17 @@ def iter_incoming(root: str, dst: int, epoch: int, width: int,
     """Stream (src, rows) for every sealed bucket aimed at ``dst`` this
     epoch, ascending src.  With ``consume=True`` each file is deleted
     after it is yielded (the destination owns sealed files)."""
-    dt = np.dtype(dtype)
-    for src, path in incoming_files(root, dst, epoch):
-        rows = np.fromfile(path, dtype=dt)
-        assert rows.size % width == 0, f"torn bucket file {path}"
-        yield src, rows.reshape(-1, width)
-        if consume:
-            os.remove(path)
+    # Generator span: opens at first advance, closes when the stream is
+    # exhausted or the consumer abandons it (GeneratorExit unwinds the
+    # ``with``; obs tolerates the out-of-LIFO end).
+    with obs.span("bucket.apply", epoch=epoch, dst=dst):
+        dt = np.dtype(dtype)
+        for src, path in incoming_files(root, dst, epoch):
+            rows = np.fromfile(path, dtype=dt)
+            assert rows.size % width == 0, f"torn bucket file {path}"
+            yield src, rows.reshape(-1, width)
+            if consume:
+                os.remove(path)
 
 
 # ---------------------------------------------------------------- cleanup

@@ -56,6 +56,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .. import obs
 from . import extsort, faults
 from .buckets import block_owner_np, hash_owner_np
 from .lsm import SortedRunSet
@@ -353,23 +354,25 @@ def snapshot_sorted_state(stage_dir: str, all_runs: SortedRunSet,
     name (e.g. a restarted-without-resume search in a reused checkpoint
     directory).
     """
-    names: List[str] = []
-    cur_name = None
-    os.makedirs(stage_dir, exist_ok=True)
-    reuse = prev_names if (prev_dir is not None and prev_names) else ()
-    for run in all_runs.runs:
-        dname = os.path.basename(run.path)
-        assert dname not in names, f"duplicate run basename {dname}"
-        dst = os.path.join(stage_dir, dname)
-        if dname in reuse and os.path.isdir(os.path.join(prev_dir, dname)):
-            extsort.STATS["ckpt_bytes_written"] += _link_or_copy_dir(
-                os.path.join(prev_dir, dname), dst)
-        else:
-            extsort.STATS["ckpt_bytes_written"] += run.export_to(dst)
-        names.append(dname)
-        if cur is not None and run is cur:
-            cur_name = dname
-    return {"runs": names, "cur": cur_name, "runset_seq": all_runs._seq}
+    with obs.span("ckpt.snapshot", engine="sorted", runs=len(all_runs.runs)):
+        names: List[str] = []
+        cur_name = None
+        os.makedirs(stage_dir, exist_ok=True)
+        reuse = prev_names if (prev_dir is not None and prev_names) else ()
+        for run in all_runs.runs:
+            dname = os.path.basename(run.path)
+            assert dname not in names, f"duplicate run basename {dname}"
+            dst = os.path.join(stage_dir, dname)
+            if dname in reuse and os.path.isdir(os.path.join(prev_dir,
+                                                             dname)):
+                extsort.STATS["ckpt_bytes_written"] += _link_or_copy_dir(
+                    os.path.join(prev_dir, dname), dst)
+            else:
+                extsort.STATS["ckpt_bytes_written"] += run.export_to(dst)
+            names.append(dname)
+            if cur is not None and run is cur:
+                cur_name = dname
+        return {"runs": names, "cur": cur_name, "runset_seq": all_runs._seq}
 
 
 def restore_sorted_state(snap_dir: str, state: dict, all_runs: SortedRunSet,
@@ -379,21 +382,23 @@ def restore_sorted_state(snap_dir: str, state: dict, all_runs: SortedRunSet,
     empty at snapshot time).  Restored run directories get a fresh
     ``{runset}.ckpt.`` prefix so they can never collide with (or be wiped
     by) the level/compaction stores the resumed loop will create."""
-    extsort.STATS["ckpt_restores"] += 1
-    runs: List[ChunkStore] = []
-    cur = None
-    for dname in state["runs"]:
-        dst = os.path.join(workdir, f"{all_runs.name}.ckpt.{dname}")
-        shutil.rmtree(dst, ignore_errors=True)
-        copy_dir_booked(os.path.join(snap_dir, dname), dst,
-                        "ckpt_bytes_read")
-        run = ChunkStore(dst, width, chunk_rows=chunk_rows)
-        assert run.sorted, f"restored run {dname} lost its sortedness claim"
-        runs.append(run)
-        if state.get("cur") == dname:
-            cur = run
-    all_runs.adopt_runs(runs, seq=int(state["runset_seq"]))
-    return cur
+    with obs.span("ckpt.restore", engine="sorted", runs=len(state["runs"])):
+        extsort.STATS["ckpt_restores"] += 1
+        runs: List[ChunkStore] = []
+        cur = None
+        for dname in state["runs"]:
+            dst = os.path.join(workdir, f"{all_runs.name}.ckpt.{dname}")
+            shutil.rmtree(dst, ignore_errors=True)
+            copy_dir_booked(os.path.join(snap_dir, dname), dst,
+                            "ckpt_bytes_read")
+            run = ChunkStore(dst, width, chunk_rows=chunk_rows)
+            assert run.sorted, \
+                f"restored run {dname} lost its sortedness claim"
+            runs.append(run)
+            if state.get("cur") == dname:
+                cur = run
+        all_runs.adopt_runs(runs, seq=int(state["runset_seq"]))
+        return cur
 
 
 # ==================================================== implicit engine state
@@ -401,10 +406,12 @@ def restore_sorted_state(snap_dir: str, state: dict, all_runs: SortedRunSet,
 def snapshot_implicit_state(stage_dir: str, bits) -> dict:
     """Snapshot a DiskBitArray (packed chunks + pending op logs) into
     ``stage_dir/bits``; returns the engine-state meta."""
-    nbytes = bits.snapshot_to(os.path.join(stage_dir, "bits"))
-    return {"bits_bytes": nbytes, "chunk_elems": bits.chunk_elems}
+    with obs.span("ckpt.snapshot", engine="implicit"):
+        nbytes = bits.snapshot_to(os.path.join(stage_dir, "bits"))
+        return {"bits_bytes": nbytes, "chunk_elems": bits.chunk_elems}
 
 
 def restore_implicit_state(snap_dir: str, bits) -> None:
-    extsort.STATS["ckpt_restores"] += 1
-    bits.adopt_snapshot(os.path.join(snap_dir, "bits"))
+    with obs.span("ckpt.restore", engine="implicit"):
+        extsort.STATS["ckpt_restores"] += 1
+        bits.adopt_snapshot(os.path.join(snap_dir, "bits"))

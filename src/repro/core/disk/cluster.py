@@ -62,6 +62,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from . import checkpoint as ckpt
 from . import extsort, faults
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
@@ -161,6 +162,12 @@ def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q) -> None:
     ctx = ShardContext(shard, nshards, root)
     faults.install_from_env(state_dir=os.path.join(root, "_faults"),
                             shard=shard, allow_exit=True)
+    # Tracing rides the environment exactly like the fault plan: trace.start
+    # exports $ROOMY_TRACE before the pool spawns (and before recovery
+    # respawns), so every worker buffers shard-tagged spans for the
+    # coordinator to collect at the level barrier (_w_obs_collect).
+    if os.environ.get(obs.ENV_VAR):
+        obs.enable(shard=shard)
     while True:
         msg = cmd_q.get()
         if msg is None:
@@ -195,6 +202,15 @@ def _w_reset_stats(ctx: ShardContext) -> None:
     extsort.reset_stats()
     for k in BITS_STATS:
         BITS_STATS[k] = 0
+
+
+def _w_obs_collect(ctx: ShardContext) -> tuple:
+    """This worker's registry snapshot plus its buffered spans, for the
+    coordinator's telemetry fold (:meth:`ShardRuntime.collect_obs`).
+    Counters are NOT reset — the coordinator folds deltas against its
+    last collection, so ``_w_get_stats`` budget assertions keep seeing
+    the worker's cumulative totals."""
+    return obs.snapshot(), obs.drain_spans()
 
 
 def _w_destroy(ctx: ShardContext, name: str) -> None:
@@ -238,6 +254,10 @@ class ShardRuntime:
         self.epoch = 0
         self._seq = 0
         self._structs: dict = {}
+        # Per-shard last-seen counter values (ns -> {key: value}), the
+        # baselines collect_obs folds deltas against.  Spawn mode only:
+        # inline workers mutate this process's registry directly.
+        self._obs_base: List[dict] = [dict() for _ in range(self.nshards)]
         exch = os.path.join(root, "exchange")
         if fresh and os.path.isdir(exch):
             shutil.rmtree(exch)
@@ -375,12 +395,49 @@ class ShardRuntime:
     def sync(self) -> dict:
         """Sync every registered sharded structure (default combine/apply);
         returns {structure_name: exact_dropped_count}."""
-        return {name: s.sync() for name, s in self._structs.items()}
+        out = {name: s.sync() for name, s in self._structs.items()}
+        self.collect_obs()
+        return out
+
+    # ------------------------------------------------------------ telemetry
+    def collect_obs(self) -> None:
+        """Fold the spawn workers' counter deltas (and, when tracing,
+        their buffered spans) into the coordinator's obs registry, so
+        pass/byte totals survive worker process exit and a distributed
+        run produces ONE coherent trace.
+
+        Spawn mode only: inline workers run in this process and mutate
+        the shared module registries directly — folding would double
+        count.  Deltas are taken against the last collection per shard
+        (``_obs_base``); :meth:`recover` resets the baselines because
+        respawned workers restart their counters at zero.  Never raises:
+        a dying pool must not turn telemetry into the crash."""
+        if self.mode != "spawn" or self._broken or not self._procs:
+            return
+        try:
+            snaps = self.bcast(_w_obs_collect)
+        except (RuntimeError, OSError):
+            return
+        for shard, (snap, spans) in enumerate(snaps):
+            base = self._obs_base[shard]
+            for ns, vals in snap["counters"].items():
+                prev = base.setdefault(ns, {})
+                live = obs.counters(ns, {})
+                for k, v in vals.items():
+                    d = v - prev.get(k, 0)
+                    if d:
+                        live[k] = live.get(k, 0) + d
+                    prev[k] = v
+            if obs.ACTIVE and spans:
+                obs.ingest(spans, shard=shard)
 
     # ------------------------------------------------------------ lifecycle
     def shutdown(self) -> None:
         """Stop the workers (spawn mode).  Shard directories stay on disk.
-        Always returns, even for a broken pool: see _teardown_workers."""
+        Always returns, even for a broken pool: see _teardown_workers.
+        Final telemetry sweep first — pass/byte totals booked since the
+        last barrier would otherwise die with the worker processes."""
+        self.collect_obs()
         self._teardown_workers()
 
     def _teardown_workers(self) -> None:
@@ -437,6 +494,9 @@ class ShardRuntime:
         else:
             self._teardown_workers()
             self._spawn_workers()
+        # Respawned workers restart their counters at zero: reset the
+        # delta baselines or the next collect_obs would fold negatives.
+        self._obs_base = [dict() for _ in range(self.nshards)]
         self._broken = False
 
     def destroy(self) -> None:
@@ -827,21 +887,22 @@ def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int,
     if faults.ACTIVE:     # the worker-kill-at-level-k site
         faults.fire("worker_level", shard=ctx.shard, level=lev)
     st = ctx.objects[spec["name"]]
-    builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
-                                 spec["width"], chunk_rows=spec["chunk_rows"],
-                                 run_rows=spec["run_rows"])
-    writer = ctx.writer(spec)
-    for chunk in st["cur"].iter_chunks():
-        nbrs = np.ascontiguousarray(gen_next(np.asarray(chunk)),
-                                    np.uint32).reshape(-1, spec["width"])
-        owner = hash_owner_np(nbrs, ctx.nshards)
-        local = owner == ctx.shard
-        if local.any():
-            builder.add(nbrs[local])
-        if not local.all():
-            writer.put(owner[~local], nbrs[~local])
-    st["builder"] = builder
-    return int(writer.seal(epoch).sum())
+    with obs.span("bfs.level", level=lev, shard=ctx.shard, phase="expand"):
+        builder = extsort.RunBuilder(
+            os.path.join(ctx.dir, f"{spec['name']}_tmp"), spec["width"],
+            chunk_rows=spec["chunk_rows"], run_rows=spec["run_rows"])
+        writer = ctx.writer(spec)
+        for chunk in st["cur"].iter_chunks():
+            nbrs = np.ascontiguousarray(gen_next(np.asarray(chunk)),
+                                        np.uint32).reshape(-1, spec["width"])
+            owner = hash_owner_np(nbrs, ctx.nshards)
+            local = owner == ctx.shard
+            if local.any():
+                builder.add(nbrs[local])
+            if not local.all():
+                writer.put(owner[~local], nbrs[~local])
+        st["builder"] = builder
+        return int(writer.seal(epoch).sum())
 
 
 def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
@@ -850,32 +911,34 @@ def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
     local visited runs — the shard-local copy of bfs.level_step."""
     from .bfs import _merge_subtract
     st = ctx.objects[spec["name"]]
-    builder = st.pop("builder")
-    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                    epoch, spec["rec_width"],
-                                    spec["rec_dtype"]):
-        builder.add(rows)
-    runs = builder.finish()
-    st["all"].maybe_compact()
-    st["lev"] += 1
-    nxt = ChunkStore(
-        os.path.join(ctx.dir, f"{spec['name']}_lev{st['lev']}"),
-        spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
-    try:
-        _merge_subtract(runs, st["all"].runs, nxt)
-    finally:
-        for r in runs:
-            r.destroy()
-    if nxt.size:
-        st["all"].add_run(nxt)
-        st["cur"] = nxt
-    else:
-        nxt.destroy()
-        st["cur"] = ChunkStore(
-            os.path.join(ctx.dir, f"{spec['name']}_empty"), spec["width"],
-            chunk_rows=spec["chunk_rows"], fresh=True)
-        st["cur"].flush(mark_sorted=True)
-    return nxt.size
+    with obs.span("bfs.level", level=st["lev"] + 1, shard=ctx.shard,
+                  phase="absorb"):
+        builder = st.pop("builder")
+        for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]),
+                                        ctx.shard, epoch, spec["rec_width"],
+                                        spec["rec_dtype"]):
+            builder.add(rows)
+        runs = builder.finish()
+        st["all"].maybe_compact()
+        st["lev"] += 1
+        nxt = ChunkStore(
+            os.path.join(ctx.dir, f"{spec['name']}_lev{st['lev']}"),
+            spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
+        try:
+            _merge_subtract(runs, st["all"].runs, nxt)
+        finally:
+            for r in runs:
+                r.destroy()
+        if nxt.size:
+            st["all"].add_run(nxt)
+            st["cur"] = nxt
+        else:
+            nxt.destroy()
+            st["cur"] = ChunkStore(
+                os.path.join(ctx.dir, f"{spec['name']}_empty"), spec["width"],
+                chunk_rows=spec["chunk_rows"], fresh=True)
+            st["cur"].flush(mark_sorted=True)
+        return nxt.size
 
 
 def _w_bfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
@@ -1001,32 +1064,36 @@ def _roll_back(runtime: ShardRuntime, ck: Optional[SearchCheckpoint],
     per-level pass budgets still hold for the non-replayed work."""
     shard = getattr(exc, "shard", None)
     site = getattr(exc, "phase", None) or type(exc).__name__
-    state = None
-    if ck is not None:
-        try:
-            state = ck.latest()
-        except ckpt.CheckpointError:
-            state = None
-    if state is None:
-        raise ShardFailure(
-            "sharded BFS failed and no coordinated checkpoint is "
-            "adoptable — enable checkpoint_dir= to make runs recoverable",
-            shard=shard, site=site, epoch=runtime.epoch, level=lev,
-            recoveries=recoveries) from exc
-    if recoveries >= max_recoveries:
-        raise ShardFailure(
-            f"sharded BFS failed and the recovery budget is exhausted "
-            f"({recoveries}/{max_recoveries} used) — raise max_recoveries= "
-            "to keep self-healing",
-            shard=shard, site=site, epoch=runtime.epoch, level=lev,
-            recoveries=recoveries) from exc
-    extsort.STATS["recoveries"] += 1
-    runtime.recover()
-    shutil.rmtree(runtime.driver.exchange_dir(spec["name"]),
-                  ignore_errors=True)
-    extsort.STATS["replayed_levels"] += max(
-        0, lev - (len(state["level_sizes"]) - 1))
-    return state
+    # The span closes on the failure raises too — an unrecoverable run
+    # still traces WHERE it died (shard_lost / site / level attrs).
+    with obs.span("recovery.rollback", level=lev, shard_lost=shard,
+                  site=site, attempt=recoveries + 1):
+        state = None
+        if ck is not None:
+            try:
+                state = ck.latest()
+            except ckpt.CheckpointError:
+                state = None
+        if state is None:
+            raise ShardFailure(
+                "sharded BFS failed and no coordinated checkpoint is "
+                "adoptable — enable checkpoint_dir= to make runs recoverable",
+                shard=shard, site=site, epoch=runtime.epoch, level=lev,
+                recoveries=recoveries) from exc
+        if recoveries >= max_recoveries:
+            raise ShardFailure(
+                f"sharded BFS failed and the recovery budget is exhausted "
+                f"({recoveries}/{max_recoveries} used) — raise "
+                "max_recoveries= to keep self-healing",
+                shard=shard, site=site, epoch=runtime.epoch, level=lev,
+                recoveries=recoveries) from exc
+        extsort.STATS["recoveries"] += 1
+        runtime.recover()
+        shutil.rmtree(runtime.driver.exchange_dir(spec["name"]),
+                      ignore_errors=True)
+        extsort.STATS["replayed_levels"] += max(
+            0, lev - (len(state["level_sizes"]) - 1))
+        return state
 
 
 def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
@@ -1086,11 +1153,14 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
         runtime.bcast(_w_bfs_init, spec)
         start_rows = np.ascontiguousarray(start_rows,
                                           np.uint32).reshape(-1, width)
-        writer = runtime.driver.writer(spec)
-        writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
-        epoch = runtime.next_epoch()
-        dropped = int(writer.seal(epoch).sum())
-        sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
+        with obs.span("bfs.level", level=0, engine="sorted",
+                      nshards=runtime.nshards):
+            writer = runtime.driver.writer(spec)
+            writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
+            epoch = runtime.next_epoch()
+            dropped = int(writer.seal(epoch).sum())
+            sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
+            runtime.collect_obs()
         level_sizes = [sum(sizes)]
         if level_sizes[0] == 0:
             return [], ShardedVisited(runtime, spec, dropped)
@@ -1099,18 +1169,28 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
                                  ck_prev)
     recoveries = 0
     lev = len(level_sizes)
+    high = lev - 1            # highest level ever started (replay tagging)
     while lev <= max_levels:
+        # Coordinator-side level span: closes at the barrier, so its
+        # metric deltas include the worker totals collect_obs folds in.
+        # Levels re-run after a rollback carry replay=True.
+        attrs = {"level": lev, "engine": "sorted", "nshards": runtime.nshards}
+        if lev <= high:
+            attrs["replay"] = True
+        high = max(high, lev)
         try:
-            epoch = runtime.next_epoch()
-            dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next,
-                                         epoch, lev))
-            total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
-            if total == 0:
-                break
-            level_sizes.append(total)
-            if ck is not None and lev % checkpoint_every == 0:
-                _ckpt_sharded_sorted(ck, runtime, spec, level_sizes, dropped,
-                                     ck_prev)
+            with obs.span("bfs.level", **attrs):
+                epoch = runtime.next_epoch()
+                dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next,
+                                             epoch, lev))
+                total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
+                runtime.collect_obs()
+                if total == 0:
+                    break
+                level_sizes.append(total)
+                if ck is not None and lev % checkpoint_every == 0:
+                    _ckpt_sharded_sorted(ck, runtime, spec, level_sizes,
+                                         dropped, ck_prev)
         except (RuntimeError, OSError) as exc:
             # Worker death/timeout (WorkerLost), an in-worker exception, or
             # a coordinator-side fatal I/O error: roll back to the last
@@ -1145,53 +1225,56 @@ def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
     exactly ONE rw pass over the local array per level, zero sorts."""
     if faults.ACTIVE:     # the worker-kill-at-level-k site
         faults.fire("worker_level", shard=ctx.shard, level=lev)
-    obj: DiskBitArray = ctx.objects[spec["name"]]
-    base = ctx.shard * spec["per"]
-    n, nshards = spec["n"], ctx.nshards
-    expand_batch = spec["expand_batch"]
-    writer = ctx.writer(spec)
-    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                   epoch_in, 2, "int64"):
-        obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
+    with obs.span("bfs.level", level=lev, shard=ctx.shard, phase="pass"):
+        obj: DiskBitArray = ctx.objects[spec["name"]]
+        base = ctx.shard * spec["per"]
+        n, nshards = spec["n"], ctx.nshards
+        expand_batch = spec["expand_batch"]
+        writer = ctx.writer(spec)
+        for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]),
+                                       ctx.shard, epoch_in, 2, "int64"):
+            obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
 
-    count = 0
+        count = 0
 
-    def count_cur(chunk_start: int, vals: np.ndarray) -> None:
-        nonlocal count
-        count += int(np.count_nonzero(vals == CUR))
+        def count_cur(chunk_start: int, vals: np.ndarray) -> None:
+            nonlocal count
+            count += int(np.count_nonzero(vals == CUR))
 
-    def rotate(chunk_start: int, vals: np.ndarray) -> np.ndarray:
-        vals = np.where(vals == CUR, np.uint8(DONE), vals)
-        return np.where(vals == NEXT, np.uint8(CUR), vals)
+        def rotate(chunk_start: int, vals: np.ndarray) -> np.ndarray:
+            vals = np.where(vals == CUR, np.uint8(DONE), vals)
+            return np.where(vals == NEXT, np.uint8(CUR), vals)
 
-    def expand(chunk_start: int, vals: np.ndarray) -> None:
-        (cur_pos,) = np.nonzero(vals == CUR)
-        for lo in range(0, cur_pos.size, expand_batch):
-            idx = (base + chunk_start
-                   + cur_pos[lo:lo + expand_batch].astype(np.int64))
-            nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
-            ok = (nbrs >= 0) & (nbrs < n)
-            nbrs = nbrs[ok]
-            owner = block_owner_np(nbrs, n, nshards)
-            local = owner == ctx.shard
-            if local.any():          # snapshot-isolated: defers to next pass
-                obj.update(nbrs[local] - base,
-                           np.full(int(local.sum()), NEXT, np.uint8))
-            if not local.all():
-                rec = np.empty((nbrs.shape[0] - int(local.sum()), 2), np.int64)
-                rec[:, 0] = nbrs[~local]
-                rec[:, 1] = NEXT
-                writer.put(owner[~local], rec)
+        def expand(chunk_start: int, vals: np.ndarray) -> None:
+            (cur_pos,) = np.nonzero(vals == CUR)
+            for lo in range(0, cur_pos.size, expand_batch):
+                idx = (base + chunk_start
+                       + cur_pos[lo:lo + expand_batch].astype(np.int64))
+                nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
+                ok = (nbrs >= 0) & (nbrs < n)
+                nbrs = nbrs[ok]
+                owner = block_owner_np(nbrs, n, nshards)
+                local = owner == ctx.shard
+                if local.any():      # snapshot-isolated: defers to next pass
+                    obj.update(nbrs[local] - base,
+                               np.full(int(local.sum()), NEXT, np.uint8))
+                if not local.all():
+                    rec = np.empty((nbrs.shape[0] - int(local.sum()), 2),
+                                   np.int64)
+                    rec[:, 0] = nbrs[~local]
+                    rec[:, 1] = NEXT
+                    writer.put(owner[~local], rec)
 
-    if seed:
-        # Fresh zeroed array: CUR lives only in chunks with queued seed ops.
-        obj.run_pass(PassPlan("bfs-seed", dirty_only=True)
-                     .reads(count_cur).reads(expand))
-    else:
-        obj.run_pass(PassPlan("bfs-level").writes(rotate).reads(count_cur)
-                     .reads(expand),
-                     combine=_mark_first, apply=_apply_unseen)
-    return count, int(writer.seal(epoch_out).sum())
+        if seed:
+            # Fresh zeroed array: CUR lives only in chunks with queued
+            # seed ops.
+            obj.run_pass(PassPlan("bfs-seed", dirty_only=True)
+                         .reads(count_cur).reads(expand))
+        else:
+            obj.run_pass(PassPlan("bfs-level").writes(rotate)
+                         .reads(count_cur).reads(expand),
+                         combine=_mark_first, apply=_apply_unseen)
+        return count, int(writer.seal(epoch_out).sum())
 
 
 def _w_ibfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
@@ -1283,33 +1366,42 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
         seed = True
         epoch_in = epoch
     recoveries = 0
+    high = len(level_sizes) - 1   # highest level ever computed (replay tag)
     while len(level_sizes) - 1 < max_levels:
+        lev_now = len(level_sizes)     # the level this pass computes
+        attrs = {"level": lev_now, "engine": "implicit",
+                 "nshards": runtime.nshards}
+        if lev_now <= high:
+            attrs["replay"] = True
+        high = max(high, lev_now)
         try:
-            epoch_out = runtime.next_epoch()
-            lev_now = len(level_sizes)     # the level this pass computes
-            res = runtime.map(_w_ibfs_pass,
-                              [(spec, gen_neighbors, epoch_in, epoch_out,
-                                seed, lev_now)] * runtime.nshards)
-            total = sum(c for c, _d in res)
-            dropped += sum(d for _c, d in res)
-            if not seed and total == 0:
-                break
-            level_sizes.append(total)
-            seed = False
-            epoch_in = epoch_out
-            lev = len(level_sizes) - 1
-            if ck is not None and lev % checkpoint_every == 0:
-                version = ck.next_version()
-                stage = ck.begin(version)
-                runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
-                ck.publish(version, {
-                    "engine": "implicit", "sharded": True,
-                    "nshards": runtime.nshards,
-                    "width": 1, "n_states": int(n_states),
-                    "chunk_elems": int(chunk_elems),
-                    "level_sizes": list(level_sizes), "dropped": int(dropped),
-                    "golden": ckpt.golden_owner_values(runtime.nshards, 1,
-                                                       int(n_states))})
+            with obs.span("bfs.level", **attrs):
+                epoch_out = runtime.next_epoch()
+                res = runtime.map(_w_ibfs_pass,
+                                  [(spec, gen_neighbors, epoch_in, epoch_out,
+                                    seed, lev_now)] * runtime.nshards)
+                runtime.collect_obs()
+                total = sum(c for c, _d in res)
+                dropped += sum(d for _c, d in res)
+                if not seed and total == 0:
+                    break
+                level_sizes.append(total)
+                seed = False
+                epoch_in = epoch_out
+                lev = len(level_sizes) - 1
+                if ck is not None and lev % checkpoint_every == 0:
+                    version = ck.next_version()
+                    stage = ck.begin(version)
+                    runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
+                    ck.publish(version, {
+                        "engine": "implicit", "sharded": True,
+                        "nshards": runtime.nshards,
+                        "width": 1, "n_states": int(n_states),
+                        "chunk_elems": int(chunk_elems),
+                        "level_sizes": list(level_sizes),
+                        "dropped": int(dropped),
+                        "golden": ckpt.golden_owner_values(runtime.nshards, 1,
+                                                           int(n_states))})
         except (RuntimeError, OSError) as exc:
             state = _roll_back(runtime, ck, spec, exc, len(level_sizes),
                                recoveries, max_recoveries)

@@ -29,6 +29,7 @@ from typing import Iterator, List, Optional
 
 import numpy as np
 
+from .. import obs
 from .store import ChunkStore, row_keys
 
 __all__ = [
@@ -62,14 +63,15 @@ __all__ = [
 # ``stray_bytes_swept`` book what the fresh=False startup sweep cleaned —
 # none of which touch the sort/merge/pass ledgers, so the per-level pass
 # budgets the CI gate pins hold for the non-replayed work.
-STATS = {"sort_passes": 0, "rows_sorted": 0, "merge_passes": 0,
-         "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0,
-         "rw_passes": 0, "read_passes": 0, "piggybacked_stages": 0,
-         "ckpt_bytes_read": 0, "ckpt_bytes_written": 0,
-         "ckpt_snapshots": 0, "ckpt_restores": 0,
-         "io_retries": 0, "io_giveups": 0,
-         "recoveries": 0, "replayed_levels": 0,
-         "stray_files_swept": 0, "stray_bytes_swept": 0}
+STATS = obs.counters("extsort", {
+    "sort_passes": 0, "rows_sorted": 0, "merge_passes": 0,
+    "sorts_skipped": 0, "chunks_pruned": 0, "chunks_probed": 0,
+    "rw_passes": 0, "read_passes": 0, "piggybacked_stages": 0,
+    "ckpt_bytes_read": 0, "ckpt_bytes_written": 0,
+    "ckpt_snapshots": 0, "ckpt_restores": 0,
+    "io_retries": 0, "io_giveups": 0,
+    "recoveries": 0, "replayed_levels": 0,
+    "stray_files_swept": 0, "stray_bytes_swept": 0})
 
 
 def reset_stats() -> None:
@@ -176,16 +178,18 @@ class RunBuilder:
             self._emit(self.run_rows)
 
     def _emit(self, nrows: int) -> None:
-        buf = (np.concatenate(self._buf, axis=0)
-               if len(self._buf) > 1 else self._buf[0])
-        take, rest = buf[:nrows], buf[nrows:]
-        run = ChunkStore(f"{self.tmp_dir}/run{len(self.runs):04d}", self.width,
-                         self.dtype, self.chunk_rows, fresh=True)
-        run.append(sort_rows(np.asarray(take)))
-        run.flush(mark_sorted=True)
-        self.runs.append(run)
-        self._buf = [rest] if rest.shape[0] else []
-        self._nbuf = rest.shape[0]
+        with obs.span("sort.run_build", rows=nrows, run=len(self.runs)):
+            buf = (np.concatenate(self._buf, axis=0)
+                   if len(self._buf) > 1 else self._buf[0])
+            take, rest = buf[:nrows], buf[nrows:]
+            run = ChunkStore(f"{self.tmp_dir}/run{len(self.runs):04d}",
+                             self.width, self.dtype, self.chunk_rows,
+                             fresh=True)
+            run.append(sort_rows(np.asarray(take)))
+            run.flush(mark_sorted=True)
+            self.runs.append(run)
+            self._buf = [rest] if rest.shape[0] else []
+            self._nbuf = rest.shape[0]
 
     def finish(self) -> List[ChunkStore]:
         if self._nbuf:
@@ -225,41 +229,47 @@ def iter_merged(runs: List[ChunkStore],
     With dedupe=True, equal rows collapse to one (a carry of the last
     emitted key crosses batch boundaries).
     """
-    STATS["merge_passes"] += 1
-    cursors = [_RunCursor(r) for r in runs]
-    heap = [(c.head, i) for i, c in enumerate(cursors) if c.alive]
-    heapq.heapify(heap)
-    last_key = None
-    while heap:
-        # Candidates: every cursor whose head could fall in this batch.
-        _, i0 = heapq.heappop(heap)
-        cand = [i0]
-        while heap and heap[0][0] <= cursors[i0].keys[-1]:
-            cand.append(heapq.heappop(heap)[1])
-        # The batch bound is the smallest candidate block-max: each
-        # candidate's ≤-bound prefix then lies entirely inside its current
-        # block, so nothing below the bound can surface in a later batch,
-        # and the min-block-max cursor drains a whole block (progress).
-        bound = min(cursors[i].keys[-1] for i in cand)
-        parts = [cursors[i].take_until(bound)
-                 for i in cand if cursors[i].head <= bound]
-        for i in cand:
-            if cursors[i].alive:
-                heapq.heappush(heap, (cursors[i].head, i))
-        block = (np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0])
-        if len(parts) > 1:
-            block = sort_rows(block)
-        if dedupe:
-            keys = row_keys(block)
-            keep = np.ones(block.shape[0], bool)
-            keep[1:] = keys[1:] != keys[:-1]
-            if last_key is not None and block.shape[0]:
-                keep[0] &= keys[0] != last_key
+    # The span covers the whole streaming merge; a consumer that abandons
+    # the generator closes it via GeneratorExit, which still unwinds the
+    # ``with`` (obs tolerates the resulting out-of-LIFO span ends).
+    with obs.span("merge", runs=len(runs), dedupe=dedupe):
+        STATS["merge_passes"] += 1
+        cursors = [_RunCursor(r) for r in runs]
+        heap = [(c.head, i) for i, c in enumerate(cursors) if c.alive]
+        heapq.heapify(heap)
+        last_key = None
+        while heap:
+            # Candidates: every cursor whose head could fall in this batch.
+            _, i0 = heapq.heappop(heap)
+            cand = [i0]
+            while heap and heap[0][0] <= cursors[i0].keys[-1]:
+                cand.append(heapq.heappop(heap)[1])
+            # The batch bound is the smallest candidate block-max: each
+            # candidate's ≤-bound prefix then lies entirely inside its
+            # current block, so nothing below the bound can surface in a
+            # later batch, and the min-block-max cursor drains a whole
+            # block (progress).
+            bound = min(cursors[i].keys[-1] for i in cand)
+            parts = [cursors[i].take_until(bound)
+                     for i in cand if cursors[i].head <= bound]
+            for i in cand:
+                if cursors[i].alive:
+                    heapq.heappush(heap, (cursors[i].head, i))
+            block = (np.concatenate(parts, axis=0)
+                     if len(parts) > 1 else parts[0])
+            if len(parts) > 1:
+                block = sort_rows(block)
+            if dedupe:
+                keys = row_keys(block)
+                keep = np.ones(block.shape[0], bool)
+                keep[1:] = keys[1:] != keys[:-1]
+                if last_key is not None and block.shape[0]:
+                    keep[0] &= keys[0] != last_key
+                if block.shape[0]:
+                    last_key = keys[-1]
+                block = block[keep]
             if block.shape[0]:
-                last_key = keys[-1]
-            block = block[keep]
-        if block.shape[0]:
-            yield block
+                yield block
 
 
 def merge_runs(runs: List[ChunkStore], out: ChunkStore,
@@ -375,12 +385,13 @@ def merge_difference(a_sorted: ChunkStore, b_sorted: ChunkStore,
     loading only b-chunks whose key range intersects a's. Output inherits
     a's sorted order.
     """
-    STATS["merge_passes"] += 1
-    probe = MembershipProbe(b_sorted)
-    for a_block in a_sorted.iter_chunks():
-        a_block = np.asarray(a_block)
-        if not a_block.shape[0]:
-            continue
-        member = probe.contains(row_keys(a_block))
-        out.append(a_block[~member])
-    out.flush(mark_sorted=a_sorted.sorted)
+    with obs.span("merge", kind="difference"):
+        STATS["merge_passes"] += 1
+        probe = MembershipProbe(b_sorted)
+        for a_block in a_sorted.iter_chunks():
+            a_block = np.asarray(a_block)
+            if not a_block.shape[0]:
+                continue
+            member = probe.contains(row_keys(a_block))
+            out.append(a_block[~member])
+        out.flush(mark_sorted=a_sorted.sorted)

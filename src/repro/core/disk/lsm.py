@@ -32,6 +32,7 @@ from typing import Iterator, List
 
 import numpy as np
 
+from .. import obs
 from . import extsort
 from .store import ChunkStore
 
@@ -96,11 +97,16 @@ class SortedRunSet:
                 acc += by_size[k].size
                 k += 1
             victims = by_size[:k]
-        merged = ChunkStore(
-            os.path.join(self.workdir, f"{self.name}.compact{self._seq}"),
-            self.width, chunk_rows=self.chunk_rows, fresh=True)
-        self._seq += 1
-        extsort.merge_runs(victims, merged, dedupe=True)
+        # Parent span over the k-way merge pass: the nested "merge" span
+        # (iter_merged) carries the pass itself; this one tags it as
+        # compaction work with the victim count and policy.
+        with obs.span("merge", kind="compact", policy=self.policy,
+                      victims=len(victims)):
+            merged = ChunkStore(
+                os.path.join(self.workdir, f"{self.name}.compact{self._seq}"),
+                self.width, chunk_rows=self.chunk_rows, fresh=True)
+            self._seq += 1
+            extsort.merge_runs(victims, merged, dedupe=True)
         victim_ids = {id(r) for r in victims}
         survivors = [r for r in self.runs if id(r) not in victim_ids]
         for r in victims:

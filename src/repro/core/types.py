@@ -15,6 +15,8 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import obs
+
 UINT32_MAX = jnp.uint32(0xFFFFFFFF)
 
 # Trace-time sort accounting for the sort-once engine. Because the heavy
@@ -24,7 +26,7 @@ UINT32_MAX = jnp.uint32(0xFFFFFFFF)
 # which is exactly the pass-count the paper's cost model cares about.
 # Tests call the un-jitted functions and assert deltas; the Tier J BFS
 # level budget is 1 lexsort + 1 scatter (constructs._bfs_level).
-SORT_STATS = {"lexsorts": 0, "scatters": 0}
+SORT_STATS = obs.counters("tierj", {"lexsorts": 0, "scatters": 0})
 
 
 def reset_sort_stats() -> None:
