@@ -38,6 +38,7 @@ from repro.core import constructs as C
 from repro.core import obs
 from repro.core import ranking as R
 from repro.core import rlist as RL
+from repro.core.disk import ClusterConfig
 from repro.core.disk import breadth_first_search as disk_bfs
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
 
@@ -115,13 +116,16 @@ def _bench_disk(tag: str, gen_np, start: np.uint32, want: List[int],
 
 def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
                         n_states: int, chunk_rows: int, shards: int,
-                        repeats: int = 2):
+                        repeats: int = 2, exchange=None):
     """Sorted-list engine through the sharded runtime (inline workers —
     the full bucket-exchange protocol without process-spawn noise, so the
     counters stay deterministic for the regression gate).  Derived
     reports sorts/expansion PER SHARD: the exchange must not add sort
     work (≤ 1.00, exactly the single-process budget on every shard that
-    had a frontier)."""
+    had a frontier).  ``exchange="pipelined"`` benches the overlapped
+    produce/apply discipline against the default two-phase barrier —
+    same per-shard sort budget by contract, the row exists to price the
+    overlap."""
     levels = len(want) - 1
     best_wall, best_level = 1e18, 1e18
     es: dict = {}
@@ -132,7 +136,9 @@ def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
                 t0 = time.perf_counter()
                 sizes, vis = disk_bfs(wd, np.array([[start]], np.uint32),
                                       timed, width=1, chunk_rows=chunk_rows,
-                                      nshards=shards, shard_mode="inline")
+                                      cluster=ClusterConfig(
+                                          nshards=shards, mode="inline",
+                                          exchange=exchange))
                 wall = time.perf_counter() - t0
                 assert sizes == want, (tag, sizes, want)
                 vis.destroy()
@@ -142,7 +148,8 @@ def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
     # One seed sort pass (the single seed row lands on one shard); every
     # other sort pass is a shard's per-level frontier sort.
     spe = (es["sort_passes"] - 1) / ((levels + 1) * shards)
-    name = f"bfs_{tag}_tierD_sharded{shards}"
+    name = (f"bfs_{tag}_tierD_sharded{shards}"
+            + ("_pipelined" if exchange == "pipelined" else ""))
     return (name, best_wall * 1e6,
             f"{n_states/best_level:.3g} level states/s "
             f"sorts/expansion={spe:.2f} rows_sorted="
@@ -151,10 +158,11 @@ def _bench_disk_sharded(tag: str, gen_np, start: np.uint32, want: List[int],
 
 def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
                                  chunk_elems: int, shards: int,
-                                 repeats: int = 2):
+                                 repeats: int = 2, exchange=None):
     """Implicit engine through the sharded runtime (inline workers).
     passes/level is PER SHARD — the exchange must keep it at the fused
-    budget of 1.00 + the seed pass amortized."""
+    budget of 1.00 + the seed pass amortized, in both the barrier and
+    the pipelined (``exchange="pipelined"``) disciplines."""
     levels = len(want) - 1
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     best_wall, best_level = 1e18, 1e18
@@ -166,7 +174,8 @@ def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
                 t0 = time.perf_counter()
                 sizes, bits = disk_implicit_bfs(
                     wd, n_total, [start_rank], timed, chunk_elems=chunk_elems,
-                    nshards=shards, shard_mode="inline")
+                    cluster=ClusterConfig(nshards=shards, mode="inline",
+                                          exchange=exchange))
                 wall = time.perf_counter() - t0
                 assert sizes == want, (sizes, want)
                 bits.destroy()
@@ -178,7 +187,8 @@ def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
                    - bs["log_bytes_written"]) / (levels + 1)
         passes_lvl = (bs["sync_passes"] + bs["scan_passes"]
                       ) / ((levels + 1) * shards)
-    name = f"bfs_pancake{n}_tierD_implicit_sharded{shards}"
+    name = (f"bfs_pancake{n}_tierD_implicit_sharded{shards}"
+            + ("_pipelined" if exchange == "pipelined" else ""))
     return (name, best_wall * 1e6,
             f"{n_total/best_level:.3g} level states/s "
             f"array_bytes/level={arr_lvl:.3g} "
@@ -297,13 +307,17 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
 
     # ----------------------------------------- sharded runtime (tier D)
     if shards >= 2:
-        rows.append(_bench_disk_sharded(f"pancake{n}", _gen_next_np(n),
-                                        start, want, total, chunk_rows,
-                                        shards, repeats=repeats))
-        rows.append(_bench_disk_implicit_sharded(n, want, total,
-                                                 chunk_elems=chunk_rows * 4,
-                                                 shards=shards,
-                                                 repeats=repeats))
+        # Barrier (default) and pipelined exchange rows side by side: the
+        # per-shard sort/pass budgets must be identical (gated counters);
+        # the throughput delta prices the produce/apply overlap.
+        for exchange in (None, "pipelined"):
+            rows.append(_bench_disk_sharded(f"pancake{n}", _gen_next_np(n),
+                                            start, want, total, chunk_rows,
+                                            shards, repeats=repeats,
+                                            exchange=exchange))
+            rows.append(_bench_disk_implicit_sharded(
+                n, want, total, chunk_elems=chunk_rows * 4, shards=shards,
+                repeats=repeats, exchange=exchange))
 
     # Tier J rows are compile-dominated at small n (each repeat re-traces,
     # so every sample measures the same compile+run quantity); best-of-N

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import constructs as C
+from repro.core.disk import (CheckpointConfig, ClusterConfig,
+                             RecoveryConfig)
 from repro.core.disk import breadth_first_search as disk_bfs
 from repro.core.disk import extsort, faults, trace
 
@@ -85,6 +87,16 @@ def main():
                          "workers (multiprocess ShardRuntime)")
     ap.add_argument("--shard-mode", choices=("spawn", "inline"),
                     default="spawn")
+    ap.add_argument("--transport", choices=("fs", "tcp", "loopback"),
+                    default="fs",
+                    help="bucket wire between shards (docs/transports.md): "
+                         "shared filesystem, TCP sockets (no shared "
+                         "scratch), or the in-process loopback store "
+                         "(inline mode only)")
+    ap.add_argument("--exchange", choices=("barrier", "pipelined"),
+                    default=None,
+                    help="exchange discipline: classic two-phase barrier "
+                         "(default) or overlapped produce/apply")
     ap.add_argument("--check", action="store_true",
                     help="assert the level counts match a fresh "
                          "single-shard uninterrupted run (sharded and/or "
@@ -161,11 +173,15 @@ def main():
                 ckdir = os.path.join(wd, "chaos_ck")
             sizes, all_lst = disk_bfs(
                 wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
-                width=1, chunk_rows=args.chunk_rows, nshards=args.shards,
-                shard_mode=args.shard_mode, max_levels=max_levels,
-                checkpoint_dir=ckdir,
-                checkpoint_every=args.checkpoint_every, resume=args.resume,
-                max_recoveries=8 if chaos else 0)
+                width=1, chunk_rows=args.chunk_rows, max_levels=max_levels,
+                cluster=ClusterConfig(nshards=args.shards,
+                                      mode=args.shard_mode,
+                                      transport=args.transport,
+                                      exchange=args.exchange),
+                checkpoint=CheckpointConfig(
+                    dir=ckdir, every=args.checkpoint_every,
+                    resume=args.resume),
+                recovery=RecoveryConfig(max_recoveries=8 if chaos else 0))
             all_lst.destroy()
     dt = time.perf_counter() - t0
 

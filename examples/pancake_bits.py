@@ -29,6 +29,8 @@ import numpy as np
 from repro.core import constructs as C
 from repro.core import obs
 from repro.core import ranking as R
+from repro.core.disk import (CheckpointConfig, ClusterConfig,
+                             RecoveryConfig)
 from repro.core.disk import breadth_first_search as disk_bfs
 from repro.core.disk import extsort, faults, trace
 from repro.core.disk import implicit_bfs as disk_implicit_bfs
@@ -92,7 +94,7 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
 def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         shard_mode: str = "spawn", checkpoint_dir=None,
         checkpoint_every: int = 1, resume: bool = False, stop_after=None,
-        chaos=None, trace_path=None):
+        chaos=None, trace_path=None, transport: str = "fs", exchange=None):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
@@ -126,11 +128,15 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
                 checkpoint_dir = os.path.join(wd, "chaos_ck")
             sizes, bits = disk_implicit_bfs(
                 wd, total, [start_rank], neighbors_np(n),
-                chunk_elems=chunk_elems, nshards=shards,
-                shard_mode=shard_mode, max_levels=max_levels,
-                checkpoint_dir=checkpoint_dir,
-                checkpoint_every=checkpoint_every, resume=resume,
-                max_recoveries=8 if chaos is not None else 0)
+                chunk_elems=chunk_elems, max_levels=max_levels,
+                cluster=ClusterConfig(nshards=shards, mode=shard_mode,
+                                      transport=transport,
+                                      exchange=exchange),
+                checkpoint=CheckpointConfig(dir=checkpoint_dir,
+                                            every=checkpoint_every,
+                                            resume=resume),
+                recovery=RecoveryConfig(
+                    max_recoveries=8 if chaos is not None else 0))
             if stop_after is None:
                 hist = bits.count_values()
                 assert hist[0] == 0, "unreached states — graph not connected?"
@@ -201,6 +207,16 @@ def main():
                          "(disk tier only)")
     ap.add_argument("--shard-mode", choices=("spawn", "inline"),
                     default="spawn")
+    ap.add_argument("--transport", choices=("fs", "tcp", "loopback"),
+                    default="fs",
+                    help="bucket wire between shards (docs/transports.md): "
+                         "shared filesystem, TCP sockets (no shared "
+                         "scratch), or the in-process loopback store "
+                         "(inline mode only)")
+    ap.add_argument("--exchange", choices=("barrier", "pipelined"),
+                    default=None,
+                    help="exchange discipline: classic two-phase barrier "
+                         "(default) or overlapped produce/apply")
     ap.add_argument("--check", action="store_true",
                     help="cross-validate: vs the sorted-list engine "
                          "(n<=8), or vs an uninterrupted single-shard "
@@ -243,7 +259,8 @@ def main():
         "--chaos is a disk-tier (Tier D) feature"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
         args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
-        args.resume, args.stop_after, args.chaos, args.trace)
+        args.resume, args.stop_after, args.chaos, args.trace,
+        args.transport, args.exchange)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,11 @@ See DESIGN.md. Submodules:
   paged       Roomy paged-KV store for long-context decode
   disk        Tier D — the paper-faithful out-of-core implementation
 
+``repro.core.disk`` is itself a documented facade: structures, search
+engines, the ClusterConfig/CheckpointConfig/RecoveryConfig API and the
+pluggable bucket Transport all surface there (see its ``__all__``);
+worker-command internals (``_w_*``) and owner-map helpers do not.
+
 Submodules load lazily (PEP 562): the Tier J modules pull in jax, and the
 multiprocess shard workers of ``disk/cluster.py`` import this package only
 to reach the pure-numpy disk tier — an eager jax import would tax every

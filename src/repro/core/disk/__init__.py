@@ -2,6 +2,32 @@
 
 Real chunked disk files, streaming passes, external merge sort; see
 DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
+
+This module is the public facade of the disk tier.  ``__all__`` below is
+the supported surface — structures, search engines, the cluster/search
+config API, the sharded runtime, and the transport extension point:
+
+  structures   ChunkStore, DiskArray, DiskBitArray, DiskHashTable,
+               DiskList, SortedRunSet, PassPlan, MembershipProbe
+  search       breadth_first_search, implicit_bfs, level_step
+               (single-process or sharded via ``cluster=``)
+  config       ClusterConfig, CheckpointConfig, RecoveryConfig
+               (docs/transports.md — collapses the legacy
+               nshards/shard_mode/checkpoint_dir/... kwargs)
+  cluster      ShardRuntime, sharded_bfs, sharded_implicit_bfs, the
+               Sharded* structures, ShardFailure, WorkerLost
+  transport    Transport, make_transport, TRANSPORT_KINDS
+               (pluggable bucket wire: "fs", "tcp", "loopback")
+  checkpoint   SearchCheckpoint, CheckpointError
+  submodules   faults (fault injection), trace (run traces), extsort,
+               buckets, ...  — importable, but their internals
+               (``_w_*`` worker commands, owner-map helpers) are
+               implementation detail, not API.
+
+Owner-map internals (``hash_rows_np``/``hash_owner_np``/
+``block_owner_np``) moved off this facade — they are a cross-tier
+*contract* pinned by golden tests, not a user API; reach them via
+``repro.core.disk.buckets`` if you are implementing a structure.
 """
 # trace is intentionally NOT imported here: pre-importing it makes
 # ``python -m repro.core.disk.trace`` warn about the double import, and
@@ -9,11 +35,11 @@ DESIGN.md §2. The JAX tier (repro.core) mirrors this API on-device.
 from . import faults
 from .bfs import breadth_first_search, implicit_bfs, level_step
 from .bitarray import DiskBitArray
-from .buckets import block_owner_np, hash_owner_np, hash_rows_np
 from .checkpoint import CheckpointError, SearchCheckpoint
 from .cluster import (ShardedDiskBitArray, ShardedDiskHashTable,
                       ShardedDiskList, ShardFailure, ShardRuntime,
-                      WorkerLost)
+                      WorkerLost, sharded_bfs, sharded_implicit_bfs)
+from .config import CheckpointConfig, ClusterConfig, RecoveryConfig
 from .darray import DiskArray
 from .dhash import DiskHashTable
 from .dlist import DiskList
@@ -22,14 +48,16 @@ from .extsort import (MembershipProbe, external_sort, merge_difference,
 from .lsm import SortedRunSet
 from .passes import PassPlan
 from .store import ChunkStore
+from .transport import TRANSPORT_KINDS, Transport, make_transport
 
 __all__ = [
-    "CheckpointError", "ChunkStore", "DiskArray", "DiskBitArray",
-    "DiskHashTable", "DiskList", "MembershipProbe", "PassPlan",
-    "SearchCheckpoint", "ShardFailure", "ShardRuntime",
-    "ShardedDiskBitArray", "ShardedDiskHashTable", "ShardedDiskList",
-    "SortedRunSet", "WorkerLost", "block_owner_np", "breadth_first_search",
-    "external_sort", "faults", "hash_owner_np", "hash_rows_np",
-    "implicit_bfs", "level_step", "merge_difference", "row_keys",
-    "sort_rows", "stream_dedupe",
+    "CheckpointConfig", "CheckpointError", "ChunkStore", "ClusterConfig",
+    "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
+    "MembershipProbe", "PassPlan", "RecoveryConfig", "SearchCheckpoint",
+    "ShardFailure", "ShardRuntime", "ShardedDiskBitArray",
+    "ShardedDiskHashTable", "ShardedDiskList", "SortedRunSet",
+    "TRANSPORT_KINDS", "Transport", "WorkerLost", "breadth_first_search",
+    "external_sort", "faults", "implicit_bfs", "level_step",
+    "make_transport", "merge_difference", "row_keys", "sharded_bfs",
+    "sharded_implicit_bfs", "sort_rows", "stream_dedupe",
 ]

@@ -41,6 +41,7 @@ from . import checkpoint as ckpt
 from . import extsort
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .checkpoint import SearchCheckpoint
+from .config import _UNSET, resolve_configs
 from .dlist import DiskList
 from .lsm import SortedRunSet
 from .passes import PassPlan
@@ -103,13 +104,11 @@ def _merge_subtract(frontier_runs: List[ChunkStore],
     out.flush(mark_sorted=True)
 
 
-def _sharded_runtime(workdir: str, nshards: int, runtime, shard_mode: str):
-    """Resolve the (runtime, owns_it) pair for a sharded engine call."""
-    from .cluster import ShardRuntime
-    if runtime is not None:
-        return runtime, False
-    return ShardRuntime(os.path.join(workdir, "cluster"), nshards,
-                        mode=shard_mode), True
+def _sharded_runtime(workdir: str, cluster):
+    """Resolve the (runtime, owns_it) pair for a sharded engine call from
+    a validated :class:`~.config.ClusterConfig` (conflict checking lives
+    in config.resolve_configs, the one shared checker)."""
+    return cluster.build_runtime(workdir)
 
 
 def _ckpt_sorted(ck: SearchCheckpoint, all_runs: SortedRunSet,
@@ -161,16 +160,34 @@ def breadth_first_search(
     max_runs: int = 8,
     compaction: str = "full",
     size_ratio: int = 2,
-    nshards: int = 1,
-    runtime=None,
-    shard_mode: str = "spawn",
-    bucket_capacity=None,
-    checkpoint_dir: str | None = None,
-    checkpoint_every: int = 1,
-    resume: bool = False,
-    max_recoveries: int = 0,
+    cluster=None,
+    checkpoint=None,
+    recovery=None,
+    nshards=_UNSET,
+    runtime=_UNSET,
+    shard_mode=_UNSET,
+    bucket_capacity=_UNSET,
+    checkpoint_dir=_UNSET,
+    checkpoint_every=_UNSET,
+    resume=_UNSET,
+    max_recoveries=_UNSET,
 ):
     """gen_next(chunk (m, width)) -> neighbor rows (m*fanout, width).
+
+    Cluster shape, checkpointing, and recovery are configured with the
+    consolidated config objects (disk/config.py)::
+
+        disk.breadth_first_search(wd, start, gen, width,
+            cluster=ClusterConfig(nshards=4, transport="tcp",
+                                  exchange="pipelined"),
+            checkpoint=CheckpointConfig(dir=ck, every=2),
+            recovery=RecoveryConfig(max_recoveries=3))
+
+    The pre-config keyword spellings (``nshards=``, ``shard_mode=``,
+    ``bucket_capacity=``, ``runtime=``, ``checkpoint_dir=``,
+    ``checkpoint_every=``, ``resume=``, ``max_recoveries=``) keep working
+    for one release via a deprecation shim that maps them onto the same
+    configs and warns once.
 
     Returns (level_sizes, all). With fused=True (default), ``all`` is the
     visited SortedRunSet; with fused=False (the reference composition used
@@ -208,23 +225,23 @@ def breadth_first_search(
     budget; an unrecoverable failure raises a structured
     :class:`~repro.core.disk.cluster.ShardFailure` (docs/fault-tolerance.md).
     """
-    if checkpoint_dir is not None and not fused:
-        raise ValueError("checkpointing requires the fused engine "
-                         "(fused=True)")
-    if runtime is not None or nshards > 1:
-        if not fused:
-            raise ValueError("the sharded engine is fused-only: "
-                             "fused=False cannot combine with nshards>1 "
-                             "or runtime=")
+    cl, cp, rec = resolve_configs(
+        "breadth_first_search", cluster=cluster, checkpoint=checkpoint,
+        recovery=recovery, fused=fused, nshards=nshards, runtime=runtime,
+        shard_mode=shard_mode, bucket_capacity=bucket_capacity,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        resume=resume, max_recoveries=max_recoveries)
+    checkpoint_dir, checkpoint_every, resume = cp.dir, cp.every, cp.resume
+    if cl.sharded:
         from .cluster import sharded_bfs
-        rt, own = _sharded_runtime(workdir, nshards, runtime, shard_mode)
+        rt, own = _sharded_runtime(workdir, cl)
         sizes, handle = sharded_bfs(
             rt, start_rows, gen_next, width, chunk_rows=chunk_rows,
             max_levels=max_levels, run_rows=run_rows, max_runs=max_runs,
             compaction=compaction, size_ratio=size_ratio,
-            bucket_capacity=bucket_capacity, checkpoint_dir=checkpoint_dir,
+            bucket_capacity=cl.bucket_capacity, checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, resume=resume,
-            max_recoveries=max_recoveries)
+            max_recoveries=rec.max_recoveries)
         handle._own_runtime = own
         return sizes, handle
     if not fused:
@@ -316,16 +333,25 @@ def implicit_bfs(
     expand_batch: int = 1 << 16,
     log_buf_rows: int = 1 << 20,
     fused: bool = True,
-    nshards: int = 1,
-    runtime=None,
-    shard_mode: str = "spawn",
-    bucket_capacity=None,
-    checkpoint_dir: str | None = None,
-    checkpoint_every: int = 1,
-    resume: bool = False,
-    max_recoveries: int = 0,
+    cluster=None,
+    checkpoint=None,
+    recovery=None,
+    nshards=_UNSET,
+    runtime=_UNSET,
+    shard_mode=_UNSET,
+    bucket_capacity=_UNSET,
+    checkpoint_dir=_UNSET,
+    checkpoint_every=_UNSET,
+    resume=_UNSET,
+    max_recoveries=_UNSET,
 ):
     """The paper's *second* BFS engine: implicit search over a 2-bit array.
+
+    Cluster shape, checkpointing, and recovery ride the same consolidated
+    config objects as :func:`breadth_first_search` (``cluster=``,
+    ``checkpoint=``, ``recovery=`` — disk/config.py); the pre-config
+    keyword spellings keep working for one release via the warn-once
+    deprecation shim.
 
     Instead of sorted frontier lists keyed by state rows, every state is an
     index into a :class:`DiskBitArray` of ``n_states`` 2-bit elements
@@ -382,22 +408,22 @@ def implicit_bfs(
     from the coordinated checkpoints, exactly as in
     :func:`breadth_first_search`.
     """
-    if checkpoint_dir is not None and not fused:
-        raise ValueError("checkpointing requires the fused engine "
-                         "(fused=True)")
-    if runtime is not None or nshards > 1:
-        if not fused:
-            raise ValueError("the sharded engine is fused-only: "
-                             "fused=False cannot combine with nshards>1 "
-                             "or runtime=")
+    cl, cp, rec = resolve_configs(
+        "implicit_bfs", cluster=cluster, checkpoint=checkpoint,
+        recovery=recovery, fused=fused, nshards=nshards, runtime=runtime,
+        shard_mode=shard_mode, bucket_capacity=bucket_capacity,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        resume=resume, max_recoveries=max_recoveries)
+    checkpoint_dir, checkpoint_every, resume = cp.dir, cp.every, cp.resume
+    if cl.sharded:
         from .cluster import sharded_implicit_bfs
-        rt, own = _sharded_runtime(workdir, nshards, runtime, shard_mode)
+        rt, own = _sharded_runtime(workdir, cl)
         sizes, handle = sharded_implicit_bfs(
             rt, n_states, start_idx, gen_neighbors, chunk_elems=chunk_elems,
             max_levels=max_levels, expand_batch=expand_batch,
-            log_buf_rows=log_buf_rows, bucket_capacity=bucket_capacity,
+            log_buf_rows=log_buf_rows, bucket_capacity=cl.bucket_capacity,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            resume=resume, max_recoveries=max_recoveries)
+            resume=resume, max_recoveries=rec.max_recoveries)
         handle._own_runtime = own
         return sizes, handle
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None

@@ -48,8 +48,20 @@ from . import faults
 
 __all__ = [
     "hash_rows_np", "hash_owner_np", "block_owner_np", "block_size",
-    "BucketWriter", "iter_incoming", "incoming_files", "cleanup_strays",
+    "BucketSender", "BucketWriter", "iter_incoming", "incoming_files",
+    "cleanup_strays",
 ]
+
+
+# The per-backend bytes-on-wire ledger (docs/observability.md).  One flat
+# namespace, keys prefixed by backend kind: a sharded run reports exactly
+# which wire its buckets rode and how many bytes crossed it.  Registered
+# eagerly so scopes/snapshots always see every key.
+TRANSPORT_STATS = obs.counters("transport", {
+    f"{kind}_{which}": 0
+    for kind in ("fs", "tcp", "loopback")
+    for which in ("bytes_out", "bytes_in", "buckets_out", "buckets_in")
+})
 
 
 # ------------------------------------------------------------- owner maps
@@ -87,27 +99,48 @@ def block_owner_np(idx: np.ndarray, n: int, nshards: int) -> np.ndarray:
 #
 # Final (sealed) bucket: e{epoch:06d}_s{src:03d}_d{dst:03d}.bin
 # In-flight bucket:      the same + ".tmp"  (ignorable garbage if orphaned)
+# Seal marker:           e{epoch:06d}_s{src:03d}_d{dst:03d}.done
+#                        (pipelined exchange only — written AFTER the data
+#                        rename, so a marker guarantees the bucket, if any,
+#                        is already published; absence of a marker in
+#                        barrier mode keeps the on-disk layout byte
+#                        identical to the pre-transport protocol)
 
 def _bucket_name(epoch: int, src: int, dst: int) -> str:
     return f"e{epoch:06d}_s{src:03d}_d{dst:03d}.bin"
 
 
-class BucketWriter:
-    """One source's outgoing per-destination buckets for the current epoch.
+def _done_name(epoch: int, src: int, dst: int) -> str:
+    return f"e{epoch:06d}_s{src:03d}_d{dst:03d}.done"
 
-    ``put(dest, rows)`` buffers rows toward their destination shard,
-    spilling to the ``.tmp`` file past ``buf_rows`` buffered rows so an
-    epoch's traffic never outgrows RAM.  ``seal(epoch)`` flushes, renames
-    every ``.tmp`` to its final epoch-stamped name (the atomic publish the
-    destination's reader looks for) and returns the exact number of rows
-    dropped to the capacity limit, per destination.
-    """
 
-    def __init__(self, root: str, src: int, nshards: int, width: int,
+class BucketSender:
+    """Backend-independent half of the bucket protocol: routing rows to
+    destinations, per-epoch capacity enforcement with EXACT dropped
+    counts, and RAM-bounded buffering.  This is the interface contract
+    every transport backend must preserve (docs/transports.md):
+
+      * ``put(dest, rows)`` buffers rows toward their destination shard,
+        spilling through ``_append`` past ``buf_rows`` buffered rows so
+        an epoch's traffic never outgrows RAM.  Rows past a destination's
+        per-epoch ``capacity`` are dropped AND counted, never silently.
+      * ``seal(epoch)`` flushes, atomically publishes every destination's
+        bucket through ``_publish`` and returns the exact per-destination
+        dropped counts.  Until seal, a reader must see NOTHING of the
+        epoch's traffic; a sender killed mid-epoch leaves only ignorable
+        strays.
+
+    Subclasses supply the wire: ``_append(dst, data)`` persists one spill
+    (idempotent under the transient-retry discipline — ``faults``' torn/
+    retry semantics) and ``_publish(epoch, publish_done)`` makes every
+    non-empty destination bucket visible atomically.  ``kind`` names the
+    backend in the ``transport`` counter namespace."""
+
+    kind = "abstract"
+
+    def __init__(self, src: int, nshards: int, width: int,
                  dtype="int64", capacity: Optional[int] = None,
                  buf_rows: int = 1 << 15):
-        os.makedirs(root, exist_ok=True)
-        self.root = root
         self.src = int(src)
         self.nshards = int(nshards)
         self.width = int(width)
@@ -116,13 +149,11 @@ class BucketWriter:
         self.buf_rows = int(buf_rows)
         self._bufs: List[List[np.ndarray]] = [[] for _ in range(nshards)]
         self._nbuf = 0
-        # Rows accepted / dropped per destination THIS epoch.
+        # Rows accepted / dropped / bytes appended per destination THIS
+        # epoch (bytes feed the per-backend bytes-on-wire counters).
         self._accepted = np.zeros(nshards, np.int64)
         self._dropped = np.zeros(nshards, np.int64)
-
-    def _tmp_path(self, dst: int) -> str:
-        # The epoch is stamped at seal time; one in-flight file per dst.
-        return os.path.join(self.root, f"s{self.src:03d}_d{dst:03d}.bin.tmp")
+        self._bytes = np.zeros(nshards, np.int64)
 
     def put(self, dest: np.ndarray, rows: np.ndarray) -> None:
         """Route rows to their destination buckets.  dest: (m,) shard ids in
@@ -158,36 +189,94 @@ class BucketWriter:
             if not buf:
                 continue
             rec = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
-            # Positioned, truncate-on-retry append: a torn or transiently
-            # failed spill can never leave partial records in the bucket.
-            faults.append_bytes(
-                "bucket_spill", self._tmp_path(d),
-                np.ascontiguousarray(rec, self.dtype).tobytes(),
-                shard=self.src, dst=d)
+            data = np.ascontiguousarray(rec, self.dtype).tobytes()
+            self._append(d, data)
+            self._bytes[d] += len(data)
             self._bufs[d] = []
         self._nbuf = 0
 
-    def seal(self, epoch: int) -> np.ndarray:
-        """Publish this epoch's buckets (atomic renames) and reset.
+    def seal(self, epoch: int, publish_done: bool = False) -> np.ndarray:
+        """Publish this epoch's buckets atomically and reset.
 
         Returns the (nshards,) per-destination dropped counts for the
-        epoch.  Destinations that received no rows publish no file — the
-        reader treats absence as an empty bucket."""
+        epoch.  Destinations that received no rows publish no bucket — the
+        reader treats absence as an empty bucket.  With ``publish_done``
+        (the pipelined exchange) every destination additionally gets a
+        completion marker AFTER its data is published, so a receiver can
+        consume this source incrementally without waiting for the level
+        barrier."""
         with obs.span("bucket.seal", epoch=epoch, src=self.src,
                       rows=int(self._accepted.sum())):
             self._spill()
-            for d in range(self.nshards):
-                tmp = self._tmp_path(d)
-                if os.path.exists(tmp):
-                    final = os.path.join(
-                        self.root, _bucket_name(epoch, self.src, d))
-                    faults.retry_io("bucket_seal",
-                                    lambda t=tmp, f=final: os.replace(t, f),
-                                    shard=self.src, dst=d)
+            with obs.span("bucket.send", epoch=epoch, src=self.src,
+                          transport=self.kind, bytes=int(self._bytes.sum())):
+                self._publish(epoch, publish_done)
+            TRANSPORT_STATS[f"{self.kind}_bytes_out"] += int(
+                self._bytes.sum())
+            TRANSPORT_STATS[f"{self.kind}_buckets_out"] += int(
+                np.count_nonzero(self._bytes))
             dropped = self._dropped.copy()
             self._accepted[:] = 0
             self._dropped[:] = 0
+            self._bytes[:] = 0
             return dropped
+
+    # ------------------------------------------------ backend hooks
+    def _append(self, dst: int, data: bytes) -> None:
+        raise NotImplementedError
+
+    def _publish(self, epoch: int, publish_done: bool) -> None:
+        raise NotImplementedError
+
+
+class BucketWriter(BucketSender):
+    """The shared-filesystem bucket backend — the paper's original shape.
+
+    One source's outgoing per-destination buckets accumulate in ``.tmp``
+    files under the structure's exchange directory; ``seal(epoch)``
+    renames every ``.tmp`` to its final epoch-stamped name (the atomic
+    publish the destination's reader looks for).  The on-disk layout in
+    barrier mode is byte-identical to the pre-transport protocol."""
+
+    kind = "fs"
+
+    def __init__(self, root: str, src: int, nshards: int, width: int,
+                 dtype="int64", capacity: Optional[int] = None,
+                 buf_rows: int = 1 << 15):
+        os.makedirs(root, exist_ok=True)
+        self.root = root
+        super().__init__(src, nshards, width, dtype=dtype,
+                         capacity=capacity, buf_rows=buf_rows)
+
+    def _tmp_path(self, dst: int) -> str:
+        # The epoch is stamped at seal time; one in-flight file per dst.
+        return os.path.join(self.root, f"s{self.src:03d}_d{dst:03d}.bin.tmp")
+
+    def _append(self, dst: int, data: bytes) -> None:
+        # Positioned, truncate-on-retry append: a torn or transiently
+        # failed spill can never leave partial records in the bucket.
+        faults.append_bytes("bucket_spill", self._tmp_path(dst), data,
+                            shard=self.src, dst=dst)
+
+    def _publish(self, epoch: int, publish_done: bool) -> None:
+        for d in range(self.nshards):
+            tmp = self._tmp_path(d)
+            if os.path.exists(tmp):
+                final = os.path.join(
+                    self.root, _bucket_name(epoch, self.src, d))
+                faults.retry_io("bucket_seal",
+                                lambda t=tmp, f=final: os.replace(t, f),
+                                shard=self.src, dst=d)
+        if publish_done:
+            # Markers land strictly after the data renames: a marker's
+            # existence means this source's bucket for that destination
+            # (if any) is already readable.
+            for d in range(self.nshards):
+                marker = os.path.join(
+                    self.root, _done_name(epoch, self.src, d))
+                faults.retry_io("bucket_seal",
+                                lambda m=marker: open(m, "wb").close(),
+                                shard=self.src, dst=d)
 
 
 # ----------------------------------------------------------------- reader

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import os
 import shutil
+import threading
 import traceback
 from typing import Callable, List, Optional, Sequence
 
@@ -67,9 +68,11 @@ from . import checkpoint as ckpt
 from . import extsort, faults
 from .bitarray import CUR, DONE, NEXT, UNSEEN, DiskBitArray
 from .bitarray import STATS as BITS_STATS
-from .buckets import (BucketWriter, block_owner_np, block_size, cleanup_strays,
-                      hash_owner_np, iter_incoming)
+from .buckets import (BucketSender, block_owner_np, block_size,
+                      hash_owner_np)
 from .checkpoint import SearchCheckpoint
+from .transport import (LoopbackStore, Transport, TransportAborted,
+                        make_transport)
 from .dhash import DiskHashTable
 from .dlist import DiskList
 from .lsm import SortedRunSet
@@ -125,41 +128,61 @@ class ShardFailure(RuntimeError):
 
 class ShardContext:
     """One worker's view of the runtime: its shard id, its private root
-    directory (every local ChunkStore/op-log lives under it), its cached
-    outgoing :class:`BucketWriter` per structure, and the registry of
-    local structure shards built up by coordinator commands."""
+    directory (every local ChunkStore/op-log lives under it), its
+    transport endpoint with its cached outgoing :class:`BucketSender` per
+    structure, and the registry of local structure shards built up by
+    coordinator commands."""
 
-    def __init__(self, shard: int, nshards: int, root: str):
+    def __init__(self, shard: int, nshards: int, root: str,
+                 tspec: Optional[dict] = None, exchange: str = "barrier",
+                 timeout: float = _MAP_TIMEOUT, store=None, abort=None):
         self.shard = int(shard)
         self.nshards = int(nshards)
         self.root = root
+        self.exchange = exchange
         self.dir = os.path.join(root, f"shard{shard:03d}")
         os.makedirs(self.dir, exist_ok=True)
         self.objects: dict = {}
         self._writers: dict = {}
+        self.transport: Transport = make_transport(
+            tspec or {"kind": "fs"}, shard, nshards, root,
+            abort=abort, store=store, timeout=timeout)
+
+    @property
+    def pipelined(self) -> bool:
+        return self.exchange == "pipelined"
 
     def exchange_dir(self, name: str) -> str:
         return os.path.join(self.root, "exchange", name)
 
-    def writer(self, spec: dict) -> BucketWriter:
-        """The (cached) outgoing bucket writer for one structure."""
+    def writer(self, spec: dict) -> BucketSender:
+        """The (cached) outgoing bucket sender for one structure."""
         name = spec["name"]
         if name not in self._writers:
-            self._writers[name] = BucketWriter(
-                self.exchange_dir(name), src=self.shard,
-                nshards=self.nshards, width=spec["rec_width"],
-                dtype=spec["rec_dtype"], capacity=spec.get("capacity"))
+            self._writers[name] = self.transport.sender(spec)
         return self._writers[name]
 
+    def recv(self, spec: dict, epoch: int, srcs, ordered: bool = True):
+        """Stream (src, rows) addressed to this shard for one epoch,
+        through the runtime's exchange discipline: barrier mode consumes
+        a completed epoch, pipelined mode consumes each source as its
+        completion marker lands."""
+        return self.transport.recv(spec, epoch, tuple(srcs),
+                                   live=self.pipelined, ordered=ordered)
 
-def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q) -> None:
+
+def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q,
+                 tspec: Optional[dict] = None,
+                 exchange: str = "barrier",
+                 timeout: float = _MAP_TIMEOUT) -> None:
     """Command loop of one spawned worker.  Every command is a picklable
     ``(fn, args)`` executed against the persistent :class:`ShardContext`;
     exceptions travel back as formatted strings (tracebacks don't
     pickle).  The fault plan (if ``$ROOMY_FAULTS`` is set) is installed
     with ``allow_exit=True``: ``kill`` rules here are a real ``os._exit``,
     the hard-death shape the coordinator's recovery must survive."""
-    ctx = ShardContext(shard, nshards, root)
+    ctx = ShardContext(shard, nshards, root, tspec=tspec, exchange=exchange,
+                       timeout=timeout)
     faults.install_from_env(state_dir=os.path.join(root, "_faults"),
                             shard=shard, allow_exit=True)
     # Tracing rides the environment exactly like the fault plan: trace.start
@@ -171,6 +194,7 @@ def _worker_main(shard: int, nshards: int, root: str, cmd_q, res_q) -> None:
     while True:
         msg = cmd_q.get()
         if msg is None:
+            ctx.transport.close()
             return
         fn, args = msg
         try:
@@ -187,10 +211,40 @@ def _w_noop(ctx: ShardContext) -> int:
 
 
 def _w_seal(ctx: ShardContext, spec: dict, epoch: int) -> int:
-    """Publish this worker's outgoing buckets for one structure/epoch."""
-    if spec["name"] not in ctx._writers:
+    """Publish this worker's outgoing buckets for one structure/epoch.
+
+    On wires with explicit completion (tcp, loopback — and the fs wire's
+    pipelined markers) this seals even with nothing queued: an empty seal
+    is cheap, a missing one hangs the receiver.  In fs barrier mode a
+    shard that never wrote skips instead — absence IS the empty bucket
+    there, and an unforced seal would adopt a killed peer's stray
+    ``.tmp`` as real traffic (pinned by the abort-safety tests)."""
+    if (spec["name"] not in ctx._writers and not ctx.pipelined
+            and not ctx.transport.explicit_completion):
         return 0
-    return int(ctx.writer(spec).seal(epoch).sum())
+    return int(ctx.writer(spec).seal(epoch,
+                                     publish_done=ctx.pipelined).sum())
+
+
+def _w_transport_addr(ctx: ShardContext):
+    """This worker's receive endpoint (handshake round, tcp)."""
+    return ctx.transport.handshake()
+
+
+def _w_transport_connect(ctx: ShardContext, peers: dict) -> int:
+    ctx.transport.connect(peers)
+    return ctx.shard
+
+
+def _w_exchange(ctx: ShardContext, spec: dict, epoch: int, apply_fn,
+                *apply_args) -> tuple:
+    """Pipelined sync of one structure on one worker: seal the outgoing
+    buckets with completion markers, then apply inbound as each peer's
+    marker lands (the apply_fn's ``ctx.recv`` is live here) — producing
+    and applying overlap across shards, the barrier is only the map
+    completing.  Returns (dropped, applied)."""
+    dropped = int(ctx.writer(spec).seal(epoch, publish_done=True).sum())
+    return dropped, apply_fn(ctx, spec, epoch, *apply_args)
 
 
 def _w_get_stats(ctx: ShardContext) -> dict:
@@ -235,21 +289,41 @@ class ShardRuntime:
                    it exercises the identical on-disk protocol.
 
     The runtime owns ``root``: per-shard directories ``shard{k:03d}/``
-    and the shared ``exchange/`` bucket area.  ``fresh=True`` (default)
-    wipes leftovers from a previous (possibly killed) run; otherwise only
-    ignorable ``.tmp``/``.pass`` strays are swept — and what the sweep
-    cleaned is booked in ``extsort.STATS`` (``stray_files_swept`` /
-    ``stray_bytes_swept``), never silently discarded.
+    and the transport's exchange area (a shared ``exchange/`` directory
+    for the fs wire; sockets/in-process mailboxes elsewhere).
+    ``fresh=True`` (default) wipes leftovers from a previous (possibly
+    killed) run; otherwise only ignorable ``.tmp``/``.pass`` strays are
+    swept — and what the sweep cleaned is booked in ``extsort.STATS``
+    (``stray_files_swept`` / ``stray_bytes_swept``), never silently
+    discarded.
+
+    ``transport=`` picks the wire (docs/transports.md): ``"fs"``
+    (default, shared filesystem, byte-compatible layout), ``"tcp"``
+    (sockets, no shared exchange dir), ``"loopback"`` (in-process
+    mailbox, inline only).  ``exchange=`` picks the sync discipline:
+    ``"barrier"`` (default, the legacy two-phase seal-all-then-apply-all)
+    or ``"pipelined"`` (workers apply inbound buckets while peers are
+    still producing; inline mode then runs its workers in a thread pool —
+    the GIL-releasing numpy passes overlap).
     """
 
     def __init__(self, root: str, nshards: int, mode: str = "spawn",
-                 fresh: bool = True, timeout: float = _MAP_TIMEOUT):
+                 fresh: bool = True, timeout: float = _MAP_TIMEOUT,
+                 transport: str = "fs", exchange: Optional[str] = None,
+                 host: str = "127.0.0.1"):
         assert nshards >= 1
         assert mode in ("spawn", "inline"), mode
+        assert exchange in (None, "barrier", "pipelined"), exchange
+        if transport == "loopback" and mode != "inline":
+            raise ValueError(
+                "transport='loopback' is the in-process wire for "
+                "mode='inline' — spawn workers cannot share its store")
         self.root = root
         self.nshards = int(nshards)
         self.mode = mode
         self.timeout = timeout
+        self.exchange_mode = exchange or "barrier"
+        self.tspec = {"kind": transport, "host": host}
         self._broken = False     # set when a collective desynchronizes
         self.epoch = 0
         self._seq = 0
@@ -258,29 +332,39 @@ class ShardRuntime:
         # baselines collect_obs folds deltas against.  Spawn mode only:
         # inline workers mutate this process's registry directly.
         self._obs_base: List[dict] = [dict() for _ in range(self.nshards)]
-        exch = os.path.join(root, "exchange")
-        if fresh and os.path.isdir(exch):
-            shutil.rmtree(exch)
-        os.makedirs(exch, exist_ok=True)
-        for sub in sorted(os.listdir(exch)):
-            cleanup_strays(os.path.join(exch, sub))
         # The coordinator runs the same fault plan as the workers (if any)
         # but never exits the process: kill rules become WorkerKilled
         # raises, which inline mode and the BFS recovery path catch.
         faults.install_from_env(state_dir=os.path.join(root, "_faults"),
                                 allow_exit=False)
+        self._store = LoopbackStore() if transport == "loopback" else None
+        # Inline workers share one abort flag: the first thread to fail a
+        # pipelined level unblocks every peer's live recv.
+        self._abort = threading.Event()
         # The coordinator acts as bucket source ``nshards`` (one past the
-        # worker ids) — its delayed ops ride the same files.
-        self.driver = ShardContext(self.nshards, self.nshards, root)
+        # worker ids) — its delayed ops ride the same wire.
+        self.driver = self._make_ctx(self.nshards)
+        self.driver.transport.startup(fresh)
         self._procs: List = []
         self._cmd_qs: List = []
         self._res_qs: List = []
         self._inline_ctxs: List[ShardContext] = []
         if mode == "inline":
-            self._inline_ctxs = [ShardContext(s, self.nshards, root)
+            self._inline_ctxs = [self._make_ctx(s)
                                  for s in range(self.nshards)]
         else:
             self._spawn_workers()
+        self._handshake()
+
+    @property
+    def pipelined(self) -> bool:
+        return self.exchange_mode == "pipelined"
+
+    def _make_ctx(self, shard: int) -> ShardContext:
+        return ShardContext(shard, self.nshards, self.root,
+                            tspec=self.tspec, exchange=self.exchange_mode,
+                            timeout=self.timeout, store=self._store,
+                            abort=self._abort)
 
     def _spawn_workers(self) -> None:
         import multiprocessing as mp
@@ -288,12 +372,32 @@ class ShardRuntime:
         for s in range(self.nshards):
             cq, rq = mpctx.Queue(), mpctx.Queue()
             p = mpctx.Process(target=_worker_main,
-                              args=(s, self.nshards, self.root, cq, rq),
+                              args=(s, self.nshards, self.root, cq, rq,
+                                    self.tspec, self.exchange_mode,
+                                    self.timeout),
                               daemon=True)
             p.start()
             self._procs.append(p)
             self._cmd_qs.append(cq)
             self._res_qs.append(rq)
+
+    def _handshake(self) -> None:
+        """Endpoint-exchange round for transports with real addresses
+        (tcp): collect every worker's receive endpoint, broadcast the
+        peer map, and wire the coordinator's own sender.  Runs after
+        every (re)spawn, before any seal."""
+        if self.tspec["kind"] != "tcp":
+            return
+        if self.mode == "inline":
+            peers = {c.shard: c.transport.handshake()
+                     for c in self._inline_ctxs}
+            for c in self._inline_ctxs:
+                c.transport.connect(peers)
+        else:
+            addrs = self.bcast(_w_transport_addr)
+            peers = {s: a for s, a in enumerate(addrs)}
+            self.bcast(_w_transport_connect, peers)
+        self.driver.transport.connect(peers)
 
     # ------------------------------------------------------------ plumbing
     def next_epoch(self) -> int:
@@ -315,10 +419,14 @@ class ShardRuntime:
             try:
                 return self._res_qs[s].get(timeout=2.0)
             except _queue.Empty:
-                if not self._procs[s].is_alive():
-                    raise WorkerLost(
-                        f"shard {s} died during {fn_name}",
-                        shard=s, phase=fn_name) from None
+                # Check the WHOLE pool, not just shard s: in a pipelined
+                # exchange a live worker blocks on a dead peer's buckets,
+                # so the stall surfaces on the wrong queue first.
+                for i, p in enumerate(self._procs):
+                    if not p.is_alive():
+                        raise WorkerLost(
+                            f"shard {i} died during {fn_name}",
+                            shard=i, phase=fn_name) from None
                 if _time.monotonic() >= deadline:
                     raise WorkerLost(
                         f"shard {s} timed out during {fn_name}",
@@ -332,6 +440,8 @@ class ShardRuntime:
         argl = list(args) if args is not None else [()] * self.nshards
         assert len(argl) == self.nshards
         if self.mode == "inline":
+            if self.pipelined and self.nshards > 1:
+                return self._map_threaded(fn, argl)
             outs = []
             for ctx, a in zip(self._inline_ctxs, argl):
                 if faults.ACTIVE:     # same barrier site the workers fire
@@ -368,6 +478,50 @@ class ShardRuntime:
                                + "\n".join(errors))
         return outs
 
+    def _map_threaded(self, fn: Callable, argl: list) -> list:
+        """Pipelined inline map: every shard's worker function runs in
+        its own thread (the carried ROADMAP item — the numpy passes and
+        file I/O release the GIL, so inline mode finally overlaps).
+        Necessary for correctness too: a pipelined level blocks on peer
+        buckets, which a sequential loop would deadlock on.  The FIRST
+        failure sets the shared abort flag immediately (waiting for
+        earlier futures first would stall every live peer until its recv
+        timeout); the lowest failing shard's ORIGINAL exception
+        propagates — abort-induced :class:`~.transport.TransportAborted`
+        secondaries are only raised when nothing better exists."""
+        from concurrent.futures import (FIRST_EXCEPTION, ThreadPoolExecutor,
+                                        wait as _futwait)
+
+        def run(ctx, a):
+            if faults.ACTIVE:     # same barrier site the workers fire
+                faults.fire("barrier", shard=ctx.shard,
+                            fn=getattr(fn, "__name__", str(fn)))
+            return fn(ctx, *a)
+
+        self._abort.clear()
+        outs: list = [None] * self.nshards
+        errs: list = [None] * self.nshards
+        with ThreadPoolExecutor(max_workers=self.nshards,
+                                thread_name_prefix="shard") as pool:
+            futs = [pool.submit(run, ctx, a)
+                    for ctx, a in zip(self._inline_ctxs, argl)]
+            done, _pending = _futwait(futs, return_when=FIRST_EXCEPTION)
+            if any(f.exception() is not None for f in done):
+                self._abort.set()        # unblock peers' live recvs NOW
+            _futwait(futs)
+            for s, fut in enumerate(futs):
+                exc = fut.exception()
+                if exc is not None:
+                    errs[s] = exc
+                    self._abort.set()
+                else:
+                    outs[s] = fut.result()
+        real = [e for e in errs
+                if e is not None and not isinstance(e, TransportAborted)]
+        for exc in real or [e for e in errs if e is not None]:
+            raise exc
+        return outs
+
     def bcast(self, fn: Callable, *args) -> list:
         """map() with the same (picklable) arguments on every shard."""
         return self.map(fn, [tuple(args)] * self.nshards)
@@ -376,18 +530,40 @@ class ShardRuntime:
         self.bcast(_w_noop)
 
     # ------------------------------------------------------------ exchange
+    def seal_driver(self, spec: dict, epoch: int) -> int:
+        """Seal the coordinator's outgoing buckets for one epoch
+        (publishing completion markers in pipelined mode); returns the
+        exact overflow-drop count."""
+        return int(self.driver.writer(spec)
+                   .seal(epoch, publish_done=self.pipelined).sum())
+
     def exchange(self, spec: dict, apply_fn: Callable, *apply_args) -> dict:
-        """One delayed-op sync of one structure: seal everywhere (barrier),
-        then apply everywhere.  Returns {"dropped": n, "applied": [...]}
-        with the EXACT count of rows lost to bucket-capacity overflow
+        """One delayed-op sync of one structure.  Barrier mode: seal
+        everywhere (the completed seal map IS the barrier), then apply
+        everywhere.  Pipelined mode: one collective in which each worker
+        seals with completion markers and applies peers' buckets as they
+        land — produce and apply overlap, the barrier is only the map
+        completing.  Both return {"dropped": n, "applied": [...]} with
+        the EXACT count of rows lost to bucket-capacity overflow
         (coordinator + all workers), mirroring ``bin_by_dest``."""
         epoch = self.next_epoch()
-        dropped = 0
-        if spec["name"] in self.driver._writers:
-            dropped += int(self.driver.writer(spec).seal(epoch).sum())
+        dropped = self.seal_driver(spec, epoch)
+        if self.pipelined:
+            res = self.bcast(_w_exchange, spec, epoch, apply_fn,
+                             *apply_args)
+            dropped += sum(d for d, _a in res)
+            return {"dropped": dropped, "applied": [a for _d, a in res]}
         dropped += sum(self.bcast(_w_seal, spec, epoch))
         applied = self.bcast(apply_fn, spec, epoch, *apply_args)
         return {"dropped": dropped, "applied": applied}
+
+    def wipe_exchange(self, name: str) -> None:
+        """Discard every queued/sealed bucket of one structure, on
+        whatever wire this runtime runs (rollback and destroy: in-flight
+        buckets of a failed epoch are dead traffic)."""
+        self.driver.transport.wipe(name)
+        for ctx in self._inline_ctxs:
+            ctx.transport.wipe(name)
 
     def register(self, struct) -> None:
         self._structs[struct.name] = struct
@@ -439,6 +615,9 @@ class ShardRuntime:
         last barrier would otherwise die with the worker processes."""
         self.collect_obs()
         self._teardown_workers()
+        for ctx in self._inline_ctxs:
+            ctx.transport.close()
+        self.driver.transport.close()
 
     def _teardown_workers(self) -> None:
         """Tear the worker pool down without ever hanging.
@@ -488,8 +667,11 @@ class ShardRuntime:
         path) or rebuild its structures before issuing new collectives:
         respawned workers start with empty object registries."""
         self.driver._writers = {}
+        self._abort.clear()
         if self.mode == "inline":
-            self._inline_ctxs = [ShardContext(s, self.nshards, self.root)
+            for ctx in self._inline_ctxs:
+                ctx.transport.close()     # tcp receiver threads would leak
+            self._inline_ctxs = [self._make_ctx(s)
                                  for s in range(self.nshards)]
         else:
             self._teardown_workers()
@@ -498,6 +680,7 @@ class ShardRuntime:
         # delta baselines or the next collect_obs would fold negatives.
         self._obs_base = [dict() for _ in range(self.nshards)]
         self._broken = False
+        self._handshake()                 # fresh pool, fresh endpoints
 
     def destroy(self) -> None:
         """Shutdown and remove every shard/exchange directory."""
@@ -552,8 +735,7 @@ class _ShardedBase:
         self.runtime.bcast(_w_destroy, self.name)
         self.runtime._structs.pop(self.name, None)
         self.runtime.driver._writers.pop(self.name, None)
-        shutil.rmtree(self.runtime.driver.exchange_dir(self.name),
-                      ignore_errors=True)
+        self.runtime.wipe_exchange(self.name)
         if self._own_runtime:
             self.runtime.shutdown()
 
@@ -563,9 +745,7 @@ class _ShardedBase:
 def _w_list_apply(ctx: ShardContext, spec: dict, epoch: int) -> int:
     obj = ctx.objects[spec["name"]]
     got = 0
-    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                    epoch, spec["rec_width"],
-                                    spec["rec_dtype"]):
+    for _src, rows in ctx.recv(spec, epoch, range(ctx.nshards + 1)):
         obj.add(rows)
         got += rows.shape[0]
     obj.store.flush()
@@ -647,9 +827,9 @@ def _w_hash_apply(ctx: ShardContext, spec: dict, epoch: int,
     kw, vw = spec["key_width"], spec["val_width"]
     obj = ctx.objects[spec["name"]]
     got = 0
-    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                   epoch, spec["rec_width"],
-                                   spec["rec_dtype"]):
+    # Ascending-src consumption (ordered even when pipelined) keeps each
+    # key's PUT/DEL interleaving deterministic across sources.
+    for _src, rec in ctx.recv(spec, epoch, range(ctx.nshards + 1)):
         got += rec.shape[0]
         ops = rec[:, 0]
         keys = rec[:, 1:1 + kw].astype(np.uint32)
@@ -761,8 +941,7 @@ def _w_bits_apply(ctx: ShardContext, spec: dict, epoch: int,
     obj = ctx.objects[spec["name"]]
     base = ctx.shard * spec["per"]
     got = 0
-    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                   epoch, 2, "int64"):
+    for _src, rec in ctx.recv(spec, epoch, range(ctx.nshards + 1)):
         obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
         got += rec.shape[0]
     obj.sync(combine=combine, apply=apply)
@@ -861,9 +1040,8 @@ def _w_bfs_seed(ctx: ShardContext, spec: dict, epoch: int) -> int:
     builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
                                  spec["width"], chunk_rows=spec["chunk_rows"],
                                  run_rows=spec["run_rows"])
-    for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                    epoch, spec["rec_width"],
-                                    spec["rec_dtype"]):
+    # Seed rows come from the coordinator alone (source id nshards).
+    for _src, rows in ctx.recv(spec, epoch, (ctx.nshards,)):
         builder.add(rows)
     runs = builder.finish()
     lev0 = ChunkStore(os.path.join(ctx.dir, f"{spec['name']}_lev0"),
@@ -902,7 +1080,7 @@ def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int,
             if not local.all():
                 writer.put(owner[~local], nbrs[~local])
         st["builder"] = builder
-        return int(writer.seal(epoch).sum())
+        return int(writer.seal(epoch, publish_done=ctx.pipelined).sum())
 
 
 def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
@@ -914,9 +1092,10 @@ def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
     with obs.span("bfs.level", level=st["lev"] + 1, shard=ctx.shard,
                   phase="absorb"):
         builder = st.pop("builder")
-        for _src, rows in iter_incoming(ctx.exchange_dir(spec["name"]),
-                                        ctx.shard, epoch, spec["rec_width"],
-                                        spec["rec_dtype"]):
+        # Expansion rows come from the workers (the coordinator only ever
+        # seeds); in pipelined mode this recv is live — each peer's rows
+        # join the builder as soon as its markers land.
+        for _src, rows in ctx.recv(spec, epoch, range(ctx.nshards)):
             builder.add(rows)
         runs = builder.finish()
         st["all"].maybe_compact()
@@ -939,6 +1118,18 @@ def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
                 chunk_rows=spec["chunk_rows"], fresh=True)
             st["cur"].flush(mark_sorted=True)
         return nxt.size
+
+
+def _w_bfs_level(ctx: ShardContext, spec: dict, gen_next, epoch: int,
+                 lev: int) -> tuple:
+    """One whole pipelined level: expand + seal with completion markers,
+    then absorb peers' rows as their markers land — this shard applies
+    inbound buckets while slower shards are still producing, and the only
+    barrier left is the map completing at the level boundary.  Returns
+    (dropped, next_frontier_size); budgets unchanged (the level's one
+    sort pass is the same RunBuilder the barrier path fills)."""
+    dropped = _w_bfs_expand(ctx, spec, gen_next, epoch, lev)
+    return dropped, _w_bfs_absorb(ctx, spec, epoch)
 
 
 def _w_bfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
@@ -1018,8 +1209,7 @@ class ShardedVisited:
 
     def destroy(self) -> None:
         self.runtime.bcast(_w_bfs_destroy, self.name)
-        shutil.rmtree(self.runtime.driver.exchange_dir(self.name),
-                      ignore_errors=True)
+        self.runtime.wipe_exchange(self.name)
         if self._own_runtime:
             self.runtime.shutdown()
 
@@ -1089,8 +1279,7 @@ def _roll_back(runtime: ShardRuntime, ck: Optional[SearchCheckpoint],
                 recoveries=recoveries) from exc
         extsort.STATS["recoveries"] += 1
         runtime.recover()
-        shutil.rmtree(runtime.driver.exchange_dir(spec["name"]),
-                      ignore_errors=True)
+        runtime.wipe_exchange(spec["name"])
         extsort.STATS["replayed_levels"] += max(
             0, lev - (len(state["level_sizes"]) - 1))
         return state
@@ -1158,7 +1347,7 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
             writer = runtime.driver.writer(spec)
             writer.put(hash_owner_np(start_rows, runtime.nshards), start_rows)
             epoch = runtime.next_epoch()
-            dropped = int(writer.seal(epoch).sum())
+            dropped = runtime.seal_driver(spec, epoch)
             sizes = runtime.bcast(_w_bfs_seed, spec, epoch)
             runtime.collect_obs()
         level_sizes = [sum(sizes)]
@@ -1181,9 +1370,15 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
         try:
             with obs.span("bfs.level", **attrs):
                 epoch = runtime.next_epoch()
-                dropped += sum(runtime.bcast(_w_bfs_expand, spec, gen_next,
-                                             epoch, lev))
-                total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
+                if runtime.pipelined:
+                    res = runtime.bcast(_w_bfs_level, spec, gen_next,
+                                        epoch, lev)
+                    dropped += sum(d for d, _t in res)
+                    total = sum(t for _d, t in res)
+                else:
+                    dropped += sum(runtime.bcast(_w_bfs_expand, spec,
+                                                 gen_next, epoch, lev))
+                    total = sum(runtime.bcast(_w_bfs_absorb, spec, epoch))
                 runtime.collect_obs()
                 if total == 0:
                     break
@@ -1212,7 +1407,7 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
 # ================================================= distributed BFS (implicit)
 
 def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
-                 epoch_in: int, epoch_out: int, seed: bool,
+                 epoch_in: int, srcs_in: tuple, epoch_out: int, seed: bool,
                  lev: int = 0) -> tuple:
     """One fused BFS level on this shard's block of the bit array.
 
@@ -1231,8 +1426,7 @@ def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
         n, nshards = spec["n"], ctx.nshards
         expand_batch = spec["expand_batch"]
         writer = ctx.writer(spec)
-        for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]),
-                                       ctx.shard, epoch_in, 2, "int64"):
+        for _src, rec in ctx.recv(spec, epoch_in, srcs_in):
             obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
 
         count = 0
@@ -1274,22 +1468,42 @@ def _w_ibfs_pass(ctx: ShardContext, spec: dict, gen_neighbors,
             obj.run_pass(PassPlan("bfs-level").writes(rotate)
                          .reads(count_cur).reads(expand),
                          combine=_mark_first, apply=_apply_unseen)
-        return count, int(writer.seal(epoch_out).sum())
+        return count, int(writer.seal(epoch_out,
+                                      publish_done=ctx.pipelined).sum())
+
+
+def _w_ibfs_level(ctx: ShardContext, spec: dict, gen_neighbors,
+                  epoch_in: int, srcs_in: tuple, epoch_out: int,
+                  seed: bool, lev: int) -> tuple:
+    """One whole pipelined implicit level: (seed only) absorb the
+    coordinator's sealed marks, run the fused pass + seal with markers,
+    then absorb peers' epoch_out marks as their markers land — they queue
+    into the snapshot-isolated op log for the NEXT pass, exactly where
+    the barrier path's start-of-next-level absorb puts them (local marks
+    first, then remote ascending src), so the op-log order and the one
+    rw-pass-per-level budget are unchanged.  Returns (count, dropped)."""
+    count, dropped = _w_ibfs_pass(ctx, spec, gen_neighbors, epoch_in,
+                                  srcs_in, epoch_out, seed, lev)
+    obj: DiskBitArray = ctx.objects[spec["name"]]
+    base = ctx.shard * spec["per"]
+    for _src, rec in ctx.recv(spec, epoch_out, range(ctx.nshards)):
+        obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
+    return count, dropped
 
 
 def _w_ibfs_snapshot(ctx: ShardContext, spec: dict, stage_root: str,
-                     epoch_pending: int) -> dict:
+                     epoch_pending: int, srcs_pending: tuple) -> dict:
     """Snapshot this shard's block of the bit array at the level barrier.
 
     Marks bucket-shipped here at ``epoch_pending`` (the epoch the pass we
     just ran sealed, not yet absorbed) are folded into the local op log
     FIRST, so the snapshot is self-contained: bucket files are consumed,
     and the live run's next pass simply finds that epoch already drained.
-    """
+    In pipelined mode the level's tail absorb already drained it —
+    ``srcs_pending`` is empty and this absorbs nothing."""
     obj: DiskBitArray = ctx.objects[spec["name"]]
     base = ctx.shard * spec["per"]
-    for _src, rec in iter_incoming(ctx.exchange_dir(spec["name"]), ctx.shard,
-                                   epoch_pending, 2, "int64"):
+    for _src, rec in ctx.recv(spec, epoch_pending, srcs_pending):
         obj.update(rec[:, 0] - base, rec[:, 1].astype(np.uint8))
     return ckpt.snapshot_implicit_state(
         os.path.join(stage_root, f"shard{ctx.shard:03d}"), obj)
@@ -1351,20 +1565,23 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
         dropped = int(state.get("dropped", 0))
         seed = False
         # All queued marks live in the adopted op logs; a fresh epoch has
-        # no bucket files, so the first resumed pass absorbs nothing.
+        # no sealed traffic, so the first resumed pass absorbs nothing.
         epoch_in = runtime.next_epoch()
+        srcs_in: tuple = ()
     else:
         start = np.unique(np.asarray(start_idx, np.int64).reshape(-1))
         assert start.size and start.min() >= 0 and start.max() < n_states
         bits.update(start, np.full(start.shape, CUR, np.uint8))
         epoch = runtime.next_epoch()
-        dropped = int(runtime.driver.writer(bits.spec).seal(epoch).sum())
+        dropped = runtime.seal_driver(bits.spec, epoch)
         # The first worker pass absorbs the sealed seed buckets itself
-        # (epoch_in == the seed epoch): seeds queue as delayed ops, the
-        # dirty-only seed pass applies/counts/expands them.
+        # (epoch_in == the seed epoch, source = the coordinator): seeds
+        # queue as delayed ops, the dirty-only seed pass
+        # applies/counts/expands them.
         level_sizes = []
         seed = True
         epoch_in = epoch
+        srcs_in = (runtime.nshards,)
     recoveries = 0
     high = len(level_sizes) - 1   # highest level ever computed (replay tag)
     while len(level_sizes) - 1 < max_levels:
@@ -1377,9 +1594,11 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
         try:
             with obs.span("bfs.level", **attrs):
                 epoch_out = runtime.next_epoch()
-                res = runtime.map(_w_ibfs_pass,
-                                  [(spec, gen_neighbors, epoch_in, epoch_out,
-                                    seed, lev_now)] * runtime.nshards)
+                fn = _w_ibfs_level if runtime.pipelined else _w_ibfs_pass
+                res = runtime.map(fn,
+                                  [(spec, gen_neighbors, epoch_in, srcs_in,
+                                    epoch_out, seed, lev_now)]
+                                  * runtime.nshards)
                 runtime.collect_obs()
                 total = sum(c for c, _d in res)
                 dropped += sum(d for _c, d in res)
@@ -1388,11 +1607,16 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
                 level_sizes.append(total)
                 seed = False
                 epoch_in = epoch_out
+                # Pipelined levels tail-absorb their own epoch: the next
+                # pass (and any snapshot) finds it already drained.
+                srcs_in = (() if runtime.pipelined
+                           else tuple(range(runtime.nshards)))
                 lev = len(level_sizes) - 1
                 if ck is not None and lev % checkpoint_every == 0:
                     version = ck.next_version()
                     stage = ck.begin(version)
-                    runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in)
+                    runtime.bcast(_w_ibfs_snapshot, spec, stage, epoch_in,
+                                  srcs_in)
                     ck.publish(version, {
                         "engine": "implicit", "sharded": True,
                         "nshards": runtime.nshards,
@@ -1417,6 +1641,7 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
             dropped = int(state.get("dropped", 0))
             seed = False
             epoch_in = runtime.next_epoch()
+            srcs_in = ()
             recoveries += 1
             continue
     bits.dropped = dropped

@@ -1,0 +1,248 @@
+"""Consolidated cluster / checkpoint / recovery configuration.
+
+The engine entrypoints (`breadth_first_search`, `implicit_bfs`,
+`sharded_bfs`, `sharded_implicit_bfs`) grew ~20 keyword arguments across
+PRs 4–7; this module collapses the cluster-shaped ones into three small
+frozen dataclasses and gives the old kwargs a one-release deprecation
+shim.  It is also where conflicting cluster settings are rejected loudly
+— ONE shared checker instead of per-engine ad-hoc ``ValueError``s.
+
+    cfg = ClusterConfig(nshards=4, transport="tcp", exchange="pipelined")
+    disk.breadth_first_search(wd, start, gen, cluster=cfg,
+                              checkpoint=CheckpointConfig(dir=ck, every=2),
+                              recovery=RecoveryConfig(max_recoveries=3))
+
+Legacy spellings (``nshards=4, shard_mode="spawn", checkpoint_dir=ck,
+...``) keep working and warn once per entrypoint per process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+__all__ = ["ClusterConfig", "CheckpointConfig", "RecoveryConfig",
+           "resolve_configs"]
+
+_UNSET = object()          # distinguishes "not passed" from explicit None/0
+
+#: transports a ClusterConfig will accept (mirrors transport.TRANSPORT_KINDS
+#: without importing it — config must stay importable in spawn workers
+#: before heavy modules load).
+_KINDS = ("fs", "tcp", "loopback")
+_EXCHANGES = ("barrier", "pipelined")
+_MODES = ("spawn", "inline")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """How the search is sharded and how buckets travel between shards.
+
+    exchange=None resolves to "barrier" — the legacy discipline, kept
+    the default so existing runs stay byte-identical on disk and in
+    STATS.  exchange="pipelined" opts into overlapped produce/apply (and
+    thread-parallel workers in inline mode).
+    """
+
+    nshards: int = 1
+    mode: str = "spawn"
+    transport: str = "fs"
+    exchange: Optional[str] = None
+    bucket_capacity: Optional[int] = None
+    runtime: Optional[object] = None       # adopt an existing ShardRuntime
+    timeout: float = 600.0
+    host: str = "127.0.0.1"
+
+    def resolved_exchange(self) -> str:
+        return self.exchange if self.exchange is not None else "barrier"
+
+    def validate(self) -> "ClusterConfig":
+        if self.transport not in _KINDS:
+            raise ValueError(
+                f"ClusterConfig.transport={self.transport!r}: choose from "
+                f"{_KINDS}")
+        if self.exchange is not None and self.exchange not in _EXCHANGES:
+            raise ValueError(
+                f"ClusterConfig.exchange={self.exchange!r}: choose from "
+                f"{_EXCHANGES} (or None to resolve per mode)")
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"ClusterConfig.mode={self.mode!r}: choose from {_MODES}")
+        if self.nshards < 1:
+            raise ValueError(f"ClusterConfig.nshards={self.nshards} < 1")
+        if self.transport == "loopback" and self.mode == "spawn":
+            raise ValueError(
+                "ClusterConfig: transport='loopback' is the in-process wire "
+                "for mode='inline'; spawn workers live in other processes "
+                "and cannot share its store — use transport='tcp' or 'fs'")
+        if self.runtime is not None:
+            rt_n = getattr(self.runtime, "nshards", None)
+            if self.nshards not in (1, rt_n):
+                raise ValueError(
+                    f"ClusterConfig: runtime= has nshards={rt_n} but "
+                    f"nshards={self.nshards} was also passed — drop one "
+                    "(an adopted runtime brings its own shard count)")
+            rt_kind = getattr(getattr(self.runtime, "transport", None),
+                              "kind", "fs")
+            if self.transport != "fs" and self.transport != rt_kind:
+                raise ValueError(
+                    f"ClusterConfig: runtime= runs transport={rt_kind!r} "
+                    f"but transport={self.transport!r} was also passed — "
+                    "an adopted runtime brings its own wire")
+        return self
+
+    @property
+    def sharded(self) -> bool:
+        # An explicit non-default wire or exchange discipline opts into
+        # the sharded runtime even at nshards=1 (a one-shard cluster is a
+        # real cluster: same protocol, same transport).
+        return (self.runtime is not None or self.nshards > 1
+                or self.transport != "fs" or self.exchange is not None)
+
+    def build_runtime(self, workdir: str):
+        """Adopt ``runtime=`` or build a fresh ShardRuntime under
+        ``workdir/cluster``.  Returns ``(runtime, owns)`` — the engine
+        destroys the runtime only when it owns it."""
+        if self.runtime is not None:
+            return self.runtime, False
+        import os
+
+        from .cluster import ShardRuntime
+        rt = ShardRuntime(os.path.join(workdir, "cluster"), self.nshards,
+                          mode=self.mode, timeout=self.timeout,
+                          transport=self.transport,
+                          exchange=self.resolved_exchange(),
+                          host=self.host)
+        return rt, True
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Where and how often level snapshots publish (docs/checkpointing.md)."""
+
+    dir: Optional[str] = None
+    every: int = 1
+    resume: bool = False
+
+    def validate(self) -> "CheckpointConfig":
+        if self.every < 1:
+            raise ValueError(f"CheckpointConfig.every={self.every} < 1")
+        if self.dir is None and self.resume:
+            raise ValueError(
+                "CheckpointConfig: resume=True needs dir= (nowhere to "
+                "resume from)")
+        return self
+
+    @property
+    def enabled(self) -> bool:
+        return self.dir is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    """In-run self-healing budget (docs/fault-tolerance.md)."""
+
+    max_recoveries: int = 0
+
+    def validate(self) -> "RecoveryConfig":
+        if self.max_recoveries < 0:
+            raise ValueError(
+                f"RecoveryConfig.max_recoveries={self.max_recoveries} < 0")
+        return self
+
+
+_warned: set = set()
+
+
+def _warn_once(entry: str, names) -> None:
+    if entry in _warned:
+        return
+    _warned.add(entry)
+    warnings.warn(
+        f"{entry}: keyword(s) {sorted(names)} are deprecated — pass "
+        "cluster=ClusterConfig(...), checkpoint=CheckpointConfig(...), "
+        "recovery=RecoveryConfig(...) instead (see docs/transports.md)",
+        DeprecationWarning, stacklevel=4)
+
+
+def resolve_configs(entry: str, *,
+                    cluster: Optional[ClusterConfig] = None,
+                    checkpoint: Optional[CheckpointConfig] = None,
+                    recovery: Optional[RecoveryConfig] = None,
+                    fused: bool = True,
+                    # ---- legacy kwargs (deprecation shim) ----
+                    nshards=_UNSET, runtime=_UNSET, shard_mode=_UNSET,
+                    bucket_capacity=_UNSET, checkpoint_dir=_UNSET,
+                    checkpoint_every=_UNSET, resume=_UNSET,
+                    max_recoveries=_UNSET):
+    """The one shared checker behind every engine entrypoint.
+
+    Maps legacy kwargs onto the config objects (warning once per
+    entrypoint), validates each config, and rejects the cross-cutting
+    conflicts: legacy kwargs alongside their config object, and
+    ``fused=False`` with any sharding (the unfused reference paths are
+    single-process by design).  Returns the validated
+    ``(ClusterConfig, CheckpointConfig, RecoveryConfig)`` triple.
+    """
+    legacy_cluster = {k: v for k, v in
+                      [("nshards", nshards), ("runtime", runtime),
+                       ("shard_mode", shard_mode),
+                       ("bucket_capacity", bucket_capacity)]
+                      if v is not _UNSET}
+    legacy_ckpt = {k: v for k, v in
+                   [("checkpoint_dir", checkpoint_dir),
+                    ("checkpoint_every", checkpoint_every),
+                    ("resume", resume)] if v is not _UNSET}
+    legacy_rec = {k: v for k, v in [("max_recoveries", max_recoveries)]
+                  if v is not _UNSET}
+    legacy = {**legacy_cluster, **legacy_ckpt, **legacy_rec}
+
+    for cfg, keys, what in ((cluster, legacy_cluster, "cluster="),
+                            (checkpoint, legacy_ckpt, "checkpoint="),
+                            (recovery, legacy_rec, "recovery=")):
+        if cfg is not None and keys:
+            raise ValueError(
+                f"{entry}: {what} was passed together with legacy "
+                f"keyword(s) {sorted(keys)} — pick one spelling")
+    if legacy:
+        _warn_once(entry, legacy)
+
+    if cluster is None:
+        cluster = ClusterConfig(
+            nshards=legacy_cluster.get("nshards", 1) or 1,
+            mode=legacy_cluster.get("shard_mode", "spawn"),
+            bucket_capacity=legacy_cluster.get("bucket_capacity"),
+            runtime=legacy_cluster.get("runtime"))
+    if checkpoint is None:
+        checkpoint = CheckpointConfig(
+            dir=legacy_ckpt.get("checkpoint_dir"),
+            every=legacy_ckpt.get("checkpoint_every", 1),
+            resume=legacy_ckpt.get("resume", False))
+    if recovery is None:
+        recovery = RecoveryConfig(
+            max_recoveries=legacy_rec.get("max_recoveries", 0))
+
+    cluster = cluster.validate()
+    checkpoint = checkpoint.validate()
+    recovery = recovery.validate()
+
+    if not fused:
+        if cluster.sharded:
+            raise ValueError(
+                f"{entry}: fused=False is the single-process reference "
+                "path — it cannot run sharded (drop cluster config or "
+                "set fused=True)")
+        if checkpoint.enabled:
+            raise ValueError(
+                f"{entry}: checkpointing requires the fused pass "
+                "(fused=False has no level snapshot points)")
+    # NOTE: max_recoveries > 0 without a checkpoint dir is deliberately NOT
+    # a config error — rolling back with no adoptable checkpoint is a loud
+    # runtime ShardFailure ("no coordinated checkpoint"), and tests pin
+    # that behaviour.
+    return cluster, checkpoint, recovery
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make the next legacy-kwarg call warn again."""
+    _warned.clear()

@@ -1,0 +1,634 @@
+"""Pluggable bucket transports (disk/transport.py) + the consolidated
+cluster/search config API (disk/config.py).
+
+Covers the transport redesign end to end:
+
+  * backend conformance, parametrized over ALL THREE wires (fs / tcp /
+    loopback): sealed-bucket roundtrips in barrier and live mode,
+    ascending-src apply order, atomic publish (unsealed traffic is
+    invisible; a killed writer leaves only ignorable strays), EXACT
+    overflow ``dropped`` accounting, stray cleanup, epoch isolation,
+    wipe semantics, and symmetric bytes-on-wire counters,
+  * wire-specific safety: torn/garbage TCP frames are discarded whole,
+    node-local spool strays are swept on (re)construction, and the fs
+    wire's on-disk layout stays byte-compatible in barrier mode,
+  * per-key op order surviving the PIPELINED exchange (the DEL/PUT
+    sequencing rule of the sharded hash table, on every backend),
+  * level-count equivalence: pancake BFS on BOTH engines, for
+    nshards ∈ {1, 2, 4}, across every transport × exchange discipline,
+    identical to the single-process engines — plus per-shard sort/pass
+    budgets unchanged from the barrier baseline,
+  * the ClusterConfig/CheckpointConfig/RecoveryConfig surface: loud
+    validation of conflicting settings, the warn-once deprecation shim,
+    and legacy-kwarg calls producing IDENTICAL runs (level counts and
+    pass ledgers) to their config-object spelling,
+  * kill-one-worker recovery on the TCP wire (spawn and inline),
+    recovered level counts equal to the fault-free run.
+
+Module-level imports stay numpy-only (the test_cluster.py convention):
+spawn workers re-import this module to unpickle the example generators.
+"""
+import math
+import os
+import socket
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.disk import buckets as B
+from repro.core.disk import extsort, faults
+from repro.core.disk import breadth_first_search, implicit_bfs
+from repro.core.disk.buckets import TRANSPORT_STATS
+from repro.core.disk.cluster import (ShardedDiskHashTable, ShardFailure,
+                                     ShardRuntime)
+from repro.core.disk.config import (CheckpointConfig, ClusterConfig,
+                                    RecoveryConfig,
+                                    _reset_deprecation_warnings)
+from repro.core.disk.transport import (TRANSPORT_KINDS, LoopbackStore,
+                                       make_transport)
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+from pancake_bfs import GenNextNp, start_code         # noqa: E402
+from pancake_bits import NeighborsNp                  # noqa: E402
+
+ROOMY_SHARDS = int(os.environ.get("ROOMY_SHARDS", "0"))
+
+# Pinned by test_bfs / test_cluster / test_faults: the fault-free
+# pancake-5 flip-distance histogram every sweep below must land on.
+PANCAKE5 = [1, 4, 12, 35, 48, 20]
+
+EXCHANGES = ("barrier", "pipelined")
+
+
+def _spec(**kw):
+    spec = {"name": "x", "rec_width": 1, "rec_dtype": "int64"}
+    spec.update(kw)
+    return spec
+
+
+def _rows(*vals):
+    return np.asarray(vals, np.int64).reshape(-1, 1)
+
+
+def _build_wire(kind, root, nshards=2):
+    """One transport per shard, fully wired (tcp handshake included)."""
+    store = LoopbackStore() if kind == "loopback" else None
+    ts = [make_transport({"kind": kind, "host": "127.0.0.1"}, s, nshards,
+                         root, store=store)
+          for s in range(nshards)]
+    if kind == "tcp":
+        peers = {s: t.handshake() for s, t in enumerate(ts)}
+        for t in ts:
+            t.connect(peers)
+    return ts
+
+
+@pytest.fixture(params=TRANSPORT_KINDS)
+def wire(request, tmp_path):
+    ts = _build_wire(request.param, str(tmp_path))
+    yield request.param, ts
+    for t in ts:
+        t.close()
+
+
+# ========================================================= conformance
+
+class TestTransportConformance:
+    """The contracts of docs/transports.md, on every backend."""
+
+    def test_barrier_roundtrip_ascending_src(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        s0, s1 = t0.sender(spec), t1.sender(spec)
+        s1.put([0, 0], _rows(10, 11))           # higher src seals FIRST
+        s0.put([0, 1], _rows(1, 2))
+        assert s1.seal(epoch=0).sum() == 0
+        assert s0.seal(epoch=0).sum() == 0
+        got = list(t0.recv(spec, 0, (0, 1), timeout=20))
+        assert [src for src, _ in got] == [0, 1]          # ascending src
+        assert got[0][1].tolist() == [[1]]
+        assert got[1][1].tolist() == [[10], [11]]
+        (src, rows), = t1.recv(spec, 0, (0, 1), timeout=20)
+        assert src == 0 and rows.tolist() == [[2]]
+
+    def test_live_roundtrip_and_redrain_is_empty(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        for t in (t0, t1):
+            s = t.sender(spec)
+            s.put([0], _rows(100 + t.me))
+            s.seal(epoch=0, publish_done=True)
+        got = list(t0.recv(spec, 0, (0, 1), live=True, timeout=20))
+        assert [(s, r.tolist()) for s, r in got] == [(0, [[100]]),
+                                                     (1, [[101]])]
+        # the epoch is consumed: a re-drain yields nothing and does NOT
+        # hang (sealed/completion state outlives the payload)
+        assert list(t0.recv(spec, 0, (0, 1), live=True, timeout=20)) == []
+
+    def test_unsealed_traffic_is_invisible(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        s1 = t1.sender(spec)
+        s1.put([0], _rows(7))
+        s1._spill()                 # force onto the wire's staging area
+        # nothing sealed: a live recv times out instead of yielding
+        with pytest.raises(TimeoutError):
+            list(t0.recv(spec, 0, (1,), live=True, ordered=False,
+                         timeout=0.3))
+
+    def test_live_ordered_waits_for_ascending_src(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        s1 = t1.sender(spec)
+        s1.put([0], _rows(11))
+        s1.seal(epoch=0, publish_done=True)
+        # ordered: src 0 has not sealed, so src 1 must NOT be delivered
+        with pytest.raises(TimeoutError):
+            list(t0.recv(spec, 0, (0, 1), live=True, ordered=True,
+                         timeout=0.4))
+        # unordered: src 1 is available immediately
+        it = t0.recv(spec, 0, (0, 1), live=True, ordered=False, timeout=20)
+        src, rows = next(it)
+        assert src == 1 and rows.tolist() == [[11]]
+        it.close()
+        s0 = t0.sender(spec)
+        s0.put([0], _rows(1))
+        s0.seal(epoch=0, publish_done=True)
+        got = list(t0.recv(spec, 0, (0, 1), live=True, timeout=20))
+        assert [(s, r.tolist()) for s, r in got] == [(0, [[1]])]
+
+    def test_overflow_dropped_exact(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec(capacity=2)
+        s0 = t0.sender(spec)
+        # capacity is per destination per EPOCH, across multiple puts
+        s0.put([0, 0, 0], _rows(1, 2, 3))
+        s0.put([0, 0, 1], _rows(4, 5, 6))
+        assert s0.seal(epoch=0).tolist() == [3, 0]
+        (src, rows), = t0.recv(spec, 0, (0,), timeout=20)
+        assert src == 0 and rows.shape[0] == 2            # exactly capacity
+        (src, rows), = t1.recv(spec, 0, (0,), timeout=20)
+        assert rows.tolist() == [[6]]
+        # next epoch starts with a fresh budget
+        s0.put([0, 0], _rows(7, 8))
+        assert s0.seal(epoch=1).tolist() == [0, 0]
+
+    def test_epoch_isolation(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        s1 = t1.sender(spec)
+        s1.put([0], _rows(1))
+        s1.seal(epoch=0, publish_done=True)
+        s1.put([0], _rows(2))
+        s1.seal(epoch=1, publish_done=True)
+        (_, rows), = t0.recv(spec, 1, (1,), live=True, timeout=20)
+        assert rows.tolist() == [[2]]
+        (_, rows), = t0.recv(spec, 0, (1,), live=True, timeout=20)
+        assert rows.tolist() == [[1]]
+
+    def test_killed_writer_strays_swept_sealed_survives(self, wire, tmp_path):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        dead = t1.sender(spec)
+        dead.put([0], _rows(666))
+        dead._spill()               # killed mid-epoch: staged, never sealed
+        live = t0.sender(spec)
+        live.put([0], _rows(1))
+        live.seal(epoch=0)
+        # a fresh transport (the restarted runtime) sweeps the strays and
+        # must still deliver the sealed epoch
+        if kind == "loopback":
+            t1b = make_transport({"kind": kind}, 1, 2, str(tmp_path),
+                                 store=t0.store)
+        else:
+            t1b = make_transport({"kind": kind, "host": "127.0.0.1"}, 1, 2,
+                                 str(tmp_path))
+        try:
+            t1b.startup(fresh=False)
+            (src, rows), = t0.recv(spec, 0, (0,), timeout=20)
+            assert src == 0 and rows.tolist() == [[1]]
+            if kind in ("fs", "tcp"):           # file-backed staging areas
+                for base, _dirs, files in os.walk(str(tmp_path)):
+                    assert not any(f.endswith(".tmp") for f in files), \
+                        (base, files)
+        finally:
+            t1b.close()
+
+    def test_wipe_discards_structure_traffic(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec()
+        other = _spec(name="y")
+        for sp in (spec, other):
+            s1 = t1.sender(sp)
+            s1.put([0], _rows(5))
+            s1.seal(epoch=0, publish_done=True)
+        for t in (t0, t1):
+            t.wipe("x")
+        with pytest.raises(TimeoutError):       # x's traffic is gone ...
+            list(t0.recv(spec, 0, (1,), live=True, ordered=False,
+                         timeout=0.3))
+        (_, rows), = t0.recv(other, 0, (1,), live=True, timeout=20)
+        assert rows.tolist() == [[5]]           # ... y's is untouched
+
+    def test_bytes_on_wire_counters_symmetric(self, wire):
+        kind, (t0, t1) = wire
+        spec = _spec(rec_width=2)
+        before = dict(TRANSPORT_STATS)
+        s1 = t1.sender(spec)
+        s1.put([0, 0, 1], np.arange(6, dtype=np.int64).reshape(3, 2))
+        s1.seal(epoch=0, publish_done=True)
+        list(t0.recv(spec, 0, (1,), live=True, timeout=20))
+        list(t1.recv(spec, 0, (1,), live=True, timeout=20))
+        d = {k: TRANSPORT_STATS[k] - before.get(k, 0)
+             for k in TRANSPORT_STATS}
+        assert d[f"{kind}_bytes_out"] == 6 * 8
+        assert d[f"{kind}_bytes_out"] == d[f"{kind}_bytes_in"]
+        assert d[f"{kind}_buckets_out"] == d[f"{kind}_buckets_in"] == 2
+        for other in set(TRANSPORT_KINDS) - {kind}:
+            assert d[f"{other}_bytes_out"] == d[f"{other}_bytes_in"] == 0
+
+
+class TestMakeTransport:
+    def test_loopback_needs_store(self, tmp_path):
+        with pytest.raises(ValueError, match="loopback"):
+            make_transport({"kind": "loopback"}, 0, 2, str(tmp_path))
+
+    def test_unknown_kind_is_loud(self, tmp_path):
+        with pytest.raises(ValueError, match="unknown transport"):
+            make_transport({"kind": "carrier-pigeon"}, 0, 2, str(tmp_path))
+
+
+# ==================================================== wire-specific safety
+
+class TestTcpWire:
+    def test_torn_and_garbage_frames_are_discarded_whole(self, tmp_path):
+        t0, t1 = _build_wire("tcp", str(tmp_path))
+        try:
+            addr = t0.handshake()
+            # a sender dying mid-frame: header prefix only, then the
+            # connection drops — the receiver must record NOTHING
+            with socket.create_connection(addr, timeout=5) as s:
+                s.sendall(b"RMYB\x00")
+            # a garbage stream (bad magic) is dropped whole too
+            with socket.create_connection(addr, timeout=5) as s:
+                s.sendall(b"NOPE" + b"\x00" * 30)
+            sender = t1.sender(_spec())
+            sender.put([0], _rows(42))
+            sender.seal(epoch=0, publish_done=True)
+            got = list(t0.recv(_spec(), 0, (1,), live=True, timeout=20))
+            assert [(s_, r.tolist()) for s_, r in got] == [(1, [[42]])]
+        finally:
+            t0.close()
+            t1.close()
+
+    def test_spool_is_node_local_not_shared(self, tmp_path):
+        t0, t1 = _build_wire("tcp", str(tmp_path))
+        try:
+            s0 = t0.sender(_spec())
+            s0.put([1], _rows(9))
+            s0._spill()
+            assert os.path.isdir(os.path.join(str(tmp_path), "shard000",
+                                              "_spool", "x"))
+            # no shared exchange directory exists on this wire
+            assert not os.path.exists(os.path.join(str(tmp_path),
+                                                   "exchange"))
+        finally:
+            t0.close()
+            t1.close()
+
+    def test_seal_before_connect_is_loud(self, tmp_path):
+        t0 = make_transport({"kind": "tcp", "host": "127.0.0.1"}, 0, 2,
+                            str(tmp_path))
+        try:
+            s0 = t0.sender(_spec())
+            s0.put([1], _rows(1))
+            with pytest.raises(AssertionError, match="handshake"):
+                s0.seal(epoch=0)
+        finally:
+            t0.close()
+
+
+class TestFsWire:
+    def test_barrier_layout_is_byte_compatible(self, tmp_path):
+        """Barrier-mode fs transport writes EXACTLY the legacy on-disk
+        protocol: epoch-stamped bucket files, no markers, readable by the
+        plain buckets.py reader."""
+        t0, t1 = _build_wire("fs", str(tmp_path))
+        s0 = t0.sender(_spec())
+        s0.put([0, 1], _rows(1, 2))
+        s0.seal(epoch=3)
+        exch = os.path.join(str(tmp_path), "exchange", "x")
+        assert sorted(os.listdir(exch)) == ["e000003_s000_d000.bin",
+                                            "e000003_s000_d001.bin"]
+        (src, rows), = B.iter_incoming(exch, 1, 3, 1)
+        assert src == 0 and rows.tolist() == [[2]]
+
+    def test_pipelined_markers_land_after_data(self, tmp_path):
+        t0, t1 = _build_wire("fs", str(tmp_path))
+        s0 = t0.sender(_spec())
+        s0.put([1], _rows(2))
+        s0.seal(epoch=0, publish_done=True)
+        exch = os.path.join(str(tmp_path), "exchange", "x")
+        names = sorted(os.listdir(exch))
+        assert "e000000_s000_d001.bin" in names
+        assert "e000000_s000_d001.done" in names
+        assert "e000000_s000_d000.done" in names     # empty dst: marker only
+
+
+# =============================================== per-key order, pipelined
+
+class TestPerKeyOrderPipelined:
+    @pytest.mark.parametrize("transport", TRANSPORT_KINDS)
+    def test_del_put_order_survives_pipelined_exchange(self, tmp_path,
+                                                       transport):
+        """The PR 3 sequential-op-log rule (DEL then PUT resurrects, PUT
+        then DEL removes) must hold through the OVERLAPPED exchange on
+        every wire — receivers consume ascending-src even while sources
+        are still producing."""
+        with ShardRuntime(str(tmp_path), 2, mode="inline",
+                          transport=transport, exchange="pipelined") as rt:
+            ht = ShardedDiskHashTable(rt, 1, 1)
+            ks = np.arange(8, dtype=np.uint32).reshape(-1, 1)
+            ht.insert(ks, np.full((8, 1), 10, np.int64))
+            ht.sync()
+            ht.remove(ks[:4])
+            ht.insert(ks[:4], np.full((4, 1), 99, np.int64))
+            ht.insert(ks[4:], np.full((4, 1), 77, np.int64))
+            ht.remove(ks[4:])
+            ht.sync()
+            out, found = ht.lookup(ks)
+            assert found[:4].all() and not found[4:].any()
+            assert (out[:4, 0] == 99).all()
+            assert ht.size() == 4
+
+
+# ===================================================== engine equivalence
+
+def _sorted_levels(wd, n=5, nshards=2, mode="inline", transport="fs",
+                   exchange="barrier", **kw):
+    rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode=mode,
+                      transport=transport, exchange=exchange)
+    try:
+        sizes, vis = breadth_first_search(
+            os.path.join(wd, "bfs"), np.array([[start_code(n)]], np.uint32),
+            GenNextNp(n), width=1, chunk_rows=1 << 10, runtime=rt, **kw)
+        vis.destroy()
+    finally:
+        rt.shutdown()
+    return sizes
+
+
+def _implicit_levels(wd, n=5, nshards=2, mode="inline", transport="fs",
+                     exchange="barrier", **kw):
+    from repro.core import ranking as R
+    total = math.factorial(n)
+    start = int(R.rank_np(np.arange(n)[None, :])[0])
+    rt = ShardRuntime(os.path.join(wd, "rt"), nshards, mode=mode,
+                      transport=transport, exchange=exchange)
+    try:
+        sizes, bits = implicit_bfs(
+            os.path.join(wd, "bfs"), total, [start], NeighborsNp(n),
+            chunk_elems=1 << 5, runtime=rt, **kw)
+        bits.destroy()
+    finally:
+        rt.shutdown()
+    return sizes
+
+
+_ENGINES = {"sorted": _sorted_levels, "implicit": _implicit_levels}
+
+
+class TestEquivalenceInline:
+    """Acceptance sweep: level counts identical to single-process for
+    every transport × exchange × shard count, on both engines."""
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    @pytest.mark.parametrize("exchange", EXCHANGES)
+    @pytest.mark.parametrize("transport", TRANSPORT_KINDS)
+    @pytest.mark.parametrize("nshards", (1, 2, 4))
+    def test_pancake5_levels_match(self, tmp_path, engine, transport,
+                                   exchange, nshards):
+        sizes = _ENGINES[engine](str(tmp_path), nshards=nshards,
+                                 transport=transport, exchange=exchange)
+        assert sizes == PANCAKE5
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    def test_pipelined_budgets_match_barrier_baseline(self, tmp_path,
+                                                      engine):
+        """Overlapping the exchange must not change WHAT work is done:
+        rows sorted and per-shard pass ledgers are identical to the
+        barrier discipline."""
+        budget_keys = ("rows_sorted", "sort_passes", "rw_passes",
+                       "read_passes")
+        extsort.reset_stats()
+        _ENGINES[engine](os.path.join(str(tmp_path), "bar"),
+                         exchange="barrier")
+        barrier = {k: extsort.STATS[k] for k in budget_keys}
+        extsort.reset_stats()
+        _ENGINES[engine](os.path.join(str(tmp_path), "pipe"),
+                         exchange="pipelined")
+        pipelined = {k: extsort.STATS[k] for k in budget_keys}
+        assert pipelined == barrier
+
+
+class TestEquivalenceSpawn:
+    """Real worker processes.  A TCP cell stays always-on (it is the
+    no-shared-scratch acceptance row); the full spawn sweep rides the
+    ROOMY_SHARDS CI leg like the rest of the spawn matrix."""
+
+    def test_tcp_pipelined_spawn_sorted(self, tmp_path):
+        sizes = _sorted_levels(str(tmp_path), nshards=2, mode="spawn",
+                               transport="tcp", exchange="pipelined")
+        assert sizes == PANCAKE5
+
+    @pytest.mark.skipif(ROOMY_SHARDS < 2,
+                        reason="full spawn sweep runs on the ROOMY_SHARDS "
+                               "CI leg")
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    @pytest.mark.parametrize("exchange", EXCHANGES)
+    @pytest.mark.parametrize("transport", ("fs", "tcp"))
+    def test_spawn_sweep(self, tmp_path, engine, transport, exchange):
+        sizes = _ENGINES[engine](str(tmp_path), nshards=ROOMY_SHARDS,
+                                 mode="spawn", transport=transport,
+                                 exchange=exchange)
+        assert sizes == PANCAKE5
+
+
+# ========================================================== config API
+
+def _run_sorted(wd, **kw):
+    sizes, vis = breadth_first_search(
+        wd, np.array([[start_code(5)]], np.uint32), GenNextNp(5),
+        width=1, chunk_rows=1 << 10, **kw)
+    vis.destroy()
+    return sizes
+
+
+class TestConfigValidation:
+    """ONE shared checker: every conflicting cluster setting dies loudly
+    in the config layer, not deep inside an engine."""
+
+    def test_bad_transport_kind(self):
+        with pytest.raises(ValueError, match="transport"):
+            ClusterConfig(transport="smoke-signal").validate()
+
+    def test_bad_exchange(self):
+        with pytest.raises(ValueError, match="exchange"):
+            ClusterConfig(exchange="vibes").validate()
+
+    def test_bad_mode(self):
+        with pytest.raises(ValueError, match="mode"):
+            ClusterConfig(mode="fork").validate()
+
+    def test_nshards_floor(self):
+        with pytest.raises(ValueError, match="nshards"):
+            ClusterConfig(nshards=0).validate()
+
+    def test_loopback_needs_inline(self):
+        with pytest.raises(ValueError, match="loopback"):
+            ClusterConfig(transport="loopback", mode="spawn").validate()
+        ClusterConfig(transport="loopback", mode="inline").validate()
+
+    def test_adopted_runtime_shard_conflict(self, tmp_path):
+        with ShardRuntime(str(tmp_path), 2, mode="inline") as rt:
+            with pytest.raises(ValueError, match="nshards"):
+                ClusterConfig(runtime=rt, nshards=4).validate()
+            ClusterConfig(runtime=rt, nshards=2).validate()   # consistent OK
+
+    def test_adopted_runtime_transport_conflict(self, tmp_path):
+        with ShardRuntime(str(tmp_path), 2, mode="inline",
+                          transport="loopback") as rt:
+            with pytest.raises(ValueError, match="transport"):
+                ClusterConfig(runtime=rt, transport="tcp").validate()
+
+    def test_resume_needs_dir(self):
+        with pytest.raises(ValueError, match="resume"):
+            CheckpointConfig(resume=True).validate()
+
+    def test_checkpoint_every_floor(self):
+        with pytest.raises(ValueError, match="every"):
+            CheckpointConfig(dir="/tmp/x", every=0).validate()
+
+    def test_negative_recovery_budget(self):
+        with pytest.raises(ValueError, match="max_recoveries"):
+            RecoveryConfig(max_recoveries=-1).validate()
+
+    def test_unfused_cannot_shard(self, tmp_path):
+        with pytest.raises(ValueError, match="fused"):
+            _run_sorted(str(tmp_path), fused=False,
+                        cluster=ClusterConfig(nshards=2))
+
+    def test_config_plus_legacy_kwarg_is_loud(self, tmp_path):
+        with pytest.raises(ValueError, match="pick one spelling"):
+            _run_sorted(str(tmp_path), cluster=ClusterConfig(nshards=2),
+                        nshards=2)
+
+    def test_default_exchange_resolves_to_barrier(self):
+        assert ClusterConfig().resolved_exchange() == "barrier"
+        assert not ClusterConfig().sharded
+        # an explicit wire or discipline opts into the cluster runtime
+        assert ClusterConfig(transport="loopback", mode="inline").sharded
+        assert ClusterConfig(exchange="pipelined").sharded
+
+
+class TestDeprecationShim:
+    @pytest.fixture(autouse=True)
+    def _fresh_warnings(self):
+        _reset_deprecation_warnings()
+        yield
+        _reset_deprecation_warnings()
+
+    def test_legacy_kwargs_warn_once_and_run_identically(self, tmp_path):
+        import warnings
+        extsort.reset_stats()
+        new = _run_sorted(os.path.join(str(tmp_path), "new"),
+                          cluster=ClusterConfig(nshards=2, mode="inline"))
+        new_stats = dict(extsort.STATS)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            extsort.reset_stats()
+            old = _run_sorted(os.path.join(str(tmp_path), "old"),
+                              nshards=2, shard_mode="inline")
+            old_stats = dict(extsort.STATS)
+            dep = [x for x in w if issubclass(x.category,
+                                              DeprecationWarning)]
+        assert len(dep) == 1
+        assert "nshards" in str(dep[0].message)
+        assert old == new == PANCAKE5
+        # identical runs, ledger for ledger — the shim maps, never changes
+        assert old_stats == new_stats
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            _run_sorted(os.path.join(str(tmp_path), "old2"),
+                        nshards=2, shard_mode="inline")
+            assert not [x for x in w
+                        if issubclass(x.category, DeprecationWarning)]
+
+    def test_checkpoint_config_equals_legacy_kwargs(self, tmp_path):
+        ck_new = os.path.join(str(tmp_path), "ck_new")
+        ck_old = os.path.join(str(tmp_path), "ck_old")
+        new = _run_sorted(os.path.join(str(tmp_path), "new"),
+                          cluster=ClusterConfig(nshards=2, mode="inline"),
+                          checkpoint=CheckpointConfig(dir=ck_new, every=2),
+                          recovery=RecoveryConfig(max_recoveries=1))
+        old = _run_sorted(os.path.join(str(tmp_path), "old"),
+                          nshards=2, shard_mode="inline",
+                          checkpoint_dir=ck_old, checkpoint_every=2,
+                          max_recoveries=1)
+        assert old == new == PANCAKE5
+        assert sorted(os.listdir(ck_new)) == sorted(os.listdir(ck_old))
+
+    def test_transport_rides_only_the_config_spelling(self, tmp_path):
+        sizes = _run_sorted(
+            str(tmp_path),
+            cluster=ClusterConfig(nshards=2, mode="inline",
+                                  transport="loopback",
+                                  exchange="pipelined"))
+        assert sizes == PANCAKE5
+
+
+# =============================================== kill recovery on the wire
+
+class TestRecoveryOnTcp:
+    """The self-healing layer must survive a wire with no shared scratch:
+    killed workers respawn, re-handshake, and replay to the exact
+    fault-free level counts."""
+
+    @pytest.fixture(autouse=True)
+    def _clean_faults(self):
+        saved = os.environ.pop(faults.ENV_VAR, None)
+        faults.uninstall()
+        extsort.reset_stats()
+        yield
+        faults.uninstall()
+        if saved is None:
+            os.environ.pop(faults.ENV_VAR, None)
+        else:
+            os.environ[faults.ENV_VAR] = saved
+
+    def test_spawn_hard_kill_recovers_on_tcp(self, tmp_path):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:shard=1:level=2"
+        sizes = _sorted_levels(str(tmp_path), nshards=2, mode="spawn",
+                               transport="tcp",
+                               checkpoint_dir=str(tmp_path / "ck"),
+                               max_recoveries=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
+
+    @pytest.mark.parametrize("engine", ("sorted", "implicit"))
+    def test_inline_kill_recovers_on_tcp_pipelined(self, tmp_path, engine):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:shard=1:level=2"
+        sizes = _ENGINES[engine](str(tmp_path), nshards=2, mode="inline",
+                                 transport="tcp", exchange="pipelined",
+                                 checkpoint_dir=str(tmp_path / "ck"),
+                                 max_recoveries=2)
+        assert sizes == PANCAKE5
+        assert extsort.STATS["recoveries"] == 1
+
+    def test_no_checkpoint_still_fails_loud_on_tcp(self, tmp_path):
+        os.environ[faults.ENV_VAR] = "worker_level:kill:level=2"
+        with pytest.raises(ShardFailure, match="no coordinated checkpoint"):
+            _sorted_levels(str(tmp_path), nshards=2, transport="tcp",
+                           max_recoveries=2)
