@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV (the harness contract). Sections:
   disk         Tier-D streaming primitives (external sort, merge, reduce)
   moe          Roomy dispatch vs einsum baseline (8 fake devices)
   lm           per-family train/decode step wall times (smoke configs)
+  serve        distance-oracle serving tier: QPS + p50/p99 under
+               concurrent closed-loop clients at a starved LRU budget
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=("constructs", "pancake", "bfs",
-                                       "disk", "moe", "lm"))
+                                       "disk", "moe", "lm", "serve"))
     ap.add_argument("--pancake-n", type=int, default=7)
     ap.add_argument("--shards", type=int, default=0,
                     help="also benchmark the sharded Tier D runtime with "
@@ -37,6 +39,12 @@ def main() -> None:
         from . import bfs
         return bfs.bench_bfs(args.pancake_n, shards=args.shards)
 
+    def bench_serve_section():
+        # Lazy for the same examples path hack; its own section keeps the
+        # CI gate (--section bfs) and BENCH_baseline.json untouched.
+        from . import serve
+        return serve.bench_serve(args.pancake_n)
+
     sections = {
         "constructs": lambda: constructs.bench_constructs(),
         "pancake": lambda: pancake.bench_pancake(args.pancake_n),
@@ -44,6 +52,7 @@ def main() -> None:
         "disk": lambda: disk_tier.bench_disk(),
         "moe": lambda: moe_dispatch.bench_moe_dispatch(),
         "lm": lambda: lm_step.bench_lm_steps(),
+        "serve": bench_serve_section,
     }
     # Schema: sections always maps to a LIST of row dicts (empty on
     # failure); errors live in a separate map so consumers can iterate

@@ -1,0 +1,177 @@
+"""Distance-oracle serving benchmark: QPS + p50/p99 under concurrent load.
+
+The serving tier's acceptance shape (ISSUE 9 / ROADMAP item 1): publish a
+pancake oracle artifact, set the LRU chunk-cache budget WELL below the
+artifact size (default 20% — every client batch misses somewhere), and
+drive closed-loop client threads issuing batched queries.  Rows report
+
+  queries/s    completed single-rank lookups per wall second, all clients
+  p50/p99 us   per-batch latency percentiles from obs.Histogram buckets
+               (the percentile() satellite — one histogram per client,
+               merged by elementwise addition at the end)
+  cache ...    the exact ``oracle`` namespace counters: hit rate and
+               eviction traffic at the starved budget
+
+and the bench FAILS (raises → run.py books it in the errors map) if the
+exact counters ever show resident cache bytes above the budget — the
+cache contract, pinned by accounting rather than sampling.
+
+The ``codes`` row serves raw mod-3 codes (one cache gather per batch);
+the ``distance`` row serves exact distances via batched greedy descent
+(~diameter gathers per batch); the ``tierJ_gather`` row replays the same
+query stream through the kernels/ops.py bitpack_gather2 ref oracle over
+the packed words, the device-resident analogue of a fully warm cache.
+
+New rows land in their own ``serve`` section: the CI bench gate compares
+section ``bfs`` only, so ``BENCH_baseline.json`` stays byte-identical
+(anyone merging a full sweep sees them as unchecked NOTEs per
+benchmarks/compare.py).
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+import tempfile
+import threading
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+
+from repro.core import obs
+from repro.core.disk import oracle as ORC
+
+from pancake_bits import neighbors_np
+
+
+def _publish(tmp: str, n: int) -> Tuple[str, list]:
+    import repro.core.ranking as R
+    total = math.factorial(n)
+    start = int(R.rank_np(np.arange(n)[None, :])[0])
+    art = os.path.join(tmp, f"oracle{n}")
+    # ~24 chunks so a 20% budget holds only a handful of them.
+    ce = max(4, (-(-total // 24) + 3) // 4 * 4)
+    meta = ORC.publish_oracle(art, total, [start], neighbors_np(n),
+                              chunk_elems=ce,
+                              codec={"space": "pancake", "n": n})
+    return art, meta
+
+
+def _closed_loop(query_fn, total: int, clients: int, batches_per_client: int,
+                 batch: int) -> Tuple[float, obs.Histogram]:
+    """Drive ``clients`` closed-loop threads; returns (wall_s, merged
+    per-batch latency histogram in microseconds)."""
+    hists = [obs.Histogram() for _ in range(clients)]
+    errors: List[BaseException] = []
+
+    def client(ci: int) -> None:
+        rng = np.random.default_rng(1000 + ci)
+        try:
+            for _ in range(batches_per_client):
+                ranks = rng.integers(0, total, batch).astype(np.int64)
+                t0 = time.perf_counter()
+                query_fn(ranks)
+                hists[ci].observe((time.perf_counter() - t0) * 1e6)
+        except BaseException as e:        # surfaced to the caller: a bench
+            errors.append(e)              # thread must never die silently
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    merged = obs.Histogram()
+    for h in hists:
+        for b, c in h.buckets.items():
+            merged.buckets[b] = merged.buckets.get(b, 0) + c
+        merged.count += h.count
+        merged.total += h.total
+    return wall, merged
+
+
+def bench_serve(n: int = 7, clients: int = 4, batch: int = 512,
+                batches_per_client: int = 40,
+                cache_frac: float = 0.20) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    total = math.factorial(n)
+    gen = neighbors_np(n)
+    with tempfile.TemporaryDirectory() as tmp:
+        art, meta = _publish(tmp, n)
+        probe = ORC.DistanceOracle(art, cache_bytes=1 << 30)
+        art_bytes = probe.artifact_bytes
+        probe.close()
+        budget = max(1, int(cache_frac * art_bytes))
+        assert budget < art_bytes // 4, "budget must stay < 25% of artifact"
+
+        for name, shards in (("serve_codes", 1),
+                             ("serve_codes_sh2", 2),
+                             ("serve_distance", 1)):
+            ORC.reset_stats()
+            if shards == 1:
+                orc = ORC.DistanceOracle(art, cache_bytes=budget,
+                                         gen_neighbors=gen)
+            else:
+                orc = ORC.ShardedOracle(art, shards, cache_bytes=budget,
+                                        gen_neighbors=gen)
+            fn = orc.codes if name.startswith("serve_codes") else orc.lookup
+            wall, hist = _closed_loop(fn, total, clients,
+                                      batches_per_client, batch)
+            s = dict(ORC.STATS)
+            if s["resident_peak"] > budget:
+                raise AssertionError(
+                    f"{name}: resident cache bytes peaked at "
+                    f"{s['resident_peak']} > budget {budget} — the LRU "
+                    "contract is broken")
+            nq = clients * batches_per_client * batch
+            qps = nq / wall
+            hm = s["hits"] + s["misses"]
+            derived = (f"{qps:.3g} states/s  p50_us={hist.percentile(50):.3g}"
+                       f" p99_us={hist.percentile(99):.3g}"
+                       f" budget_pct={100 * budget / art_bytes:.0f}"
+                       f" hit_rate={s['hits'] / max(hm, 1):.2f}"
+                       f" evictions={s['evictions']}"
+                       f" peak_bytes={s['resident_peak']}")
+            rows.append((f"{name}_n{n}_c{clients}",
+                         wall / (clients * batches_per_client) * 1e6,
+                         derived))
+            orc.close()
+
+        # Tier J path: same packed words, ref-oracle gather (bit-for-bit
+        # vs the pallas kernel by tests/test_kernels.py).
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        full = ORC.DistanceOracle(art, cache_bytes=1 << 30)
+        raw = np.concatenate([full.cache.get(c)
+                              for c in range(full.n_chunks)])
+        full.close()
+        pad = (-raw.size) % 4
+        words = jnp.asarray(np.frombuffer(
+            np.concatenate([raw, np.zeros(pad, np.uint8)]).tobytes(),
+            dtype="<u4"))
+        sample = np.random.default_rng(7).integers(
+            0, total, batch).astype(np.int64)
+        ops.bitpack_gather2(words, sample, impl="ref")  # compile/warm
+        reps = 20
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ops.bitpack_gather2(words, sample, impl="ref")
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"serve_tierJ_gather_n{n}",
+                     dt * 1e6,
+                     f"{batch / dt:.3g} states/s  batch={batch} "
+                     f"words={words.shape[0]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_serve():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -91,10 +91,28 @@ def sorted_list_levels(n: int, chunk_rows: int = 1 << 14):
     return sizes
 
 
+def _ram_distances(n: int, start_rank: int, total: int) -> np.ndarray:
+    """In-RAM reference BFS distance table (n <= 8 — 8! ranks fit easily);
+    the independent oracle the --publish --check sampling compares against."""
+    gen = neighbors_np(n)
+    dist = np.full(total, -1, np.int64)
+    dist[start_rank] = 0
+    frontier = np.asarray([start_rank], np.int64)
+    d = 0
+    while frontier.size:
+        nb = np.unique(gen(frontier).reshape(-1))
+        nb = nb[dist[nb] < 0]
+        d += 1
+        dist[nb] = d
+        frontier = nb
+    return dist
+
+
 def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         shard_mode: str = "spawn", checkpoint_dir=None,
         checkpoint_every: int = 1, resume: bool = False, stop_after=None,
-        chaos=None, trace_path=None, transport: str = "fs", exchange=None):
+        chaos=None, trace_path=None, transport: str = "fs", exchange=None,
+        publish_dir=None):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
@@ -180,6 +198,22 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
     print(f"diameter (pancake number): {len(sizes) - 1}")
     print(f"{total / dt:.0f} states/s ({dt:.2f}s)  {io_line}")
 
+    if publish_dir is not None:
+        from repro.core.disk.oracle import publish_oracle
+        # ~16 chunks regardless of n so an LRU budget below the artifact
+        # size actually exercises eviction (chunk size must divide by 4).
+        ce = max(4, (-(-total // 16) + 3) // 4 * 4)
+        meta = publish_oracle(
+            publish_dir, total, [start_rank], neighbors_np(n),
+            level_sizes=sizes, chunk_elems=ce,
+            codec={"space": "pancake", "n": n,
+                   "ranking": "myrvold-ruskey"})
+        print(f"published distance oracle v{meta['version']:06d} -> "
+              f"{publish_dir} ({meta['n_chunks']} chunks, "
+              f"diameter {len(meta['level_sizes']) - 1}; "
+              "serve it with repro.core.disk.DistanceOracle — "
+              "docs/serving.md)")
+
     if check:
         if shards > 1:
             # Sharded vs single-shard: the distribution must not move a
@@ -195,6 +229,28 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
             want = sorted_list_levels(n)
             assert sizes == want, (sizes, want)
             print("check: matches sorted-list BFS level counts exactly")
+        if publish_dir is not None:
+            from repro.core.disk.oracle import DistanceOracle
+            gen = neighbors_np(n)
+            with DistanceOracle(publish_dir, cache_bytes=1 << 16,
+                                gen_neighbors=gen) as orc:
+                assert orc.level_sizes == sizes, \
+                    "published histogram drifted from the search's"
+                assert n <= 8, "--publish --check reference BFS needs n <= 8"
+                ref = _ram_distances(n, start_rank, total)
+                hist = np.bincount(ref[ref >= 0]).tolist()
+                assert hist == sizes, (hist, sizes)
+                if total <= math.factorial(7):
+                    sample = np.arange(total, dtype=np.int64)
+                else:
+                    sample = np.random.default_rng(0).choice(
+                        total, 4096, replace=False).astype(np.int64)
+                got = orc.lookup(sample)
+                assert (got == ref[sample]).all(), \
+                    "oracle distances disagree with the reference BFS"
+            print(f"check: oracle distances match the reference BFS on "
+                  f"{sample.size} sampled ranks (histogram matches the "
+                  "engine level sets)")
 
 
 def main():
@@ -239,6 +295,12 @@ def main():
                          "transient I/O flakes, plus a real worker kill "
                          "when --shards > 1 — the search must self-heal "
                          "to the exact fault-free level counts")
+    ap.add_argument("--publish", default=None, metavar="DIR",
+                    help="after the search completes, seal it as an "
+                         "immutable versioned distance-oracle artifact "
+                         "under DIR (docs/serving.md); with --check the "
+                         "published oracle's distances are verified "
+                         "against an independent reference BFS")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a structured JSONL trace of the run to "
                          "PATH and print the per-level report at exit "
@@ -257,10 +319,12 @@ def main():
         "--check compares COMPLETE searches; drop --stop-after"
     assert args.chaos is None or args.tier == "disk", \
         "--chaos is a disk-tier (Tier D) feature"
+    assert not (args.publish and args.stop_after is not None), \
+        "--publish seals COMPLETE searches; drop --stop-after"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
         args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
         args.resume, args.stop_after, args.chaos, args.trace,
-        args.transport, args.exchange)
+        args.transport, args.exchange, args.publish)
 
 
 if __name__ == "__main__":

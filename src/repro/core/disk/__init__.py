@@ -19,6 +19,9 @@ config API, the sharded runtime, and the transport extension point:
   transport    Transport, make_transport, TRANSPORT_KINDS
                (pluggable bucket wire: "fs", "tcp", "loopback")
   checkpoint   SearchCheckpoint, CheckpointError
+  serving      publish_oracle, DistanceOracle, ShardedOracle, OracleError
+               (docs/serving.md — sealed read-only artifacts + batched
+               query serving over an LRU chunk cache)
   submodules   faults (fault injection), trace (run traces), extsort,
                buckets, ...  — importable, but their internals
                (``_w_*`` worker commands, owner-map helpers) are
@@ -46,6 +49,8 @@ from .dlist import DiskList
 from .extsort import (MembershipProbe, external_sort, merge_difference,
                       row_keys, sort_rows, stream_dedupe)
 from .lsm import SortedRunSet
+from .oracle import (DistanceOracle, OracleError, ShardedOracle,
+                     publish_oracle)
 from .passes import PassPlan
 from .store import ChunkStore
 from .transport import TRANSPORT_KINDS, Transport, make_transport
@@ -53,11 +58,12 @@ from .transport import TRANSPORT_KINDS, Transport, make_transport
 __all__ = [
     "CheckpointConfig", "CheckpointError", "ChunkStore", "ClusterConfig",
     "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
-    "MembershipProbe", "PassPlan", "RecoveryConfig", "SearchCheckpoint",
-    "ShardFailure", "ShardRuntime", "ShardedDiskBitArray",
-    "ShardedDiskHashTable", "ShardedDiskList", "SortedRunSet",
-    "TRANSPORT_KINDS", "Transport", "WorkerLost", "breadth_first_search",
-    "external_sort", "faults", "implicit_bfs", "level_step",
-    "make_transport", "merge_difference", "row_keys", "sharded_bfs",
-    "sharded_implicit_bfs", "sort_rows", "stream_dedupe",
+    "DistanceOracle", "MembershipProbe", "OracleError", "PassPlan",
+    "RecoveryConfig", "SearchCheckpoint", "ShardFailure", "ShardRuntime",
+    "ShardedDiskBitArray", "ShardedDiskHashTable", "ShardedDiskList",
+    "ShardedOracle", "SortedRunSet", "TRANSPORT_KINDS", "Transport",
+    "WorkerLost", "breadth_first_search", "external_sort", "faults",
+    "implicit_bfs", "level_step", "make_transport", "merge_difference",
+    "publish_oracle", "row_keys", "sharded_bfs", "sharded_implicit_bfs",
+    "sort_rows", "stream_dedupe",
 ]

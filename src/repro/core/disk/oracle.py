@@ -1,0 +1,707 @@
+"""Distance-oracle serving tier: sealed artifacts + batched query server.
+
+The paper's flagship computations end with a perfect distance table — the
+finished 2-bit array — which the search machinery then throws away.  This
+module turns "search completes" into "queries served": a completed
+implicit-BFS run is *published* as an immutable, versioned, checksummed
+artifact, and a read-only :class:`DistanceOracle` serves batched
+``rank → distance`` lookups (and path reconstruction) over it through an
+LRU chunk cache whose budget can be a small fraction of the artifact.
+
+Why publishing re-labels
+------------------------
+``implicit_bfs`` finishes with every reached state at ``DONE`` — distance
+parity is not recoverable from the search array; only ``level_sizes``
+survives.  ``publish_oracle`` therefore runs a **mod-3 labeling pass**
+(the classic two-bit BFS encoding from Cooperman–Finkelstein / Korf used
+by the frontier searches the paper cites): code 0 = unreached, code
+``(d % 3) + 1`` = reached at distance ``d``.  Marks only ever land on
+UNSEEN cells (the ``apply`` hook), so labels are exact; the per-level
+newly-marked counts are compared against the completed search's
+``level_sizes`` — publishing *seals a finished run*, it never invents
+one.  Because three codes cycle, level ``d`` expansion also re-expands
+distance ``d-3`` states whose chunks carry fresh marks; their neighbors
+are all labeled already, so the duplicate marks absorb harmlessly — a
+bounded CPU tax on the one-time publish, never a correctness issue.
+
+Artifact layout (mirrors ``checkpoint.py``'s publish discipline)::
+
+    <root>/ORACLE              manifest: {"format", "version", "meta_sha256"}
+    <root>/v000001/META.json   format, n_states, chunking, start ranks,
+                               level_sizes, codec params, owner-function
+                               goldens, per-chunk sha256 fingerprints
+    <root>/v000001/b000000.npy packed 2-bit code chunks (DiskBitArray layout)
+
+Staging (``v*.tmp`` → ``os.rename`` seal → manifest ``.tmp`` +
+``os.replace``) makes every step atomic; a crash leaves either the old
+version adoptable or the new one sealed.  Versions are IMMUTABLE:
+re-publishing bumps the version and repoints the manifest; older sealed
+versions remain readable until manually removed.  Adoption rules match
+``SearchCheckpoint.latest``: a missing manifest falls back to the newest
+sealed version with a valid META; a manifest naming a missing/torn
+version, a META whose sha256 disagrees with the manifest, a format
+mismatch, or a chunk whose sha256 disagrees with META all raise
+:class:`OracleError` — the oracle fails loudly, it never serves wrong
+data.
+
+Exact distances from mod-3 codes: **greedy descent**.  A walker at code
+``c`` holding distance ``d ≡ c-1 (mod 3)`` moves to any neighbor with
+code ``((c - 2) % 3) + 1`` — neighbor distances differ from ``d`` by at
+most 1 (this requires the neighbor relation to be SYMMETRIC, true for
+the involutive pancake/Cayley generators), so a neighbor at ``d-1 mod 3``
+is at exactly ``d - 1``.  Steps until a start state = the distance; the
+visited ranks = the path.  Descent is batched: one ``gen_neighbors`` call
+and one batched code gather advance every active walker per step.
+
+This module must stay importable without jax (the disk tier's spawn
+workers import it); neighbor generators are caller-supplied callables
+``(m,) int64 ranks → (m, deg) int64`` — e.g. ``examples/pancake_bits
+.neighbors_np(n)``.  Cache accounting lives in the ``oracle`` obs
+namespace (exact, thread-locked); a search that never touches this
+module books nothing there.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from collections import OrderedDict
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .. import obs
+from . import faults
+from .bitarray import UNSEEN, VALS_PER_BYTE, DiskBitArray
+from .buckets import block_owner_np
+from .passes import PassPlan
+
+__all__ = ["OracleError", "DistanceOracle", "ShardedOracle",
+           "publish_oracle", "label_distances_mod3", "reset_stats", "STATS"]
+
+MANIFEST = "ORACLE"
+META = "META.json"
+FORMAT = 1
+_VDIR_RE = re.compile(r"^v(\d{6,})$")
+# Owner-function golden fingerprints are pinned for these shard counts at
+# publish time; ShardedOracle recomputes and compares at open (an
+# ownership disagreement between publisher and server is silent
+# misrouting — same rule as checkpoint resume).
+_GOLDEN_NSHARDS = (1, 2, 4, 8)
+
+# Exact serving-side accounting (docs/serving.md "Cache contract").
+# resident_bytes is a live gauge summed over every open cache; the rest
+# are monotonic.  All mutations hold _STATS_LOCK so concurrent readers
+# keep the counts exact — the serve bench pins resident_peak <= budget.
+STATS = obs.counters("oracle", {
+    "lookups": 0, "batches": 0, "hits": 0, "misses": 0,
+    "chunk_loads": 0, "evictions": 0, "bytes_read": 0,
+    "resident_bytes": 0, "resident_peak": 0,
+})
+_STATS_LOCK = threading.Lock()
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+class OracleError(RuntimeError):
+    """Artifact missing, torn, tampered, or structurally incompatible."""
+
+
+def _code_of(level: int) -> int:
+    return (level % 3) + 1
+
+
+def _sha256_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+# ===================================================== mod-3 labeling pass
+def label_distances_mod3(bits: DiskBitArray, start: np.ndarray,
+                         gen_neighbors: Callable[[np.ndarray], np.ndarray],
+                         expand_batch: int = 1 << 15,
+                         expect_level_sizes: Optional[Sequence[int]] = None,
+                         ) -> List[int]:
+    """BFS over ``bits`` writing code ``(d % 3) + 1`` at every reached
+    state; returns the per-level newly-labeled counts.
+
+    One fused read-write pass per level, same machinery as
+    ``implicit_bfs``: the pass applies the queued level-``d`` marks (the
+    ``apply`` hook counts how many landed on UNSEEN — states at ``d-3``
+    share the code, so scanning codes could not recover the count) and
+    its piggybacked read stage expands the freshly-coded states, queueing
+    level-``d+1`` marks for the next pass.  ``dirty_only`` passes visit
+    only chunks holding queued marks: every distance-``d`` state lives in
+    such a chunk (its mark is in the log), and skipped chunks can only
+    contain already-labeled states whose re-expansion would be wasted.
+
+    ``expect_level_sizes``: the completed search's histogram; any
+    per-level disagreement raises :class:`OracleError` — publishing only
+    seals runs it can reproduce exactly.
+    """
+    start = np.asarray(start, np.int64).reshape(-1)
+    if start.size == 0:
+        raise OracleError("empty start set")
+    newly = 0
+
+    def counting_apply(old: np.ndarray, agg: np.ndarray) -> np.ndarray:
+        nonlocal newly
+        fresh = old == UNSEEN
+        newly += int(np.count_nonzero(fresh))
+        return np.where(fresh, agg, old)
+
+    def make_expand(code_cur: int, code_next: int):
+        def expand(chunk_start: int, vals: np.ndarray) -> None:
+            (pos,) = np.nonzero(vals == code_cur)
+            for lo in range(0, pos.shape[0], expand_batch):
+                idx = chunk_start + pos[lo:lo + expand_batch].astype(np.int64)
+                nbrs = np.asarray(gen_neighbors(idx), np.int64).reshape(-1)
+                bits.update(nbrs, np.full(nbrs.shape, code_next, np.uint8))
+        return expand
+
+    level_sizes: List[int] = []
+    bits.update(start, np.full(start.shape, _code_of(0), np.uint8))
+    level = 0
+    while True:
+        newly = 0
+        plan = PassPlan("oracle-label", dirty_only=True).reads(
+            make_expand(_code_of(level), _code_of(level + 1)))
+        # All marks queued for one pass carry the same code — first wins.
+        bits.run_pass(plan, combine=lambda p, q: p, apply=counting_apply)
+        if newly == 0:
+            break
+        if expect_level_sizes is not None:
+            if (level >= len(expect_level_sizes)
+                    or newly != int(expect_level_sizes[level])):
+                want = (int(expect_level_sizes[level])
+                        if level < len(expect_level_sizes) else "<end>")
+                raise OracleError(
+                    f"labeling level {level} marked {newly} states but the "
+                    f"completed search recorded {want} — refusing to "
+                    "publish a run the labeler cannot reproduce")
+        level_sizes.append(newly)
+        level += 1
+        if level > bits.n:
+            raise OracleError("labeling did not terminate (neighbor "
+                              "function not symmetric/closed?)")
+    if (expect_level_sizes is not None
+            and len(level_sizes) != len(expect_level_sizes)):
+        raise OracleError(
+            f"labeling found {len(level_sizes)} levels but the completed "
+            f"search recorded {len(expect_level_sizes)}")
+    return level_sizes
+
+
+# ================================================================ publish
+def _sealed_versions(root: str) -> List[int]:
+    out = []
+    for fn in os.listdir(root):
+        m = _VDIR_RE.match(fn)
+        if m and os.path.isdir(os.path.join(root, fn)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def publish_oracle(dst: str, n_states: int, start: np.ndarray,
+                   gen_neighbors: Callable[[np.ndarray], np.ndarray], *,
+                   level_sizes: Optional[Sequence[int]] = None,
+                   chunk_elems: int = 1 << 22,
+                   codec: Optional[dict] = None,
+                   workdir: Optional[str] = None,
+                   expand_batch: int = 1 << 15,
+                   log_buf_rows: int = 1 << 20) -> dict:
+    """Seal a completed search as an immutable versioned oracle artifact.
+
+    Runs the mod-3 labeling BFS in a scratch :class:`DiskBitArray`
+    (``workdir`` or a temp dir), validates per-level counts against
+    ``level_sizes`` (pass the completed run's histogram — e.g. the
+    return of ``implicit_bfs`` or a checkpoint META's ``sizes``), then
+    publishes under ``dst`` with the checkpoint layer's atomic-rename
+    discipline.  Returns the sealed META dict (includes ``version``).
+
+    ``codec`` is an opaque dict recorded in META describing the rank
+    codec (e.g. ``{"space": "pancake", "n": 9, "ranking":
+    "myrvold-ruskey"}``) so a consumer can reconstruct the right
+    ``gen_neighbors`` / unrank for path queries.
+    """
+    n_states = int(n_states)
+    start = np.asarray(start, np.int64).reshape(-1)
+    os.makedirs(dst, exist_ok=True)
+    scratch = workdir or tempfile.mkdtemp(prefix="oracle_label_")
+    own_scratch = workdir is None
+    try:
+        bits = DiskBitArray(scratch, n_states, chunk_elems=chunk_elems,
+                            name="oracle_label", log_buf_rows=log_buf_rows)
+        sizes = label_distances_mod3(
+            bits, start, gen_neighbors, expand_batch=expand_batch,
+            expect_level_sizes=level_sizes)
+
+        version = (_sealed_versions(dst) or [0])[-1] + 1
+        vdir = os.path.join(dst, f"v{version:06d}")
+        stage = vdir + ".tmp"
+        shutil.rmtree(stage, ignore_errors=True)
+        os.makedirs(stage)
+        chunk_sha = {}
+        for c in range(bits.n_chunks):
+            packed = np.load(bits._chunk_path(c))
+            chunk_sha[str(c)] = _sha256_bytes(packed.tobytes())
+            np.save(os.path.join(stage, f"b{c:06d}.npy"), packed)
+        probe = np.linspace(0, n_states - 1,
+                            num=min(9, n_states)).astype(np.int64)
+        meta = {
+            "format": FORMAT,
+            "kind": "distance_oracle_mod3",
+            "version": version,
+            "n_states": n_states,
+            "chunk_elems": int(chunk_elems),
+            "n_chunks": bits.n_chunks,
+            "start": start.tolist(),
+            "level_sizes": [int(s) for s in sizes],
+            "codec": dict(codec or {}),
+            "chunk_sha256": chunk_sha,
+            "owner_probe": probe.tolist(),
+            "owner_golden": {
+                str(ns): block_owner_np(probe, n_states, ns).tolist()
+                for ns in _GOLDEN_NSHARDS},
+        }
+        meta_blob = json.dumps(meta, sort_keys=True).encode()
+        # META lands last inside the stage: a sealed dir always carries it.
+        with open(os.path.join(stage, META), "wb") as f:
+            f.write(meta_blob)
+        faults.retry_io(
+            "oracle_publish",
+            lambda: os.path.isdir(stage) and os.rename(stage, vdir),
+            version=version)                            # atomic seal
+
+        def _point_manifest() -> None:
+            tmp = os.path.join(dst, MANIFEST + ".tmp")
+            with open(tmp, "w") as f:
+                json.dump({"format": FORMAT, "version": version,
+                           "meta_sha256": _sha256_bytes(meta_blob)}, f)
+            os.replace(tmp, os.path.join(dst, MANIFEST))
+        faults.retry_io("oracle_publish", _point_manifest, version=version)
+        # Versions are immutable — only stray staging dirs are GC'd.
+        for fn in os.listdir(dst):
+            if fn.endswith(".tmp") and fn != MANIFEST + ".tmp":
+                shutil.rmtree(os.path.join(dst, fn), ignore_errors=True)
+        return meta
+    finally:
+        if own_scratch:
+            shutil.rmtree(scratch, ignore_errors=True)
+        else:
+            shutil.rmtree(os.path.join(scratch, "oracle_label"),
+                          ignore_errors=True)
+
+
+# ============================================================== LRU cache
+class LRUChunkCache:
+    """Byte-budgeted LRU over loaded chunk arrays, exact accounting.
+
+    ``get`` serves hits by reference (eviction only drops the cache's
+    reference — a reader holding the array keeps it alive, so concurrent
+    readers under eviction pressure never see freed memory).  A chunk
+    larger than the whole budget is served UNCACHED rather than evicting
+    everything for a doomed insert.  The loader runs outside the entry
+    lock so distinct chunks load in parallel; a lost race books its load
+    but keeps the winner's entry.
+    """
+
+    def __init__(self, budget_bytes: int,
+                 loader: Callable[[int], np.ndarray]):
+        self.budget = int(budget_bytes)
+        self._loader = loader
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.resident = 0
+
+    def keys(self) -> List[int]:
+        """Cached chunk ids, LRU first (test hook)."""
+        with self._lock:
+            return list(self._entries)
+
+    def get(self, key: int) -> np.ndarray:
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is not None:
+                self._entries.move_to_end(key)
+                with _STATS_LOCK:
+                    STATS["hits"] += 1
+                return arr
+        with _STATS_LOCK:
+            STATS["misses"] += 1
+        arr = self._loader(key)
+        with self._lock:
+            with _STATS_LOCK:
+                STATS["chunk_loads"] += 1
+                STATS["bytes_read"] += arr.nbytes
+            have = self._entries.get(key)
+            if have is not None:
+                self._entries.move_to_end(key)
+                return have
+            while self._entries and self.resident + arr.nbytes > self.budget:
+                _, old = self._entries.popitem(last=False)
+                self.resident -= old.nbytes
+                with _STATS_LOCK:
+                    STATS["evictions"] += 1
+                    STATS["resident_bytes"] -= old.nbytes
+            if arr.nbytes <= self.budget:
+                self._entries[key] = arr
+                self.resident += arr.nbytes
+                with _STATS_LOCK:
+                    STATS["resident_bytes"] += arr.nbytes
+                    STATS["resident_peak"] = max(STATS["resident_peak"],
+                                                 STATS["resident_bytes"])
+            return arr
+
+    def close(self) -> None:
+        with self._lock:
+            freed = self.resident
+            self._entries.clear()
+            self.resident = 0
+        if freed:
+            with _STATS_LOCK:
+                STATS["resident_bytes"] -= freed
+
+
+# ======================================================== batched descent
+def _descend(codes_fn: Callable[[np.ndarray], np.ndarray],
+             gen_neighbors: Callable[[np.ndarray], np.ndarray],
+             ranks: np.ndarray, start: np.ndarray, max_dist: int,
+             record: bool) -> Tuple[np.ndarray, Optional[List[List[int]]]]:
+    """Batched greedy descent: exact distances (and optionally paths).
+
+    Every iteration advances ALL active walkers one step toward the start
+    set with one ``gen_neighbors`` call and one batched code gather —
+    total gathers = max distance in the batch, not sum of distances.
+    Unreached ranks (code 0) get distance -1 and a path of [rank].
+    """
+    ranks = np.asarray(ranks, np.int64).reshape(-1)
+    dist = np.full(ranks.shape, -1, np.int64)
+    chains: Optional[List[List[int]]] = (
+        [[int(r)] for r in ranks] if record else None)
+    cur = ranks.copy()
+    code = codes_fn(cur)
+    active = code != 0
+    at_start = active & np.isin(cur, start)
+    dist[at_start] = 0
+    active &= ~at_start
+    steps = 0
+    while active.any():
+        steps += 1
+        if steps > max_dist:
+            raise OracleError(
+                f"greedy descent exceeded the published diameter "
+                f"{max_dist} — artifact corrupt or neighbor function "
+                "mismatched")
+        (pos,) = np.nonzero(active)
+        want = ((code[pos].astype(np.int64) - 2) % 3 + 1).astype(np.uint8)
+        nb = np.asarray(gen_neighbors(cur[pos]), np.int64)
+        nb = nb.reshape(pos.shape[0], -1)
+        ncode = codes_fn(nb.reshape(-1)).reshape(nb.shape)
+        hit = ncode == want[:, None]
+        if not hit.any(axis=1).all():
+            raise OracleError(
+                "greedy descent found a state with no neighbor one level "
+                "closer — artifact corrupt or neighbor function mismatched")
+        pick = np.argmax(hit, axis=1)
+        rows = np.arange(pos.shape[0])
+        cur[pos] = nb[rows, pick]
+        code[pos] = ncode[rows, pick]
+        if chains is not None:
+            for p in pos:
+                chains[p].append(int(cur[p]))
+        arrived = np.isin(cur[pos], start)
+        dist[pos[arrived]] = steps
+        active[pos[arrived]] = False
+    return dist, chains
+
+
+# ========================================================== DistanceOracle
+class DistanceOracle:
+    """Read-only batched ``rank → distance`` server over a sealed artifact.
+
+    Opens the manifest-designated version (crash-adopting the newest
+    sealed version when the manifest is missing, exactly like
+    ``SearchCheckpoint.latest``), verifies the META fingerprint, and
+    serves through an :class:`LRUChunkCache` of ``cache_bytes``.  Chunks
+    are adopted ``DiskBitArray(init_chunks=False)``-style: opened
+    ``np.load(mmap_mode="r")``, materialized once, sha256-verified
+    against META on first load — a tampered chunk raises
+    :class:`OracleError` before a single value is served.
+
+    ``gen_neighbors`` (``(m,) → (m, deg)`` ranks, symmetric relation) is
+    only needed for :meth:`distance` / :meth:`paths`; :meth:`codes`
+    serves raw mod-3 codes without it.
+    """
+
+    def __init__(self, root: str, cache_bytes: int = 1 << 20,
+                 version: Optional[int] = None,
+                 gen_neighbors: Optional[Callable] = None):
+        self.root = root
+        self.gen_neighbors = gen_neighbors
+        if not os.path.isdir(root):
+            raise OracleError(f"no oracle artifact at {root}")
+        version, want_sha = self._resolve_version(version)
+        self.version = version
+        self._vdir = os.path.join(root, f"v{version:06d}")
+        meta_path = os.path.join(self._vdir, META)
+        try:
+            with open(meta_path, "rb") as f:
+                blob = f.read()
+            meta = json.loads(blob)
+        except (OSError, ValueError) as e:
+            raise OracleError(f"unreadable oracle META {meta_path}: {e}"
+                              ) from None
+        if want_sha is not None and _sha256_bytes(blob) != want_sha:
+            raise OracleError(
+                f"META fingerprint mismatch for v{version:06d} — manifest "
+                "says someone rewrote the sealed META (tamper?)")
+        if meta.get("format") != FORMAT:
+            raise OracleError(
+                f"oracle format {meta.get('format')!r} != supported "
+                f"{FORMAT} — refusing to guess at the layout")
+        if int(meta.get("version", -1)) != version:
+            raise OracleError(
+                f"sealed dir v{version:06d} carries META version "
+                f"{meta.get('version')} — manifest/artifact mismatch")
+        self.meta = meta
+        self.n_states = int(meta["n_states"])
+        self.chunk_elems = int(meta["chunk_elems"])
+        self.n_chunks = int(meta["n_chunks"])
+        self.level_sizes = [int(s) for s in meta["level_sizes"]]
+        self.max_dist = len(self.level_sizes) - 1
+        self.start = np.asarray(meta["start"], np.int64)
+        self.cache = LRUChunkCache(cache_bytes, self._load_chunk)
+
+    # --------------------------------------------------------- open rules
+    def _resolve_version(self, version: Optional[int]
+                         ) -> Tuple[int, Optional[str]]:
+        sealed = _sealed_versions(self.root)
+        mpath = os.path.join(self.root, MANIFEST)
+        manifest = None
+        if os.path.exists(mpath):
+            try:
+                with open(mpath) as f:
+                    manifest = json.load(f)
+                int(manifest["version"])
+            except (OSError, ValueError, KeyError, TypeError):
+                raise OracleError(
+                    f"corrupt oracle manifest {mpath}") from None
+            if manifest.get("format") != FORMAT:
+                raise OracleError(
+                    f"oracle manifest format {manifest.get('format')!r} != "
+                    f"supported {FORMAT}")
+        if version is None:
+            if manifest is not None:
+                version = int(manifest["version"])
+                if version not in sealed:
+                    raise OracleError(
+                        f"manifest names v{version:06d} but no such sealed "
+                        "version exists (torn publish / rollback?) — "
+                        "refusing to guess")
+            elif sealed:
+                version = sealed[-1]    # crash between seal and manifest
+            else:
+                raise OracleError(f"no sealed oracle version under "
+                                  f"{self.root}")
+        elif version not in sealed:
+            raise OracleError(f"requested v{version:06d} is not sealed "
+                              f"under {self.root} (have {sealed})")
+        want_sha = None
+        if manifest is not None and int(manifest["version"]) == version:
+            want_sha = manifest.get("meta_sha256")
+        return version, want_sha
+
+    def _chunk_rows(self, c: int) -> int:
+        return min(self.chunk_elems, self.n_states - c * self.chunk_elems)
+
+    def _load_chunk(self, c: int) -> np.ndarray:
+        path = os.path.join(self._vdir, f"b{c:06d}.npy")
+        try:
+            packed = np.ascontiguousarray(np.load(path, mmap_mode="r"))
+        except (OSError, ValueError) as e:
+            raise OracleError(f"unreadable oracle chunk {path}: {e}"
+                              ) from None
+        rows = -(-self._chunk_rows(c) // VALS_PER_BYTE)
+        if packed.dtype != np.uint8 or packed.shape != (rows,):
+            raise OracleError(
+                f"oracle chunk {path} has shape {packed.shape} "
+                f"{packed.dtype}, expected ({rows},) uint8")
+        want = self.meta["chunk_sha256"].get(str(c))
+        if _sha256_bytes(packed.tobytes()) != want:
+            raise OracleError(
+                f"oracle chunk {path} fails its sha256 fingerprint — "
+                "tampered or torn; refusing to serve from it")
+        return packed
+
+    @property
+    def artifact_bytes(self) -> int:
+        """Total packed chunk bytes of the open version."""
+        return sum(-(-self._chunk_rows(c) // VALS_PER_BYTE)
+                   for c in range(self.n_chunks))
+
+    # ------------------------------------------------------------ serving
+    def codes(self, ranks: np.ndarray) -> np.ndarray:
+        """Batched raw mod-3 codes (0 = unreached) for int64 ranks."""
+        idx = np.asarray(ranks, np.int64).reshape(-1)
+        with _STATS_LOCK:
+            STATS["lookups"] += int(idx.size)
+            STATS["batches"] += 1
+        if idx.size == 0:
+            return np.zeros(0, np.uint8)
+        if idx.min() < 0 or idx.max() >= self.n_states:
+            raise ValueError(
+                f"rank out of range [0, {self.n_states}) in oracle query")
+        out = np.empty(idx.shape, np.uint8)
+        chunk_of = idx // self.chunk_elems
+        order = np.argsort(chunk_of, kind="stable")
+        bounds = np.searchsorted(chunk_of[order],
+                                 np.arange(self.n_chunks + 1))
+        for c in np.unique(chunk_of):
+            sel = order[bounds[c]:bounds[c + 1]]
+            local = idx[sel] - c * self.chunk_elems
+            packed = self.cache.get(int(c))
+            out[sel] = ((packed[local // VALS_PER_BYTE]
+                         >> (2 * (local % VALS_PER_BYTE)).astype(np.uint8))
+                        & 3)
+        return out
+
+    def distance(self, ranks: np.ndarray,
+                 gen_neighbors: Optional[Callable] = None) -> np.ndarray:
+        """Batched EXACT distances via greedy descent (-1 = unreached)."""
+        gen = gen_neighbors or self.gen_neighbors
+        if gen is None:
+            raise ValueError("distance queries need gen_neighbors "
+                             "(constructor or argument)")
+        dist, _ = _descend(self.codes, gen, ranks, self.start,
+                           self.max_dist, record=False)
+        return dist
+
+    # The serving-tier entry point name; distance IS the lookup product.
+    lookup = distance
+
+    def paths(self, ranks: np.ndarray,
+              gen_neighbors: Optional[Callable] = None
+              ) -> Tuple[np.ndarray, List[np.ndarray]]:
+        """Batched path reconstruction: ``(distances, [rank chains])``.
+
+        Each chain runs query rank → ... → a start rank, consecutive
+        entries neighbors, length ``distance + 1``; unreached ranks get
+        distance -1 and the single-entry chain ``[rank]``.
+        """
+        gen = gen_neighbors or self.gen_neighbors
+        if gen is None:
+            raise ValueError("path queries need gen_neighbors")
+        dist, chains = _descend(self.codes, gen, ranks, self.start,
+                                self.max_dist, record=True)
+        return dist, [np.asarray(ch, np.int64) for ch in chains]
+
+    def path(self, rank: int,
+             gen_neighbors: Optional[Callable] = None) -> np.ndarray:
+        return self.paths(np.asarray([rank]), gen_neighbors)[1][0]
+
+    def close(self) -> None:
+        self.cache.close()
+
+    def __enter__(self) -> "DistanceOracle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# =========================================================== ShardedOracle
+class ShardedOracle:
+    """Shard-aware front: bins query batches by ``block_owner_np`` and
+    fans them to per-shard :class:`DistanceOracle` caches.
+
+    Every shard opens the same sealed artifact; sharding partitions CACHE
+    LOCALITY, not data — shard ``s``'s cache warms only the chunks of its
+    block range (a chunk straddling a shard boundary may warm in two
+    caches; block ranges and chunks are both contiguous so at most two).
+    The per-shard budget is ``cache_bytes // nshards``, so total resident
+    bytes stay under ``cache_bytes``.  Opening validates the published
+    owner-function goldens for ``nshards`` when META pinned them —
+    publisher/server ownership drift is misrouting, and fails loudly.
+    """
+
+    def __init__(self, root: str, nshards: int, cache_bytes: int = 1 << 20,
+                 version: Optional[int] = None,
+                 gen_neighbors: Optional[Callable] = None):
+        if nshards < 1:
+            raise ValueError("nshards must be >= 1")
+        self.nshards = int(nshards)
+        self.gen_neighbors = gen_neighbors
+        per = max(1, int(cache_bytes) // self.nshards)
+        self.shards = [DistanceOracle(root, cache_bytes=per, version=version,
+                                      gen_neighbors=gen_neighbors)
+                       for _ in range(self.nshards)]
+        meta = self.shards[0].meta
+        self.n_states = int(meta["n_states"])
+        self.start = self.shards[0].start
+        self.max_dist = self.shards[0].max_dist
+        self.level_sizes = self.shards[0].level_sizes
+        golden = meta.get("owner_golden", {}).get(str(self.nshards))
+        if golden is not None:
+            probe = np.asarray(meta["owner_probe"], np.int64)
+            got = block_owner_np(probe, self.n_states,
+                                 self.nshards).tolist()
+            if got != golden:
+                raise OracleError(
+                    f"block owner function for nshards={self.nshards} "
+                    f"disagrees with the published golden values "
+                    f"({got} != {golden}) — routing would silently "
+                    "misdirect queries")
+
+    def codes(self, ranks: np.ndarray) -> np.ndarray:
+        idx = np.asarray(ranks, np.int64).reshape(-1)
+        if idx.size == 0:
+            return np.zeros(0, np.uint8)
+        # buckets.py bin-by-dest: stable argsort by owner, contiguous
+        # slices per shard, scatter results back in input order.
+        own = block_owner_np(idx, self.n_states, self.nshards)
+        order = np.argsort(own, kind="stable")
+        bounds = np.searchsorted(own[order], np.arange(self.nshards + 1))
+        out = np.empty(idx.shape, np.uint8)
+        for s in range(self.nshards):
+            sel = order[bounds[s]:bounds[s + 1]]
+            if sel.size:
+                out[sel] = self.shards[s].codes(idx[sel])
+        return out
+
+    def distance(self, ranks: np.ndarray,
+                 gen_neighbors: Optional[Callable] = None) -> np.ndarray:
+        gen = gen_neighbors or self.gen_neighbors
+        if gen is None:
+            raise ValueError("distance queries need gen_neighbors")
+        dist, _ = _descend(self.codes, gen, ranks, self.start,
+                           self.max_dist, record=False)
+        return dist
+
+    lookup = distance
+
+    def paths(self, ranks: np.ndarray,
+              gen_neighbors: Optional[Callable] = None
+              ) -> Tuple[np.ndarray, List[np.ndarray]]:
+        gen = gen_neighbors or self.gen_neighbors
+        if gen is None:
+            raise ValueError("path queries need gen_neighbors")
+        dist, chains = _descend(self.codes, gen, ranks, self.start,
+                                self.max_dist, record=True)
+        return dist, [np.asarray(ch, np.int64) for ch in chains]
+
+    def close(self) -> None:
+        for sh in self.shards:
+            sh.close()
+
+    def __enter__(self) -> "ShardedOracle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

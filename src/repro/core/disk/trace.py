@@ -182,6 +182,27 @@ def _human_bytes(n: float) -> str:
     return f"{n:.1f}TB"
 
 
+def report_json(path: str) -> dict:
+    """Machine-readable form of :func:`report`: the same per-level rows
+    plus totals, as one JSON-serializable dict.  The serve bench and CI
+    assertions consume this instead of scraping the printed table
+    (``shard_us`` keys become strings in transit — JSON has no int keys).
+    """
+    meta, spans, summary = read(path)
+    rows = level_rows(spans)
+    tot = {k: sum(r[k] for r in rows)
+           for k in ("wall_us", "passes", "bytes", "retries", "recoveries")}
+    return {
+        "trace": path,
+        "meta": meta,
+        "levels": rows,
+        "totals": tot,
+        "replayed_levels": [r["level"] for r in rows if r["replay"]],
+        "rollback_spans": sum(1 for s in spans
+                              if s.get("sid") == "recovery.rollback"),
+    }
+
+
 def report(path: str, out=None) -> List[dict]:
     """Print the per-level table for a trace file; returns the rows."""
     out = out or sys.stdout
@@ -263,6 +284,9 @@ def main(argv=None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
     rp = sub.add_parser("report", help="per-level wall/pass/byte table")
     rp.add_argument("trace")
+    rp.add_argument("--json", action="store_true",
+                    help="emit the report as one JSON object (levels + "
+                         "totals) instead of the human table")
     ep = sub.add_parser("export-chrome",
                         help="write Chrome trace-event JSON for Perfetto")
     ep.add_argument("trace")
@@ -270,7 +294,11 @@ def main(argv=None) -> int:
                     help="output path (default: <trace>.chrome.json)")
     args = ap.parse_args(argv)
     if args.cmd == "report":
-        report(args.trace)
+        if args.json:
+            json.dump(report_json(args.trace), sys.stdout)
+            print()
+        else:
+            report(args.trace)
     else:
         out = export_chrome(args.trace, args.out)
         print(f"wrote {out}")

@@ -95,6 +95,32 @@ class Histogram:
         self.count += 1
         self.total += v
 
+    def percentile(self, q: float) -> float:
+        """Estimate the ``q``-th percentile (0 <= q <= 100) from buckets.
+
+        The target rank is walked through the sorted bucket keys; inside
+        the covering bucket ``(2**(b-1), 2**b]`` the value is linearly
+        interpolated by the rank's fractional position among that
+        bucket's observations, so the estimate is exact at bucket edges
+        and never off by more than one power-of-two bucket's width — the
+        resolution p50/p99 latency columns need.  Empty histogram → 0.0.
+        """
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"percentile q={q} outside [0, 100]")
+        if self.count == 0:
+            return 0.0
+        target = q / 100.0 * self.count
+        seen = 0
+        for b in sorted(self.buckets):
+            n = self.buckets[b]
+            if seen + n >= target:
+                lo = 0.0 if b == 0 else float(2 ** (b - 1))
+                hi = float(2 ** b)
+                frac = (target - seen) / n
+                return lo + frac * (hi - lo)
+            seen += n
+        return float(2 ** max(self.buckets))
+
 
 def histogram(name: str) -> Histogram:
     h = _HISTS.get(name)

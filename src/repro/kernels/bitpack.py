@@ -28,6 +28,15 @@ is exactly VPU-shaped work:
                         level instead of twice (the Tier J twin of the disk
                         pass planner's fused read-write pass).
 
+  bitpack_gather2       the serving tier's Tier J lookup path: gather the
+                        2-bit fields for a vector of element indices out of
+                        page-resident packed words.  Queries are binned to
+                        pages HOST-side (gather2_plan — the oracle server's
+                        chunk binning, numpy) and the kernel walks a
+                        scalar-prefetched page table (the paged.py /
+                        paged_decode.py idiom) so each grid step streams
+                        exactly one page of packed words into VMEM.
+
 All have pure-jnp oracles in ref.py and interpret-mode CPU validation in
 tests/test_kernels.py; ops.py hosts the dispatching wrappers.
 """
@@ -37,6 +46,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -307,3 +317,124 @@ def bitpack_mark_rotate_count(
         name="roomy_bitpack_mark_rotate_count",
     )(idx, tab)
     return out[:n_words, 0], cnt[0, 0]
+
+
+# ------------------------------------------------- paged gather (serving)
+
+DEFAULT_PAGE_WORDS = 512     # packed words per page block (2 KiB / page)
+
+
+def _gather2_kernel(tbl_ref, idx_ref, page_ref, out_ref, *, bm: int):
+    """One grid step = one block of ``bm`` page-LOCAL element indices
+    against the one page the scalar-prefetched table routed in.  Negative
+    indices are padding → 0 (same convention as the ref oracle's OOB)."""
+    def body(i, _):
+        elt = idx_ref[i, 0]
+        ok = elt >= 0
+        ee = jnp.maximum(elt, 0)
+        word = ee // FIELDS_PER_WORD
+        sh = (2 * (ee % FIELDS_PER_WORD)).astype(jnp.uint32)
+        w = pl.load(page_ref, (pl.ds(word, 1), slice(None)))
+        f = ((w >> sh) & jnp.uint32(3)).astype(jnp.int32)
+        pl.store(out_ref, (pl.ds(i, 1), slice(None)),
+                 jnp.where(ok, f, 0))
+        return 0
+
+    jax.lax.fori_loop(0, bm, body, 0)
+
+
+def gather2_plan(idx, n_words: int, *,
+                 page_words: int = DEFAULT_PAGE_WORDS,
+                 block_m: int = DEFAULT_BM):
+    """Host-side (numpy) page binning for :func:`bitpack_gather2`.
+
+    Bins the element indices by owning page (stable argsort + contiguous
+    slices — the disk tier's bin-by-dest idiom), pads each page's run to
+    whole ``block_m`` blocks with -1, and returns
+
+        (local (n_blocks·bm,) int32 page-LOCAL indices,
+         page_table (n_blocks,) int32,
+         out_pos (n_blocks·bm,) int64 original query position, -1 = pad)
+
+    OOB/negative queries are excluded here (they never reach the kernel)
+    and read back as 0 through ``out_pos``.  Binning is data-dependent
+    host work — the same reason the oracle server bins by chunk outside
+    any jit.
+    """
+    idx = np.asarray(idx).astype(np.int64).reshape(-1)
+    cap = n_words * FIELDS_PER_WORD
+    fpp = page_words * FIELDS_PER_WORD
+    (pos,) = np.nonzero((idx >= 0) & (idx < cap))
+    page_of = idx[pos] // fpp
+    order = pos[np.argsort(page_of, kind="stable")]
+    pages, starts = np.unique(idx[order] // fpp, return_index=True)
+    bounds = np.append(starts, order.size)
+    locs, outpos, tbl = [], [], []
+    for pi, page in enumerate(pages):
+        sel = order[bounds[pi]:bounds[pi + 1]]
+        pad = -(-sel.size // block_m) * block_m - sel.size
+        locs.append(np.concatenate(
+            [(idx[sel] - page * fpp).astype(np.int32),
+             np.full(pad, -1, np.int32)]))
+        outpos.append(np.concatenate([sel, np.full(pad, -1, np.int64)]))
+        tbl.extend([int(page)] * ((sel.size + pad) // block_m))
+    if not tbl:                 # no valid query: one dummy all-pad block
+        locs = [np.full(block_m, -1, np.int32)]
+        outpos = [np.full(block_m, -1, np.int64)]
+        tbl = [0]
+    return (np.concatenate(locs), np.asarray(tbl, np.int32),
+            np.concatenate(outpos))
+
+
+def bitpack_gather2(
+    packed: jax.Array,       # (W,) uint32 packed 2-bit fields
+    idx,                     # (M,) int element indices; OOB/negative → 0
+    *,
+    page_words: int = DEFAULT_PAGE_WORDS,
+    block_m: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather the 2-bit field for each element index: (M,) int32 in 0..3.
+
+    The packed words are padded to whole pages of ``page_words`` and the
+    grid runs one step per query block; a PrefetchScalarGridSpec page
+    table (built by :func:`gather2_plan`) picks which page each block's
+    BlockSpec streams into VMEM — so a batch touching k pages moves
+    k·page_words·4 bytes regardless of W, the serving tier's cache-miss
+    cost model on device.
+    """
+    n_words = packed.shape[0]
+    m = int(np.asarray(idx).reshape(-1).shape[0])
+    n_pages = max(1, -(-n_words // page_words))
+    local, tbl, out_pos = gather2_plan(idx, n_words,
+                                       page_words=page_words,
+                                       block_m=block_m)
+    bm = min(block_m, local.shape[0])
+    paged = (jnp.zeros((n_pages * page_words,), jnp.uint32)
+             .at[:n_words].set(packed.astype(jnp.uint32))
+             .reshape(n_pages * page_words, 1))
+    n_blocks = tbl.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, tbl: (i, 0)),
+            pl.BlockSpec((page_words, 1), lambda i, tbl: (tbl[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, tbl: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather2_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks * bm, 1), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="roomy_bitpack_gather2",
+    )(jnp.asarray(tbl), jnp.asarray(local).reshape(-1, 1), paged)
+    flat = np.asarray(out).reshape(-1)
+    res = np.zeros(m, np.int32)
+    (live,) = np.nonzero(out_pos >= 0)
+    res[out_pos[live]] = flat[live]
+    return jnp.asarray(res)

@@ -168,3 +168,18 @@ def bitpack_mark_rotate_count(packed, idx, lut, count_val, *, mark=2,
             block_m=block_m, interpret=(mode == "interpret"))
     return _ref.bitpack_mark_rotate_count_ref(packed, idx, lut, count_val,
                                               mark, only_if)
+
+
+def bitpack_gather2(packed, idx, *, impl="auto", page_words=512,
+                    block_m=256):
+    """Gather the 2-bit field for each element index (OOB/negative → 0) —
+    the serving tier's Tier J batched-lookup path.  NOT jit-wrapped as a
+    whole: the kernel path bins queries to pages host-side (numpy in
+    bitpack.gather2_plan, data-dependent shapes), exactly like the oracle
+    server bins queries to chunks; the pallas_call itself compiles."""
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return _bp.bitpack_gather2(packed, idx, page_words=page_words,
+                                   block_m=block_m,
+                                   interpret=(mode == "interpret"))
+    return _ref.bitpack_gather2_ref(packed, idx)

@@ -279,3 +279,15 @@ def bitpack_mark_rotate_count_ref(packed, idx, lut, count_val, mark, only_if):
     kernel collapses into one table residency)."""
     marked = bitpack_scatter_mark_ref(packed, idx, mark, only_if)
     return bitpack_lut_count_ref(marked, lut, count_val)
+
+
+def bitpack_gather2_ref(packed, idx):
+    """Oracle of bitpack_gather2: unpack every field, gather, OOB → 0."""
+    w = packed.shape[0]
+    cap = w * 16
+    shifts = (jnp.arange(16, dtype=jnp.uint32) * 2)[None, :]
+    fields = ((packed.astype(jnp.uint32)[:, None] >> shifts) & 3).reshape(-1)
+    idx = jnp.asarray(idx).reshape(-1)
+    ok = (idx >= 0) & (idx < cap)
+    safe = jnp.clip(idx, 0, cap - 1).astype(jnp.int32)
+    return jnp.where(ok, fields[safe], 0).astype(jnp.int32)

@@ -235,6 +235,54 @@ class TestBitpack:
         assert np.array_equal(np.asarray(got), np.asarray(want))
         assert int(gcnt) == int(wcnt)
 
+    # ------------------------------------------ serving-tier gather path
+
+    @pytest.mark.parametrize("case", [
+        (1000, 4096, 128, 64),   # W, M, page_words, block_m
+        (64, 7, 32, 4),          # tiny, ragged page tail
+        (4096, 20000, 512, 256), # defaults-shaped
+    ])
+    def test_gather2_matches_ref(self, case):
+        # The Tier J batched-lookup acceptance pin: the paged gather
+        # kernel must match the unpack-everything oracle BIT FOR BIT,
+        # including OOB/negative queries (→ 0) and duplicate ranks.
+        w, m, pw, bm = case
+        rng = np.random.default_rng(w + m)
+        packed = jnp.asarray(
+            rng.integers(0, 1 << 32, w, dtype=np.uint64).astype(np.uint32))
+        idx = rng.integers(-50, w * 16 + 50, m).astype(np.int64)
+        got = ops.bitpack_gather2(packed, idx, impl="interpret",
+                                  page_words=pw, block_m=bm)
+        want = ops.bitpack_gather2(packed, idx, impl="ref")
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_gather2_empty_and_all_oob(self):
+        packed = jnp.asarray(np.arange(10, dtype=np.uint32))
+        for idx in (np.asarray([], np.int64), np.full(5, -3, np.int64),
+                    np.full(3, 10 * 16 + 7, np.int64)):
+            got = ops.bitpack_gather2(packed, idx, impl="interpret")
+            want = ops.bitpack_gather2(packed, idx, impl="ref")
+            assert np.array_equal(np.asarray(got), np.asarray(want))
+            assert np.asarray(got).shape == idx.shape
+
+    def test_gather2_matches_disk_packing(self):
+        # Layout bridge: bytes packed by the DISK tier (4 fields/uint8,
+        # field j at bits 2j), viewed little-endian as uint32 words, must
+        # gather to the same fields the disk-side random read extracts —
+        # the contract that lets a served oracle chunk feed the kernel.
+        from repro.core.disk.bitarray import pack2
+        rng = np.random.default_rng(5)
+        vals = rng.integers(0, 4, 1000).astype(np.uint8)
+        raw = pack2(vals)
+        pad = (-raw.size) % 4
+        words = jnp.asarray(np.frombuffer(
+            np.concatenate([raw, np.zeros(pad, np.uint8)]).tobytes(),
+            dtype="<u4"))
+        idx = rng.integers(0, 1000, 500).astype(np.int64)
+        got = ops.bitpack_gather2(words, idx, impl="interpret",
+                                  page_words=8, block_m=16)
+        assert np.array_equal(np.asarray(got), vals[idx].astype(np.int32))
+
 
 class TestMamba2SSD:
     """Chunked SSD (matmul) form vs the recurrence oracles (§Perf cell C)."""

@@ -103,6 +103,62 @@ class TestZeroCost:
         assert not [p for p in tmp_path.rglob("*.jsonl")]
 
 
+# ------------------------------------------------------------- percentile
+
+class TestHistogramPercentile:
+    """Histogram.percentile(q) — the serve bench's p50/p99 columns."""
+
+    def test_single_bucket_interpolates(self):
+        h = obs.Histogram()
+        for _ in range(10):
+            h.observe(3)                      # all land in (2, 4]
+        assert h.percentile(0) == pytest.approx(2.0)
+        assert h.percentile(50) == pytest.approx(3.0)
+        assert h.percentile(100) == pytest.approx(4.0)
+
+    def test_multi_bucket_walk(self):
+        h = obs.Histogram()
+        for v in (1, 1, 1, 10, 100):          # buckets 0 (x3), 4, 7
+            h.observe(v)
+        assert h.percentile(50) <= 1.0        # rank 2.5 inside bucket 0
+        assert 8 < h.percentile(75) <= 16     # rank 3.75 → bucket 4
+        assert 64 < h.percentile(100) <= 128  # top of bucket 7
+
+    def test_bucket_edge_exact(self):
+        # q at a bucket boundary must return that bucket's upper edge
+        h = obs.Histogram()
+        for v in (1, 4):
+            h.observe(v)
+        assert h.percentile(50) == pytest.approx(1.0)
+        assert h.percentile(100) == pytest.approx(4.0)
+
+    def test_monotone_in_q(self):
+        h = obs.Histogram()
+        rng = np.random.default_rng(0)
+        for v in rng.uniform(0.5, 5000.0, 300):
+            h.observe(v)
+        qs = [0, 1, 10, 25, 50, 75, 90, 99, 100]
+        ps = [h.percentile(q) for q in qs]
+        assert ps == sorted(ps)
+
+    def test_bounded_by_bucket_resolution(self):
+        # the estimate never strays beyond the covering power-of-2 bucket
+        h = obs.Histogram()
+        for _ in range(1000):
+            h.observe(777)                    # bucket (512, 1024]
+        for q in (1, 50, 99):
+            assert 512 < h.percentile(q) <= 1024
+
+    def test_empty_and_bad_q(self):
+        h = obs.Histogram()
+        assert h.percentile(50) == 0.0
+        h.observe(2)
+        with pytest.raises(ValueError):
+            h.percentile(-1)
+        with pytest.raises(ValueError):
+            h.percentile(101)
+
+
 # ---------------------------------------------------------- span mechanics
 
 class TestSpanMechanics:

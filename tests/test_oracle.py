@@ -1,0 +1,395 @@
+"""Distance-oracle serving tier (disk/oracle.py) — PR-9 acceptance.
+
+  * publish → serve → verify chain: a completed implicit-BFS run is
+    sealed and EVERY distance and EVERY reconstructed path is checked
+    against an independent in-RAM reference BFS on pancake n ≤ 7, all
+    ranks, both routing modes (nshards ∈ {1, 2}); the histogram is
+    anchored to the sorted-list engine at n = 6,
+  * publish seals only runs it can reproduce: a wrong expected histogram
+    refuses with OracleError,
+  * artifact integrity: tampered chunks, rewritten METAs, manifests
+    naming missing versions, and format mismatches all raise OracleError
+    loudly — wrong data is never served,
+  * versioning: immutable re-publish bumps the version, the manifest
+    points at the newest, older sealed versions stay openable, and a
+    deleted manifest crash-adopts the newest sealed version,
+  * LRU chunk cache: recency eviction order, exact hit/miss/evict/byte
+    counters in the ``oracle`` obs namespace, byte-budget enforcement
+    (resident never above budget, oversized chunks served uncached), and
+    correct results from concurrent reader threads under eviction
+    pressure (fixed seed),
+  * zero impact on search: an untraced implicit_bfs books nothing in the
+    ``oracle`` namespace.
+"""
+import json
+import math
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.disk import implicit_bfs
+from repro.core.disk.oracle import (STATS, DistanceOracle, LRUChunkCache,
+                                    OracleError, ShardedOracle,
+                                    publish_oracle, reset_stats)
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+
+from pancake_bits import neighbors_np, sorted_list_levels
+
+
+def _start_rank(n):
+    import repro.core.ranking as R
+    return int(R.rank_np(np.arange(n)[None, :])[0])
+
+
+def _ram_distances(n, total, start):
+    """Independent in-RAM reference BFS (no disk engine involved)."""
+    gen = neighbors_np(n)
+    dist = np.full(total, -1, np.int64)
+    dist[start] = 0
+    frontier = np.asarray([start], np.int64)
+    d = 0
+    while frontier.size:
+        nb = np.unique(gen(frontier).reshape(-1))
+        nb = nb[dist[nb] < 0]
+        d += 1
+        dist[nb] = d
+        frontier = nb
+    return dist
+
+
+@pytest.fixture(scope="module")
+def published6(tmp_path_factory):
+    """Search → publish chain at n=6 (720 states, 15 chunks)."""
+    n = 6
+    total = math.factorial(n)
+    start = _start_rank(n)
+    wd = tmp_path_factory.mktemp("search6")
+    sizes, bits = implicit_bfs(str(wd), total, [start], neighbors_np(n),
+                               chunk_elems=256)
+    bits.destroy()
+    art = str(tmp_path_factory.mktemp("art6") / "oracle")
+    meta = publish_oracle(art, total, [start], neighbors_np(n),
+                          level_sizes=sizes, chunk_elems=48,
+                          codec={"space": "pancake", "n": n})
+    return {"n": n, "total": total, "start": start, "sizes": sizes,
+            "art": art, "meta": meta,
+            "ref": _ram_distances(n, total, start)}
+
+
+class TestPublish:
+
+    def test_meta_shape_and_manifest(self, published6):
+        p = published6
+        meta = p["meta"]
+        assert meta["version"] == 1
+        assert meta["level_sizes"] == p["sizes"]
+        assert meta["n_chunks"] == -(-p["total"] // 48)
+        assert len(meta["chunk_sha256"]) == meta["n_chunks"]
+        with open(os.path.join(p["art"], "ORACLE")) as f:
+            manifest = json.load(f)
+        assert manifest["version"] == 1 and manifest["format"] == 1
+        assert os.path.isdir(os.path.join(p["art"], "v000001"))
+
+    def test_histogram_anchored_to_sorted_engine(self, published6):
+        # the chain back to the paper's other engine: implicit sizes ==
+        # published level_sizes == sorted-list BFS level counts
+        assert published6["meta"]["level_sizes"] == sorted_list_levels(6)
+
+    def test_refuses_wrong_histogram(self, published6, tmp_path):
+        p = published6
+        bad = list(p["sizes"])
+        bad[2] += 1
+        with pytest.raises(OracleError, match="refusing to publish"):
+            publish_oracle(str(tmp_path / "bad"), p["total"], [p["start"]],
+                           neighbors_np(p["n"]), level_sizes=bad,
+                           chunk_elems=48)
+        assert not os.path.exists(str(tmp_path / "bad" / "ORACLE"))
+
+    def test_refuses_wrong_level_count(self, published6, tmp_path):
+        p = published6
+        with pytest.raises(OracleError):
+            publish_oracle(str(tmp_path / "bad2"), p["total"], [p["start"]],
+                           neighbors_np(p["n"]),
+                           level_sizes=p["sizes"] + [5], chunk_elems=48)
+
+    def test_republish_bumps_version_keeps_old(self, published6, tmp_path):
+        p = published6
+        art = str(tmp_path / "vv")
+        for want in (1, 2):
+            meta = publish_oracle(art, p["total"], [p["start"]],
+                                  neighbors_np(p["n"]),
+                                  level_sizes=p["sizes"], chunk_elems=96)
+            assert meta["version"] == want
+        assert os.path.isdir(os.path.join(art, "v000001"))
+        with DistanceOracle(art, cache_bytes=1 << 20) as orc:
+            assert orc.version == 2
+        with DistanceOracle(art, cache_bytes=1 << 20, version=1) as orc:
+            assert (orc.codes(np.arange(p["total"]))
+                    == (p["ref"] % 3 + 1)).all()
+
+
+class TestServeCorrectness:
+    """Every distance and every path, all ranks, both routing modes."""
+
+    @pytest.mark.parametrize("nshards", [1, 2])
+    def test_all_distances_n6(self, published6, nshards):
+        p = published6
+        gen = neighbors_np(p["n"])
+        if nshards == 1:
+            orc = DistanceOracle(p["art"], cache_bytes=1 << 12,
+                                 gen_neighbors=gen)
+        else:
+            orc = ShardedOracle(p["art"], nshards, cache_bytes=1 << 12,
+                                gen_neighbors=gen)
+        with orc:
+            got = orc.lookup(np.arange(p["total"]))
+            assert (got == p["ref"]).all()
+            assert np.bincount(got).tolist() == p["sizes"]
+
+    @pytest.mark.parametrize("nshards", [1, 2])
+    def test_all_paths_n6(self, published6, nshards):
+        p = published6
+        gen = neighbors_np(p["n"])
+        cls = (DistanceOracle if nshards == 1
+               else lambda a, **kw: ShardedOracle(a, nshards, **kw))
+        with cls(p["art"], cache_bytes=1 << 14, gen_neighbors=gen) as orc:
+            ranks = np.arange(p["total"], dtype=np.int64)
+            dist, chains = orc.paths(ranks)
+            assert (dist == p["ref"]).all()
+            for r, dv, ch in zip(ranks, dist, chains):
+                assert len(ch) == dv + 1
+                assert ch[0] == r and ch[-1] == p["start"]
+                # each hop is a real edge one level closer to the start
+                assert (p["ref"][ch] == np.arange(dv, -1, -1)).all()
+                if dv > 0:
+                    nbrs = gen(ch[:-1])
+                    assert (nbrs == ch[1:, None]).any(axis=1).all()
+
+    def test_all_distances_n7_both_modes(self, tmp_path):
+        # the acceptance bound: n = 7, all 5040 ranks, nshards ∈ {1, 2}
+        n, total = 7, math.factorial(7)
+        start = _start_rank(n)
+        gen = neighbors_np(n)
+        ref = _ram_distances(n, total, start)
+        art = str(tmp_path / "art7")
+        meta = publish_oracle(art, total, [start], gen,
+                              level_sizes=np.bincount(ref).tolist(),
+                              chunk_elems=256)
+        assert len(meta["level_sizes"]) - 1 == 8  # pancake number P7
+        for nshards in (1, 2):
+            cls = (DistanceOracle if nshards == 1
+                   else lambda a, **kw: ShardedOracle(a, nshards, **kw))
+            with cls(art, cache_bytes=1 << 12, gen_neighbors=gen) as orc:
+                dist, chains = orc.paths(np.arange(total, dtype=np.int64))
+                assert (dist == ref).all()
+                for r, dv, ch in zip(range(total), dist, chains):
+                    assert len(ch) == dv + 1 and ch[0] == r
+                    assert (ref[ch] == np.arange(dv, -1, -1)).all()
+
+    def test_unreached_states_get_minus_one(self, tmp_path):
+        # a 2-regular ring with an unreachable tail half
+        ring = 16
+
+        def gen(idx):
+            idx = np.asarray(idx, np.int64)
+            return np.stack([(idx - 1) % ring, (idx + 1) % ring], axis=1)
+        total = 32                     # states ring..31 are unreachable
+        sizes = [1] + [2] * 7 + [1]
+        art = str(tmp_path / "ring")
+        publish_oracle(art, total, [0], gen, level_sizes=sizes,
+                       chunk_elems=8)
+        with DistanceOracle(art, cache_bytes=1 << 12,
+                            gen_neighbors=gen) as orc:
+            got = orc.lookup(np.arange(total))
+            want = np.minimum(np.arange(ring), ring - np.arange(ring))
+            assert (got[:ring] == want).all()
+            assert (got[ring:] == -1).all()
+            d, chains = orc.paths(np.asarray([ring + 3]))
+            assert d[0] == -1 and list(chains[0]) == [ring + 3]
+
+    def test_rank_out_of_range_raises(self, published6):
+        with DistanceOracle(published6["art"], cache_bytes=1 << 12) as orc:
+            with pytest.raises(ValueError):
+                orc.codes(np.asarray([published6["total"]]))
+            with pytest.raises(ValueError):
+                orc.codes(np.asarray([-1]))
+
+
+class TestIntegrity:
+    """Tamper / version-mismatch → loud OracleError, never wrong data."""
+
+    def _republish(self, p, tmp_path, name="t"):
+        art = str(tmp_path / name)
+        publish_oracle(art, p["total"], [p["start"]],
+                       neighbors_np(p["n"]), level_sizes=p["sizes"],
+                       chunk_elems=48)
+        return art
+
+    def test_tampered_chunk_never_serves(self, published6, tmp_path):
+        art = self._republish(published6, tmp_path)
+        chunk = os.path.join(art, "v000001", "b000003.npy")
+        raw = bytearray(open(chunk, "rb").read())
+        raw[-1] ^= 0xFF
+        open(chunk, "wb").write(bytes(raw))
+        orc = DistanceOracle(art, cache_bytes=1 << 20)
+        with pytest.raises(OracleError, match="sha256"):
+            orc.codes(np.arange(published6["total"]))
+
+    def test_rewritten_meta_detected(self, published6, tmp_path):
+        art = self._republish(published6, tmp_path)
+        mpath = os.path.join(art, "v000001", "META.json")
+        meta = json.load(open(mpath))
+        meta["level_sizes"][0] = 7
+        json.dump(meta, open(mpath, "w"), sort_keys=True)
+        with pytest.raises(OracleError, match="fingerprint"):
+            DistanceOracle(art, cache_bytes=1 << 20)
+
+    def test_manifest_names_missing_version(self, published6, tmp_path):
+        art = self._republish(published6, tmp_path)
+        with open(os.path.join(art, "ORACLE"), "w") as f:
+            json.dump({"format": 1, "version": 9, "meta_sha256": "x"}, f)
+        with pytest.raises(OracleError, match="no such sealed"):
+            DistanceOracle(art)
+
+    def test_format_mismatch(self, published6, tmp_path):
+        art = self._republish(published6, tmp_path)
+        with open(os.path.join(art, "ORACLE"), "w") as f:
+            json.dump({"format": 99, "version": 1}, f)
+        with pytest.raises(OracleError, match="format"):
+            DistanceOracle(art)
+        # ... and a future META format is refused even via fallback
+        os.remove(os.path.join(art, "ORACLE"))
+        mpath = os.path.join(art, "v000001", "META.json")
+        meta = json.load(open(mpath))
+        meta["format"] = 99
+        json.dump(meta, open(mpath, "w"), sort_keys=True)
+        with pytest.raises(OracleError, match="format"):
+            DistanceOracle(art)
+
+    def test_corrupt_manifest_raises(self, published6, tmp_path):
+        art = self._republish(published6, tmp_path)
+        open(os.path.join(art, "ORACLE"), "w").write("{truncated")
+        with pytest.raises(OracleError, match="corrupt"):
+            DistanceOracle(art)
+
+    def test_missing_manifest_adopts_newest_sealed(self, published6,
+                                                   tmp_path):
+        # crash between seal and manifest write: newest sealed wins
+        p = published6
+        art = self._republish(p, tmp_path)
+        os.remove(os.path.join(art, "ORACLE"))
+        with DistanceOracle(art, cache_bytes=1 << 20) as orc:
+            assert orc.version == 1
+            assert (orc.codes(np.arange(p["total"]))
+                    == (p["ref"] % 3 + 1)).all()
+
+    def test_empty_root_raises(self, tmp_path):
+        with pytest.raises(OracleError):
+            DistanceOracle(str(tmp_path / "nothing"))
+        os.makedirs(str(tmp_path / "empty"))
+        with pytest.raises(OracleError, match="no sealed"):
+            DistanceOracle(str(tmp_path / "empty"))
+
+
+class TestLRUCache:
+
+    @staticmethod
+    def _loader(nbytes=10):
+        def load(key):
+            return np.full(nbytes, key % 251, np.uint8)
+        return load
+
+    def test_eviction_order_is_recency(self):
+        reset_stats()
+        cache = LRUChunkCache(30, self._loader(10))     # holds 3 chunks
+        for k in (0, 1, 2):
+            cache.get(k)
+        assert cache.keys() == [0, 1, 2]
+        cache.get(0)                                     # refresh 0
+        assert cache.keys() == [1, 2, 0]
+        cache.get(3)                                     # evicts LRU = 1
+        assert cache.keys() == [2, 0, 3]
+        cache.get(1)                                     # evicts LRU = 2
+        assert cache.keys() == [0, 3, 1]
+
+    def test_exact_counters(self):
+        reset_stats()
+        cache = LRUChunkCache(30, self._loader(10))
+        for k in (0, 1, 2):                              # 3 cold misses
+            cache.get(k)
+        for k in (0, 1, 2):                              # 3 hits
+            cache.get(k)
+        cache.get(3)                                     # miss + eviction
+        cache.get(0)                                     # miss (was evicted)
+        assert STATS["hits"] == 3
+        assert STATS["misses"] == 5
+        assert STATS["chunk_loads"] == 5
+        assert STATS["evictions"] == 2
+        assert STATS["bytes_read"] == 50
+        assert STATS["resident_bytes"] == 30
+        assert STATS["resident_peak"] == 30
+
+    def test_budget_enforced_and_oversized_uncached(self):
+        reset_stats()
+        cache = LRUChunkCache(25, self._loader(10))      # holds 2 of 10B
+        for k in range(7):
+            arr = cache.get(k)
+            assert arr.nbytes == 10
+            assert cache.resident <= 25
+            assert STATS["resident_bytes"] <= 25
+        big_cache = LRUChunkCache(5, self._loader(10))   # chunk > budget
+        arr = big_cache.get(0)
+        assert arr.nbytes == 10 and big_cache.resident == 0
+        assert big_cache.keys() == []                    # served uncached
+        assert STATS["resident_peak"] <= 25
+
+    def test_threaded_readers_under_eviction_pressure(self, published6):
+        # fixed-seed stress: 8 threads hammer a cache holding ~2 of 15
+        # chunks; every returned distance code must still be exact, and
+        # the counters must balance exactly when the dust settles.
+        p = published6
+        reset_stats()
+        orc = DistanceOracle(p["art"], cache_bytes=40)   # 48-elem chunks
+        want_codes = (p["ref"] % 3 + 1).astype(np.uint8)
+        errors = []
+
+        def reader(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(60):
+                    ranks = rng.integers(0, p["total"], 64).astype(np.int64)
+                    got = orc.codes(ranks)
+                    if not (got == want_codes[ranks]).all():
+                        raise AssertionError("wrong code under pressure")
+            except BaseException as e:
+                errors.append(e)
+        threads = [threading.Thread(target=reader, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        # exact accounting even under contention: every miss loaded,
+        # every lookup/batch booked, residency inside the budget
+        assert STATS["lookups"] == 8 * 60 * 64
+        assert STATS["batches"] == 8 * 60
+        assert STATS["misses"] == STATS["chunk_loads"]
+        assert STATS["misses"] > 0 and STATS["evictions"] > 0
+        assert STATS["resident_peak"] <= 40
+        assert STATS["resident_bytes"] == orc.cache.resident <= 40
+        orc.close()
+        assert STATS["resident_bytes"] == 0
+
+    def test_untraced_search_books_nothing(self, tmp_path):
+        reset_stats()
+        sizes, bits = implicit_bfs(str(tmp_path), 24, [0], neighbors_np(4),
+                                   chunk_elems=8)
+        bits.destroy()
+        assert sum(sizes) == 24
+        assert all(v == 0 for v in STATS.values()), STATS
