@@ -195,6 +195,80 @@ def _bench_disk_implicit_sharded(n: int, want: List[int], n_total: int,
             f"passes/level={passes_lvl:.2f} sorts/expansion=0.00")
 
 
+def _bench_compression(n: int, want: List[int], start: np.uint32,
+                       n_total: int, chunk_rows: int, repeats: int = 2
+                       ) -> List[Tuple[str, float, str]]:
+    """Compressed-run rows (docs/compression.md): both engines with
+    ``compress=True``, reporting stored bytes per level and the
+    raw/stored ratio from the codec ledger.  The pass budgets in these
+    rows must equal the uncompressed fused rows' (codec I/O is booked
+    separately, so sorts/expansion and passes/level are codec-blind).
+    The rows are NOT in BENCH_baseline.json — compare.py surfaces them
+    as unchecked NOTEs until an operator folds them in."""
+    levels = len(want) - 1
+    rows: List[Tuple[str, float, str]] = []
+
+    # ------------------------------------------------ sorted, compressed
+    best_wall, best_level = 1e18, 1e18
+    es: dict = {}
+    cd: dict = {}
+    for _ in range(repeats):
+        timed = _TimedGen(_gen_next_np(n))
+        with tempfile.TemporaryDirectory() as wd:
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, vis = disk_bfs(wd, np.array([[start]], np.uint32),
+                                      timed, width=1, chunk_rows=chunk_rows,
+                                      compress=True)
+                wall = time.perf_counter() - t0
+                assert sizes == want, (sizes, want)
+                vis.destroy()
+            d = sc.delta()
+            es, cd = d["extsort"], d.get("codec", {})
+        best_wall = min(best_wall, wall)
+        best_level = min(best_level, wall - timed.t)
+    spe = (es["sort_passes"] - 1) / (levels + 1)
+    raw_b = cd.get("extsort_raw_bytes", 0)
+    st_b = cd.get("extsort_stored_bytes", 0)
+    ratio = raw_b / st_b if st_b else 0.0
+    rows.append((f"bfs_pancake{n}_tierD_compressed", best_wall * 1e6,
+                 f"{n_total/best_level:.3g} level states/s "
+                 f"sorts/expansion={spe:.2f} "
+                 f"stored_bytes/level={st_b/(levels+1):.3g} "
+                 f"compress_ratio={ratio:.2f}x"))
+
+    # ---------------------------------------------- implicit, compressed
+    start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
+    best_wall, best_level = 1e18, 1e18
+    bs: dict = {}
+    for _ in range(repeats):
+        timed = _TimedGen(bits_neighbors_np(n))
+        with tempfile.TemporaryDirectory() as wd:
+            with obs.scope() as sc:
+                t0 = time.perf_counter()
+                sizes, bits = disk_implicit_bfs(
+                    wd, n_total, [start_rank], timed,
+                    chunk_elems=chunk_rows * 4, compress=True)
+                wall = time.perf_counter() - t0
+                assert sizes == want, (sizes, want)
+                bits.destroy()
+            d = sc.delta()
+            bs, cd = d["bits"], d.get("codec", {})
+        best_wall = min(best_wall, wall)
+        best_level = min(best_level, wall - timed.t)
+    passes_lvl = (bs["sync_passes"] + bs["scan_passes"]) / (levels + 1)
+    raw_b = cd.get("bits_raw_bytes", 0) + cd.get("bits_raw_bytes_read", 0)
+    st_b = (cd.get("bits_stored_bytes", 0)
+            + cd.get("bits_stored_bytes_read", 0))
+    ratio = raw_b / st_b if st_b else 0.0
+    rows.append((f"bfs_pancake{n}_tierD_implicit_compressed", best_wall * 1e6,
+                 f"{n_total/best_level:.3g} level states/s "
+                 f"passes/level={passes_lvl:.2f} "
+                 f"stored_bytes/level={st_b/(levels+1):.3g} "
+                 f"compress_ratio={ratio:.2f}x sorts/expansion=0.00"))
+    return rows
+
+
 def _ops_per_level(fused: bool):
     """Exact (lexsort, scatter) op counts of one Tier J level, measured by
     tracing the un-jitted composition on a tiny input (the jitted driver
@@ -261,8 +335,8 @@ def _bench_disk_implicit(n: int, want: List[int], n_total: int,
             best_level)
 
 
-def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
-              ) -> List[Tuple[str, float, str]]:
+def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0,
+              compress: bool = False) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
 
     # ---------------------------------------------------------- pancake
@@ -304,6 +378,11 @@ def bench_bfs(n: int = 7, chunk_rows: int = 1 << 14, shards: int = 0
                                            fused=False, repeats=repeats)
     rows.append((imp_u_row[0], imp_u_row[1],
                  imp_u_row[2] + f" speedup_vs_fused={t_i/t_iu:.2f}x"))
+
+    # ------------------------------------ compressed runs (NOTE rows)
+    if compress:
+        rows.extend(_bench_compression(n, want, start, total, chunk_rows,
+                                       repeats=repeats))
 
     # ----------------------------------------- sharded runtime (tier D)
     if shards >= 2:

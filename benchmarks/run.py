@@ -25,6 +25,12 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=0,
                     help="also benchmark the sharded Tier D runtime with "
                          "N shards (bfs section; 0 = skip)")
+    ap.add_argument("--compress", action="store_true",
+                    help="also benchmark compressed runs (bfs section; the "
+                         "rows report stored bytes/level + raw/stored ratio "
+                         "from the codec ledger and surface as unchecked "
+                         "NOTEs in benchmarks/compare.py until folded into "
+                         "the baseline)")
     ap.add_argument("--json", metavar="PATH",
                     help="also dump results as JSON (the BENCH trajectory "
                          "record: {section: [{name, us_per_call, derived}]})")
@@ -37,7 +43,8 @@ def main() -> None:
         # hack, and an import failure there must not take down the other
         # sections (the try/except below only guards section execution).
         from . import bfs
-        return bfs.bench_bfs(args.pancake_n, shards=args.shards)
+        return bfs.bench_bfs(args.pancake_n, shards=args.shards,
+                             compress=args.compress)
 
     def bench_serve_section():
         # Lazy for the same examples path hack; its own section keeps the

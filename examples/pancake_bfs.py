@@ -101,6 +101,12 @@ def main():
                     help="assert the level counts match a fresh "
                          "single-shard uninterrupted run (sharded and/or "
                          "resumed searches alike)")
+    ap.add_argument("--compress", action="store_true",
+                    help="store sorted runs delta+varint compressed "
+                         "(disk tier; docs/compression.md) — same level "
+                         "counts and sort budgets, fewer stored bytes; "
+                         "composes with --check, which always runs its "
+                         "reference search UNCOMPRESSED")
     ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
                     help="persist mid-search checkpoints to DIR "
                          "(disk tier; see docs/checkpointing.md)")
@@ -138,6 +144,8 @@ def main():
         "--check compares COMPLETE searches; drop --stop-after"
     assert args.chaos is None or args.tier == "disk", \
         "--chaos is a disk-tier (Tier D) feature"
+    assert not args.compress or args.tier == "disk", \
+        "--compress is a disk-tier (Tier D) feature"
     chaos = args.chaos is not None
     if chaos and not os.environ.get(faults.ENV_VAR):
         # An explicit ROOMY_FAULTS (the CI chaos matrix) wins; --chaos
@@ -174,6 +182,7 @@ def main():
             sizes, all_lst = disk_bfs(
                 wd, np.array([[start_code(n)]], np.uint32), gen_next_np(n),
                 width=1, chunk_rows=args.chunk_rows, max_levels=max_levels,
+                compress=args.compress,
                 cluster=ClusterConfig(nshards=args.shards,
                                       mode=args.shard_mode,
                                       transport=args.transport,

@@ -112,7 +112,7 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         shard_mode: str = "spawn", checkpoint_dir=None,
         checkpoint_every: int = 1, resume: bool = False, stop_after=None,
         chaos=None, trace_path=None, transport: str = "fs", exchange=None,
-        publish_dir=None):
+        publish_dir=None, compress: bool = False):
     total = math.factorial(n)
     start_rank = int(R.rank_np(np.arange(n)[None, :])[0])
     print(f"pancake n={n}: {total} states, tier={tier}, "
@@ -147,6 +147,7 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
             sizes, bits = disk_implicit_bfs(
                 wd, total, [start_rank], neighbors_np(n),
                 chunk_elems=chunk_elems, max_levels=max_levels,
+                compress=compress,
                 cluster=ClusterConfig(nshards=shards, mode=shard_mode,
                                       transport=transport,
                                       exchange=exchange),
@@ -205,7 +206,7 @@ def run(n: int, tier: str, chunk_elems: int, check: bool, shards: int = 1,
         ce = max(4, (-(-total // 16) + 3) // 4 * 4)
         meta = publish_oracle(
             publish_dir, total, [start_rank], neighbors_np(n),
-            level_sizes=sizes, chunk_elems=ce,
+            level_sizes=sizes, chunk_elems=ce, compress=compress,
             codec={"space": "pancake", "n": n,
                    "ranking": "myrvold-ruskey"})
         print(f"published distance oracle v{meta['version']:06d} -> "
@@ -306,6 +307,14 @@ def main():
                          "PATH and print the per-level report at exit "
                          "(docs/observability.md); composes with --shards "
                          "and --chaos")
+    ap.add_argument("--compress", action="store_true",
+                    help="store bit-array chunks run-length encoded and "
+                         "seal --publish artifacts as the compressed "
+                         "format-2 layout (disk tier; "
+                         "docs/compression.md) — same level counts and "
+                         "pass budgets, fewer stored bytes; composes "
+                         "with --check, whose reference runs stay "
+                         "uncompressed")
     args = ap.parse_args()
     assert 3 <= args.n <= R.MAX_N, f"rank encoding supports n <= {R.MAX_N}"
     assert args.shards == 1 or args.tier == "disk", \
@@ -321,10 +330,12 @@ def main():
         "--chaos is a disk-tier (Tier D) feature"
     assert not (args.publish and args.stop_after is not None), \
         "--publish seals COMPLETE searches; drop --stop-after"
+    assert not args.compress or args.tier == "disk", \
+        "--compress is a disk-tier (Tier D) feature"
     run(args.n, args.tier, args.chunk_elems, args.check, args.shards,
         args.shard_mode, args.checkpoint_dir, args.checkpoint_every,
         args.resume, args.stop_after, args.chaos, args.trace,
-        args.transport, args.exchange, args.publish)
+        args.transport, args.exchange, args.publish, args.compress)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,10 @@ config API, the sharded runtime, and the transport extension point:
   serving      publish_oracle, DistanceOracle, ShardedOracle, OracleError
                (docs/serving.md — sealed read-only artifacts + batched
                query serving over an LRU chunk cache)
+  compression  codec (submodule), CodecError — varint-delta sorted-run
+               keys + RLE 2-bit chunks (docs/compression.md); opt in via
+               ``compress=True`` on the engines / ``publish_oracle``,
+               ``ClusterConfig(wire_compress=True)`` on mailbox wires
   submodules   faults (fault injection), trace (run traces), extsort,
                buckets, ...  — importable, but their internals
                (``_w_*`` worker commands, owner-map helpers) are
@@ -35,8 +39,9 @@ Owner-map internals (``hash_rows_np``/``hash_owner_np``/
 # trace is intentionally NOT imported here: pre-importing it makes
 # ``python -m repro.core.disk.trace`` warn about the double import, and
 # ``from repro.core.disk import trace`` resolves the submodule anyway.
-from . import faults
+from . import codec, faults
 from .bfs import breadth_first_search, implicit_bfs, level_step
+from .codec import CodecError
 from .bitarray import DiskBitArray
 from .checkpoint import CheckpointError, SearchCheckpoint
 from .cluster import (ShardedDiskBitArray, ShardedDiskHashTable,
@@ -57,12 +62,12 @@ from .transport import TRANSPORT_KINDS, Transport, make_transport
 
 __all__ = [
     "CheckpointConfig", "CheckpointError", "ChunkStore", "ClusterConfig",
-    "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
+    "CodecError", "DiskArray", "DiskBitArray", "DiskHashTable", "DiskList",
     "DistanceOracle", "MembershipProbe", "OracleError", "PassPlan",
     "RecoveryConfig", "SearchCheckpoint", "ShardFailure", "ShardRuntime",
     "ShardedDiskBitArray", "ShardedDiskHashTable", "ShardedDiskList",
     "ShardedOracle", "SortedRunSet", "TRANSPORT_KINDS", "Transport",
-    "WorkerLost", "breadth_first_search", "external_sort", "faults",
+    "WorkerLost", "breadth_first_search", "codec", "external_sort", "faults",
     "implicit_bfs", "level_step", "make_transport", "merge_difference",
     "publish_oracle", "row_keys", "sharded_bfs", "sharded_implicit_bfs",
     "sort_rows", "stream_dedupe",

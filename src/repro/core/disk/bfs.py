@@ -130,6 +130,10 @@ def _ckpt_sorted(ck: SearchCheckpoint, all_runs: SortedRunSet,
                   "width": width, "n_states": 0,
                   "level_sizes": list(level_sizes),
                   "golden": ckpt.golden_owner_values(1, width, 0),
+                  # Optional codec marker (format negotiation,
+                  # docs/compression.md): absent/None == raw, so
+                  # pre-compression checkpoints keep opening unchanged.
+                  "codec": cur.codec,
                   "state": state})
     prev["dir"], prev["names"] = sealed, set(state["runs"])
 
@@ -145,6 +149,7 @@ def _ckpt_implicit(ck: SearchCheckpoint, bits: DiskBitArray,
                          "nshards": 1, "width": 1, "n_states": n_states,
                          "level_sizes": list(level_sizes),
                          "golden": ckpt.golden_owner_values(1, 1, n_states),
+                         "codec": "rle2" if bits.compress else None,
                          "state": state})
 
 
@@ -160,6 +165,7 @@ def breadth_first_search(
     max_runs: int = 8,
     compaction: str = "full",
     size_ratio: int = 2,
+    compress: bool = False,
     cluster=None,
     checkpoint=None,
     recovery=None,
@@ -196,6 +202,13 @@ def breadth_first_search(
     seeds collapse) on both paths. ``compaction``/``size_ratio`` select the
     visited-set compaction policy (lsm.py: "full" re-merges everything,
     "tiered" only comparable-size runs).
+
+    ``compress=True`` stores every sorted run varint-delta-compressed
+    (disk/codec.py, docs/compression.md): identical level counts and
+    sort/pass budgets, fewer stored bytes per level.  Resume works
+    across the compressed/uncompressed boundary in both directions —
+    restored runs keep their checkpointed format (per-run manifests),
+    new runs use this flag.  Fused engine only.
 
     With ``nshards > 1`` (or an explicit cluster.ShardRuntime via
     ``runtime=``) the search runs distributed: states partition by
@@ -238,22 +251,24 @@ def breadth_first_search(
         sizes, handle = sharded_bfs(
             rt, start_rows, gen_next, width, chunk_rows=chunk_rows,
             max_levels=max_levels, run_rows=run_rows, max_runs=max_runs,
-            compaction=compaction, size_ratio=size_ratio,
+            compaction=compaction, size_ratio=size_ratio, compress=compress,
             bucket_capacity=cl.bucket_capacity, checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, resume=resume,
             max_recoveries=rec.max_recoveries)
         handle._own_runtime = own
         return sizes, handle
     if not fused:
+        assert not compress, "compress=True requires the fused engine"
         return _breadth_first_search_unfused(
             workdir, start_rows, gen_next, width, chunk_rows, max_levels)
 
     # One scratch dir for every level's sort runs (run stores are destroyed
     # each level; reusing the parent avoids leaking one empty dir per level).
     tmp_dir = os.path.join(workdir, "bfs_tmp")
+    codec = "keys" if compress else None
     all_runs = SortedRunSet(workdir, width, chunk_rows, max_runs=max_runs,
                             name="bfs_all", policy=compaction,
-                            size_ratio=size_ratio)
+                            size_ratio=size_ratio, codec=codec)
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
     ck_prev: dict = {}
     state = ck.latest() if (ck is not None and resume) else None
@@ -272,7 +287,7 @@ def breadth_first_search(
         seed.append(start_rows)
         seed.flush()
         cur = ChunkStore(os.path.join(workdir, "bfs_lev0"), width,
-                         chunk_rows=chunk_rows, fresh=True)
+                         chunk_rows=chunk_rows, fresh=True, codec=codec)
         extsort.external_sort(seed, cur, tmp_dir, run_rows=run_rows,
                               dedupe=True)
         seed.destroy()
@@ -292,7 +307,7 @@ def breadth_first_search(
             # (the one sort pass happens as the neighbours are generated).
             builder = extsort.RunBuilder(tmp_dir, width,
                                          chunk_rows=chunk_rows,
-                                         run_rows=run_rows)
+                                         run_rows=run_rows, codec=codec)
             for chunk in cur.iter_chunks():
                 builder.add(gen_next(np.asarray(chunk)))
             runs = builder.finish()
@@ -300,7 +315,7 @@ def breadth_first_search(
             # it.
             all_runs.maybe_compact()
             nxt = ChunkStore(os.path.join(workdir, f"bfs_lev{lev}"), width,
-                             chunk_rows=chunk_rows, fresh=True)
+                             chunk_rows=chunk_rows, fresh=True, codec=codec)
             try:
                 _merge_subtract(runs, all_runs.runs, nxt)
             finally:
@@ -333,6 +348,7 @@ def implicit_bfs(
     expand_batch: int = 1 << 16,
     log_buf_rows: int = 1 << 20,
     fused: bool = True,
+    compress: bool = False,
     cluster=None,
     checkpoint=None,
     recovery=None,
@@ -421,7 +437,8 @@ def implicit_bfs(
         sizes, handle = sharded_implicit_bfs(
             rt, n_states, start_idx, gen_neighbors, chunk_elems=chunk_elems,
             max_levels=max_levels, expand_batch=expand_batch,
-            log_buf_rows=log_buf_rows, bucket_capacity=cl.bucket_capacity,
+            log_buf_rows=log_buf_rows, compress=compress,
+            bucket_capacity=cl.bucket_capacity,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
             resume=resume, max_recoveries=rec.max_recoveries)
         handle._own_runtime = own
@@ -437,7 +454,7 @@ def implicit_bfs(
     # (writing n/4 bytes of zeros just to overwrite them).
     bits = DiskBitArray(workdir, n_states, chunk_elems=chunk_elems,
                         name="bfs_bits", log_buf_rows=log_buf_rows,
-                        init_chunks=state is None)
+                        init_chunks=state is None, compress=compress)
 
     def expand(chunk_start: int, vals: np.ndarray) -> None:
         (cur_pos,) = np.nonzero(vals == CUR)

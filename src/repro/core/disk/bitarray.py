@@ -28,6 +28,17 @@ STATS counts bytes streamed so benchmarks can report bytes-touched-per-
 level next to the sorted-list engine's rows-sorted numbers; the shared
 pass ledger (extsort.STATS rw_passes/read_passes/piggybacked_stages) books
 each planned traversal.
+
+Compressed arrays (docs/compression.md): ``compress=True`` stores cold
+chunks RLE-encoded (disk/codec.py — long UNSEEN/DONE stretches collapse
+to a few bytes), and snapshots inherit the format for free since they
+copy chunk files verbatim.  The chunk loader auto-detects the format
+PER FILE, so adopting a snapshot from the other side of the
+compressed/uncompressed boundary just works — each chunk transcodes to
+the local format lazily, on its next write.  ``bytes_read``/
+``bytes_written`` book STORED bytes (what actually crossed the disk);
+raw-vs-stored ratios live in the ``codec`` namespace under the ``bits``
+tag.  Pass counters are codec-blind — compressed ≡ uncompressed.
 """
 from __future__ import annotations
 
@@ -39,9 +50,11 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .. import obs
+from . import codec as _codec
 from . import faults
 from .extsort import segment_combine_ordered
 from .passes import PassPlan, record_pass
+from .store import _write_bytes
 
 VALS_PER_BYTE = 4
 
@@ -98,7 +111,7 @@ class DiskBitArray:
 
     def __init__(self, workdir: str, n: int, chunk_elems: int = 1 << 22,
                  name: str | None = None, log_buf_rows: int = 1 << 20,
-                 init_chunks: bool = True):
+                 init_chunks: bool = True, compress: bool = False):
         """``init_chunks=False`` skips writing the zeroed chunk files —
         ONLY for a caller about to :meth:`adopt_snapshot` (which supplies
         every chunk): resuming a large search must not write n/4 bytes of
@@ -109,6 +122,7 @@ class DiskBitArray:
         self.chunk_elems = int(chunk_elems)
         self.n_chunks = -(-self.n // self.chunk_elems)
         self.log_buf_rows = int(log_buf_rows)
+        self.compress = bool(compress)
         name = name or f"dbits_{uuid.uuid4().hex[:8]}"
         self.path = os.path.join(workdir, name)
         if os.path.isdir(self.path):
@@ -117,8 +131,9 @@ class DiskBitArray:
         if init_chunks:
             for c in range(self.n_chunks):
                 rows = self._chunk_rows(c)
-                np.save(self._chunk_path(c),
-                        np.zeros(-(-rows // VALS_PER_BYTE), np.uint8))
+                self._store_packed(
+                    c, np.zeros(-(-rows // VALS_PER_BYTE), np.uint8),
+                    book=False, retry=False)
         self._log_bufs: List[List[np.ndarray]] = [[] for _ in range(self.n_chunks)]
         self._log_buffered = 0
 
@@ -126,8 +141,51 @@ class DiskBitArray:
     def _chunk_rows(self, c: int) -> int:
         return min(self.chunk_elems, self.n - c * self.chunk_elems)
 
-    def _chunk_path(self, c: int) -> str:
-        return os.path.join(self.path, f"b{c:06d}.npy")
+    def _chunk_path(self, c: int, rmz: bool = False) -> str:
+        return os.path.join(self.path,
+                            f"b{c:06d}.{'rmz' if rmz else 'npy'}")
+
+    # -------------------------------------------------- chunk file codec
+    def _load_packed(self, c: int, book: bool = True) -> np.ndarray:
+        """Load chunk ``c``'s packed bytes, auto-detecting the file's own
+        format — an adopted snapshot may carry the other side of the
+        compressed/uncompressed boundary.  Books STORED bytes read."""
+        pz = self._chunk_path(c, rmz=True)
+        if os.path.exists(pz):
+            with open(pz, "rb") as f:
+                buf = f.read()
+            if book:
+                STATS["bytes_read"] += len(buf)
+            return _codec.decode_rle2(buf, tag="bits")
+        packed = np.load(self._chunk_path(c))
+        if book:
+            STATS["bytes_read"] += packed.nbytes
+        return packed
+
+    def _store_packed(self, c: int, packed: np.ndarray, book: bool = True,
+                      retry: bool = True) -> None:
+        """Write chunk ``c`` in the LOCAL format (transcoding away any
+        other-format file a snapshot adoption left), booking stored
+        bytes written."""
+        if self.compress:
+            enc = _codec.encode_rle2(packed, tag="bits")
+            path, stale = (self._chunk_path(c, rmz=True),
+                           self._chunk_path(c))
+            write = lambda: _write_bytes(path, enc)
+            stored = len(enc)
+        else:
+            path, stale = (self._chunk_path(c),
+                           self._chunk_path(c, rmz=True))
+            write = lambda: np.save(path, packed)
+            stored = packed.nbytes
+        if retry:
+            faults.retry_io("chunk_flush", write, chunk=c)
+        else:
+            write()
+        if os.path.exists(stale):
+            os.remove(stale)
+        if book:
+            STATS["bytes_written"] += stored
 
     def _log_path(self, c: int) -> str:
         # Raw append-mode int64 (idx, val) pairs — NOT .npy: spills append
@@ -263,8 +321,7 @@ class DiskBitArray:
                 if not has_log and not plan.forces_full_traversal:
                     continue
                 rows = self._chunk_rows(c)
-                packed = np.load(self._chunk_path(c))
-                STATS["bytes_read"] += packed.nbytes
+                packed = self._load_packed(c)
                 vals = unpack2(packed, rows)
                 if has_log:
                     log = np.fromfile(sp, dtype=np.int64).reshape(-1, 2)
@@ -281,11 +338,7 @@ class DiskBitArray:
                 vals = plan.apply_chunk(c * self.chunk_elems, vals)
                 assert vals.shape[0] == rows
                 if has_log or plan.writes_chunks:
-                    out = pack2(vals)
-                    faults.retry_io("chunk_flush",
-                                    lambda: np.save(self._chunk_path(c), out),
-                                    chunk=c)
-                    STATS["bytes_written"] += out.nbytes
+                    self._store_packed(c, pack2(vals))
                 if has_log:
                     # Consumed only after the chunk lands: a stage raising
                     # mid-pass leaves the snapshot for the next pass to
@@ -320,11 +373,16 @@ class DiskBitArray:
         self._log_buffered = 0
         for fn in os.listdir(self.path):
             p = os.path.join(self.path, fn)
-            if os.path.isfile(p) and not fn.startswith("b"):
-                os.remove(p)            # stale op logs / .pass snapshots
+            if os.path.isfile(p):
+                # Everything goes: stale op logs / .pass snapshots, AND
+                # chunk files — a pre-adopt chunk in the OTHER codec
+                # format would otherwise shadow the adopted one (the
+                # loader auto-detects per file, preferring compressed).
+                os.remove(p)
         total = copy_dir_booked(src, self.path, "ckpt_bytes_read")
         for c in range(self.n_chunks):
-            assert os.path.isfile(self._chunk_path(c)), \
+            assert (os.path.isfile(self._chunk_path(c))
+                    or os.path.isfile(self._chunk_path(c, rmz=True))), \
                 f"snapshot is missing chunk {c} — torn checkpoint payload"
         return total
 
@@ -333,8 +391,7 @@ class DiskBitArray:
         """Read-only streaming scan: fn(start_index, values)."""
         STATS["scan_passes"] += 1
         for c in range(self.n_chunks):
-            packed = np.load(self._chunk_path(c))
-            STATS["bytes_read"] += packed.nbytes
+            packed = self._load_packed(c)
             fn(c * self.chunk_elems, unpack2(packed, self._chunk_rows(c)))
 
     def map_update(self, fn: Callable[[int, np.ndarray], np.ndarray]) -> None:
@@ -342,14 +399,11 @@ class DiskBitArray:
         STATS["scan_passes"] += 1
         for c in range(self.n_chunks):
             rows = self._chunk_rows(c)
-            packed = np.load(self._chunk_path(c))
-            STATS["bytes_read"] += packed.nbytes
+            packed = self._load_packed(c)
             vals = np.asarray(fn(c * self.chunk_elems,
                                  unpack2(packed, rows)), np.uint8)
             assert vals.shape[0] == rows
-            out = pack2(vals)
-            np.save(self._chunk_path(c), out)
-            STATS["bytes_written"] += out.nbytes
+            self._store_packed(c, pack2(vals), retry=False)
 
     def count_values(self) -> np.ndarray:
         """(4,) histogram of element values — one byte-histogram pass, no
@@ -357,8 +411,7 @@ class DiskBitArray:
         counts = np.zeros(4, np.int64)
         pad = 0
         for c in range(self.n_chunks):
-            packed = np.load(self._chunk_path(c))
-            STATS["bytes_read"] += packed.nbytes
+            packed = self._load_packed(c)
             counts += np.bincount(packed, minlength=256) @ _BYTE_COUNTS
             pad += packed.shape[0] * VALS_PER_BYTE - self._chunk_rows(c)
         counts[0] -= pad            # pack2 pads tail fields with value 0
@@ -372,7 +425,7 @@ class DiskBitArray:
         chunk_of = idx // self.chunk_elems
         for c in np.unique(chunk_of):
             sel = chunk_of == c
-            packed = np.load(self._chunk_path(int(c)), mmap_mode="r")
+            packed = self._load_packed(int(c), book=False)
             local = idx[sel] - int(c) * self.chunk_elems
             byte = np.asarray(packed[local // VALS_PER_BYTE])
             out[sel] = (byte >> (2 * (local % VALS_PER_BYTE)).astype(np.uint8)) & 3
@@ -382,7 +435,7 @@ class DiskBitArray:
         """(n,) values — tests/small data only."""
         parts = []
         for c in range(self.n_chunks):
-            parts.append(unpack2(np.load(self._chunk_path(c)),
+            parts.append(unpack2(self._load_packed(c, book=False),
                                  self._chunk_rows(c)))
         return (np.concatenate(parts) if parts else np.zeros(0, np.uint8))
 

@@ -310,7 +310,7 @@ class ShardRuntime:
     def __init__(self, root: str, nshards: int, mode: str = "spawn",
                  fresh: bool = True, timeout: float = _MAP_TIMEOUT,
                  transport: str = "fs", exchange: Optional[str] = None,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", wire_compress: bool = False):
         assert nshards >= 1
         assert mode in ("spawn", "inline"), mode
         assert exchange in (None, "barrier", "pipelined"), exchange
@@ -318,12 +318,17 @@ class ShardRuntime:
             raise ValueError(
                 "transport='loopback' is the in-process wire for "
                 "mode='inline' — spawn workers cannot share its store")
+        if wire_compress and transport == "fs":
+            raise ValueError(
+                "wire_compress=True needs a mailbox wire (tcp/loopback) — "
+                "the fs bucket layout is a byte-compatibility contract")
         self.root = root
         self.nshards = int(nshards)
         self.mode = mode
         self.timeout = timeout
         self.exchange_mode = exchange or "barrier"
-        self.tspec = {"kind": transport, "host": host}
+        self.tspec = {"kind": transport, "host": host,
+                      "wire_compress": bool(wire_compress)}
         self._broken = False     # set when a collective desynchronizes
         self.epoch = 0
         self._seq = 0
@@ -711,7 +716,8 @@ def _w_make(ctx: ShardContext, spec: dict) -> None:
         ctx.objects[name] = DiskBitArray(
             ctx.dir, n_local, chunk_elems=spec["chunk_elems"], name=name,
             log_buf_rows=spec["log_buf_rows"],
-            init_chunks=spec.get("init_chunks", True))
+            init_chunks=spec.get("init_chunks", True),
+            compress=spec.get("compress", False))
     else:
         raise ValueError(f"unknown structure kind {kind!r}")
 
@@ -973,12 +979,13 @@ class ShardedDiskBitArray(_ShardedBase):
     def __init__(self, runtime: ShardRuntime, n: int,
                  name: str | None = None, chunk_elems: int = 1 << 22,
                  log_buf_rows: int = 1 << 20,
-                 capacity: Optional[int] = None, init_chunks: bool = True):
+                 capacity: Optional[int] = None, init_chunks: bool = True,
+                 compress: bool = False):
         spec = {"kind": "bits", "name": name or runtime.next_name("sbits"),
                 "n": int(n), "per": block_size(int(n), runtime.nshards),
                 "chunk_elems": chunk_elems, "log_buf_rows": log_buf_rows,
                 "rec_width": 2, "rec_dtype": "int64", "capacity": capacity,
-                "init_chunks": init_chunks}
+                "init_chunks": init_chunks, "compress": compress}
         super().__init__(runtime, spec)
         self.n = int(n)
         self.per = spec["per"]
@@ -1029,7 +1036,8 @@ def _w_bfs_init(ctx: ShardContext, spec: dict) -> None:
         "all": SortedRunSet(ctx.dir, spec["width"], spec["chunk_rows"],
                             max_runs=spec["max_runs"], name=f"{name}_all",
                             policy=spec["compaction"],
-                            size_ratio=spec["size_ratio"]),
+                            size_ratio=spec["size_ratio"],
+                            codec=spec.get("codec")),
         "cur": None, "builder": None, "lev": 0,
     }
 
@@ -1039,13 +1047,15 @@ def _w_bfs_seed(ctx: ShardContext, spec: dict, epoch: int) -> int:
     st = ctx.objects[spec["name"]]
     builder = extsort.RunBuilder(os.path.join(ctx.dir, f"{spec['name']}_tmp"),
                                  spec["width"], chunk_rows=spec["chunk_rows"],
-                                 run_rows=spec["run_rows"])
+                                 run_rows=spec["run_rows"],
+                                 codec=spec.get("codec"))
     # Seed rows come from the coordinator alone (source id nshards).
     for _src, rows in ctx.recv(spec, epoch, (ctx.nshards,)):
         builder.add(rows)
     runs = builder.finish()
     lev0 = ChunkStore(os.path.join(ctx.dir, f"{spec['name']}_lev0"),
-                      spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
+                      spec["width"], chunk_rows=spec["chunk_rows"], fresh=True,
+                      codec=spec.get("codec"))
     try:
         extsort.merge_runs(runs, lev0, dedupe=True)
     finally:
@@ -1068,7 +1078,8 @@ def _w_bfs_expand(ctx: ShardContext, spec: dict, gen_next, epoch: int,
     with obs.span("bfs.level", level=lev, shard=ctx.shard, phase="expand"):
         builder = extsort.RunBuilder(
             os.path.join(ctx.dir, f"{spec['name']}_tmp"), spec["width"],
-            chunk_rows=spec["chunk_rows"], run_rows=spec["run_rows"])
+            chunk_rows=spec["chunk_rows"], run_rows=spec["run_rows"],
+            codec=spec.get("codec"))
         writer = ctx.writer(spec)
         for chunk in st["cur"].iter_chunks():
             nbrs = np.ascontiguousarray(gen_next(np.asarray(chunk)),
@@ -1102,7 +1113,8 @@ def _w_bfs_absorb(ctx: ShardContext, spec: dict, epoch: int) -> int:
         st["lev"] += 1
         nxt = ChunkStore(
             os.path.join(ctx.dir, f"{spec['name']}_lev{st['lev']}"),
-            spec["width"], chunk_rows=spec["chunk_rows"], fresh=True)
+            spec["width"], chunk_rows=spec["chunk_rows"], fresh=True,
+            codec=spec.get("codec"))
         try:
             _merge_subtract(runs, st["all"].runs, nxt)
         finally:
@@ -1292,7 +1304,7 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
                 size_ratio: int = 2, bucket_capacity: Optional[int] = None,
                 checkpoint_dir: Optional[str] = None,
                 checkpoint_every: int = 1, resume: bool = False,
-                max_recoveries: int = 0):
+                max_recoveries: int = 0, compress: bool = False):
     """Distributed sorted-list BFS: each shard owns the states hashing to
     it, sorts only its own partition (one sort pass per level per shard),
     and ships cross-shard expansion rows through the bucket exchange.
@@ -1319,7 +1331,8 @@ def sharded_bfs(runtime: ShardRuntime, start_rows: np.ndarray, gen_next,
             "chunk_rows": chunk_rows, "run_rows": run_rows,
             "max_runs": max_runs, "compaction": compaction,
             "size_ratio": size_ratio, "rec_width": width,
-            "rec_dtype": "uint32", "capacity": bucket_capacity}
+            "rec_dtype": "uint32", "capacity": bucket_capacity,
+            "codec": "keys" if compress else None}
     ck = SearchCheckpoint(checkpoint_dir) if checkpoint_dir else None
     ck_prev: dict = {}
 
@@ -1525,7 +1538,7 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
                          bucket_capacity: Optional[int] = None,
                          checkpoint_dir: Optional[str] = None,
                          checkpoint_every: int = 1, resume: bool = False,
-                         max_recoveries: int = 0):
+                         max_recoveries: int = 0, compress: bool = False):
     """Distributed implicit BFS: the 2-bit array is block-distributed,
     each shard runs ONE fused mark/rotate/count/expand pass per level
     over its own block, and cross-shard marks ride the bucket exchange
@@ -1556,7 +1569,8 @@ def sharded_implicit_bfs(runtime: ShardRuntime, n_states: int, start_idx,
     bits = ShardedDiskBitArray(runtime, n_states, chunk_elems=chunk_elems,
                                log_buf_rows=log_buf_rows,
                                capacity=bucket_capacity,
-                               init_chunks=state is None)
+                               init_chunks=state is None,
+                               compress=compress)
     spec = dict(bits.spec)
     spec["expand_batch"] = expand_batch
     if state is not None:

@@ -42,6 +42,12 @@ class ClusterConfig:
     the default so existing runs stay byte-identical on disk and in
     STATS.  exchange="pipelined" opts into overlapped produce/apply (and
     thread-parallel workers in inline mode).
+
+    wire_compress=True zlib-frames each sealed bucket payload on the
+    mailbox wires (tcp/loopback) — order-preserving, receiver
+    auto-detects, so a compressing sender interoperates with any
+    receiver.  The fs wire rejects it: its on-disk bucket layout is a
+    byte-compatibility contract (docs/transports.md).
     """
 
     nshards: int = 1
@@ -52,6 +58,7 @@ class ClusterConfig:
     runtime: Optional[object] = None       # adopt an existing ShardRuntime
     timeout: float = 600.0
     host: str = "127.0.0.1"
+    wire_compress: bool = False
 
     def resolved_exchange(self) -> str:
         return self.exchange if self.exchange is not None else "barrier"
@@ -70,6 +77,11 @@ class ClusterConfig:
                 f"ClusterConfig.mode={self.mode!r}: choose from {_MODES}")
         if self.nshards < 1:
             raise ValueError(f"ClusterConfig.nshards={self.nshards} < 1")
+        if self.wire_compress and self.transport == "fs":
+            raise ValueError(
+                "ClusterConfig: wire_compress=True needs a mailbox wire "
+                "(transport='tcp' or 'loopback') — the fs wire's on-disk "
+                "bucket layout is a byte-compatibility contract")
         if self.transport == "loopback" and self.mode == "spawn":
             raise ValueError(
                 "ClusterConfig: transport='loopback' is the in-process wire "
@@ -112,7 +124,8 @@ class ClusterConfig:
                           mode=self.mode, timeout=self.timeout,
                           transport=self.transport,
                           exchange=self.resolved_exchange(),
-                          host=self.host)
+                          host=self.host,
+                          wire_compress=self.wire_compress)
         return rt, True
 
 

@@ -158,12 +158,14 @@ class RunBuilder:
     """
 
     def __init__(self, tmp_dir: str, width: int, dtype="uint32",
-                 chunk_rows: int = 1 << 16, run_rows: int = 1 << 18):
+                 chunk_rows: int = 1 << 16, run_rows: int = 1 << 18,
+                 codec: Optional[str] = None):
         self.tmp_dir = tmp_dir
         self.width = width
         self.dtype = dtype
         self.chunk_rows = chunk_rows
         self.run_rows = run_rows
+        self.codec = codec
         self.runs: List[ChunkStore] = []
         self._buf: List[np.ndarray] = []
         self._nbuf = 0
@@ -184,7 +186,7 @@ class RunBuilder:
             take, rest = buf[:nrows], buf[nrows:]
             run = ChunkStore(f"{self.tmp_dir}/run{len(self.runs):04d}",
                              self.width, self.dtype, self.chunk_rows,
-                             fresh=True)
+                             fresh=True, codec=self.codec)
             run.append(sort_rows(np.asarray(take)))
             run.flush(mark_sorted=True)
             self.runs.append(run)
@@ -207,7 +209,7 @@ def make_runs(src: ChunkStore, tmp_dir: str, run_rows: int) -> List[ChunkStore]:
     it is counted in STATS and each emitted run is marked sorted.
     """
     builder = RunBuilder(tmp_dir, src.width, src.dtype, src.chunk_rows,
-                         run_rows)
+                         run_rows, codec=src.codec)
     for chunk in src.iter_chunks():
         builder.add(np.asarray(chunk))
     return builder.finish()
@@ -326,6 +328,13 @@ class MembershipProbe:
     forward and each chunk is loaded at most once per pass. Chunks whose
     manifest ``[min, max]`` range cannot intersect the current window are
     skipped without touching disk (STATS["chunks_pruned"]).
+
+    Compressed stores get one level finer: a chunk's skip index
+    (disk/codec.py) is binary-searched and only the blocks intersecting
+    the query window are decoded.  The ``chunks_probed``/
+    ``chunks_pruned`` ledgers count identically either way — the
+    compressed ≡ uncompressed budget contract; block-level savings book
+    under the separate ``codec`` namespace.
     """
 
     def __init__(self, store: ChunkStore):
@@ -339,6 +348,7 @@ class MembershipProbe:
         self._i = 0
         self._cached_i = -1
         self._cached_keys: Optional[np.ndarray] = None
+        self._cached_reader = None
 
     def _keys(self, i: int) -> np.ndarray:
         if self._cached_i != i:
@@ -347,14 +357,31 @@ class MembershipProbe:
             STATS["chunks_probed"] += 1
         return self._cached_keys
 
+    def _reader(self, i: int):
+        if self._cached_i != i:
+            self._cached_reader = self.store.key_reader(i)
+            self._cached_i = i
+            STATS["chunks_probed"] += 1
+        return self._cached_reader
+
     def _range(self, i: int):
         return self.store.chunk_range(i)    # always present: keyed store
+
+    @staticmethod
+    def _q64(qkeys: np.ndarray) -> np.ndarray:
+        """Byte keys → the uint64 key space of the compressed skip index
+        (same order: big-endian bytes compare like the packed integer)."""
+        w = qkeys.dtype.itemsize
+        return np.frombuffer(qkeys.tobytes(),
+                             ">u4" if w == 4 else ">u8").astype(np.uint64)
 
     def contains(self, qkeys: np.ndarray) -> np.ndarray:
         member = np.zeros(qkeys.shape[0], bool)
         if not qkeys.shape[0]:
             return member
         lo, hi = bytes(qkeys[0]), bytes(qkeys[-1])
+        compressed = self.store.codec == "keys"
+        q64 = self._q64(qkeys) if compressed else None
         n = self.store.n_chunks
         while self._i < n:
             rmin, rmax = self._range(self._i)
@@ -367,10 +394,20 @@ class MembershipProbe:
                 break
             # Both sides are sorted: binary-search membership, no re-sorting
             # (np.isin would sort both arrays on every call).
-            ck = self._keys(self._i)
-            pos = np.searchsorted(ck, qkeys)
-            inb = pos < ck.shape[0]
-            member[inb] |= ck[pos[inb]] == qkeys[inb]
+            if compressed:
+                # Decode only the skip-index blocks the window touches;
+                # every stored key in [lo, hi] lives in one of them, so
+                # membership over the decoded span is exact.
+                rdr = self._reader(self._i)
+                ck = rdr.keys_between(int(q64[0]), int(q64[-1]))
+                pos = np.searchsorted(ck, q64)
+                inb = pos < ck.shape[0]
+                member[inb] |= ck[pos[inb]] == q64[inb]
+            else:
+                ck = self._keys(self._i)
+                pos = np.searchsorted(ck, qkeys)
+                inb = pos < ck.shape[0]
+                member[inb] |= ck[pos[inb]] == qkeys[inb]
             if rmax >= hi:                  # chunk may overlap the next window
                 break
             self._i += 1

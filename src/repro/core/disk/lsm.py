@@ -40,7 +40,8 @@ from .store import ChunkStore
 class SortedRunSet:
     def __init__(self, workdir: str, width: int, chunk_rows: int = 1 << 16,
                  max_runs: int = 8, name: str | None = None,
-                 policy: str = "full", size_ratio: int = 2):
+                 policy: str = "full", size_ratio: int = 2,
+                 codec: str | None = None):
         assert policy in ("full", "tiered"), policy
         self.workdir = workdir
         self.width = width
@@ -48,6 +49,11 @@ class SortedRunSet:
         self.max_runs = max_runs
         self.policy = policy
         self.size_ratio = size_ratio
+        # Compaction OUTPUT format.  Adopted/added runs keep whatever
+        # format their manifest claims (checkpoint-restored runs may
+        # differ — mixed run sets are fine, load_chunk decodes), but
+        # every merge this set performs re-encodes into ``codec``.
+        self.codec = codec
         self.name = name or f"runset_{uuid.uuid4().hex[:8]}"
         self.runs: List[ChunkStore] = []
         self._seq = 0
@@ -104,7 +110,8 @@ class SortedRunSet:
                       victims=len(victims)):
             merged = ChunkStore(
                 os.path.join(self.workdir, f"{self.name}.compact{self._seq}"),
-                self.width, chunk_rows=self.chunk_rows, fresh=True)
+                self.width, chunk_rows=self.chunk_rows, fresh=True,
+                codec=self.codec)
             self._seq += 1
             extsort.merge_runs(victims, merged, dedupe=True)
         victim_ids = {id(r) for r in victims}

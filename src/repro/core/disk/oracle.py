@@ -76,6 +76,7 @@ import numpy as np
 
 from .. import obs
 from . import faults
+from . import codec as _codec
 from .bitarray import UNSEEN, VALS_PER_BYTE, DiskBitArray
 from .buckets import block_owner_np
 from .passes import PassPlan
@@ -85,7 +86,9 @@ __all__ = ["OracleError", "DistanceOracle", "ShardedOracle",
 
 MANIFEST = "ORACLE"
 META = "META.json"
-FORMAT = 1
+FORMAT = 1                    # raw .npy chunk payloads (the original layout)
+FORMAT_COMPRESSED = 2         # RLE-coded .rmz chunk payloads (disk/codec.py)
+SUPPORTED_FORMATS = (FORMAT, FORMAT_COMPRESSED)
 _VDIR_RE = re.compile(r"^v(\d{6,})$")
 # Owner-function golden fingerprints are pinned for these shard counts at
 # publish time; ShardedOracle recomputes and compares at open (an
@@ -215,7 +218,8 @@ def publish_oracle(dst: str, n_states: int, start: np.ndarray,
                    codec: Optional[dict] = None,
                    workdir: Optional[str] = None,
                    expand_batch: int = 1 << 15,
-                   log_buf_rows: int = 1 << 20) -> dict:
+                   log_buf_rows: int = 1 << 20,
+                   compress: bool = False) -> dict:
     """Seal a completed search as an immutable versioned oracle artifact.
 
     Runs the mod-3 labeling BFS in a scratch :class:`DiskBitArray`
@@ -229,6 +233,15 @@ def publish_oracle(dst: str, n_states: int, start: np.ndarray,
     codec (e.g. ``{"space": "pancake", "n": 9, "ranking":
     "myrvold-ruskey"}``) so a consumer can reconstruct the right
     ``gen_neighbors`` / unrank for path queries.
+
+    ``compress=True`` seals the chunk payloads through the RLE codec of
+    ``disk/codec.py`` (``b*.rmz`` instead of ``b*.npy``) and bumps the
+    artifact format to :data:`FORMAT_COMPRESSED`.  The per-chunk sha256
+    fingerprints are always taken over the RAW packed bytes, so a
+    compressed and an uncompressed publish of the same run carry
+    identical fingerprints; a tampered compressed stream fails the codec
+    CRC before the fingerprint is even consulted.  FORMAT-1 artifacts are
+    byte-for-byte unaffected by this option existing.
     """
     n_states = int(n_states)
     start = np.asarray(start, np.int64).reshape(-1)
@@ -247,15 +260,21 @@ def publish_oracle(dst: str, n_states: int, start: np.ndarray,
         stage = vdir + ".tmp"
         shutil.rmtree(stage, ignore_errors=True)
         os.makedirs(stage)
+        fmt = FORMAT_COMPRESSED if compress else FORMAT
         chunk_sha = {}
         for c in range(bits.n_chunks):
             packed = np.load(bits._chunk_path(c))
             chunk_sha[str(c)] = _sha256_bytes(packed.tobytes())
-            np.save(os.path.join(stage, f"b{c:06d}.npy"), packed)
+            if compress:
+                enc = _codec.encode_rle2(packed, tag="oracle")
+                with open(os.path.join(stage, f"b{c:06d}.rmz"), "wb") as f:
+                    f.write(enc)
+            else:
+                np.save(os.path.join(stage, f"b{c:06d}.npy"), packed)
         probe = np.linspace(0, n_states - 1,
                             num=min(9, n_states)).astype(np.int64)
         meta = {
-            "format": FORMAT,
+            "format": fmt,
             "kind": "distance_oracle_mod3",
             "version": version,
             "n_states": n_states,
@@ -270,6 +289,8 @@ def publish_oracle(dst: str, n_states: int, start: np.ndarray,
                 str(ns): block_owner_np(probe, n_states, ns).tolist()
                 for ns in _GOLDEN_NSHARDS},
         }
+        if compress:        # FORMAT-1 METAs never carry the key
+            meta["chunk_codec"] = "rle2"
         meta_blob = json.dumps(meta, sort_keys=True).encode()
         # META lands last inside the stage: a sealed dir always carries it.
         with open(os.path.join(stage, META), "wb") as f:
@@ -282,7 +303,7 @@ def publish_oracle(dst: str, n_states: int, start: np.ndarray,
         def _point_manifest() -> None:
             tmp = os.path.join(dst, MANIFEST + ".tmp")
             with open(tmp, "w") as f:
-                json.dump({"format": FORMAT, "version": version,
+                json.dump({"format": fmt, "version": version,
                            "meta_sha256": _sha256_bytes(meta_blob)}, f)
             os.replace(tmp, os.path.join(dst, MANIFEST))
         faults.retry_io("oracle_publish", _point_manifest, version=version)
@@ -462,10 +483,23 @@ class DistanceOracle:
             raise OracleError(
                 f"META fingerprint mismatch for v{version:06d} — manifest "
                 "says someone rewrote the sealed META (tamper?)")
-        if meta.get("format") != FORMAT:
+        if meta.get("format") not in SUPPORTED_FORMATS:
             raise OracleError(
-                f"oracle format {meta.get('format')!r} != supported "
-                f"{FORMAT} — refusing to guess at the layout")
+                f"oracle format {meta.get('format')!r} is not one of the "
+                f"supported formats {SUPPORTED_FORMATS} — refusing to "
+                "guess at the layout (was this artifact published by a "
+                "newer release?)")
+        self._chunk_codec = meta.get("chunk_codec")
+        if meta["format"] == FORMAT_COMPRESSED:
+            if self._chunk_codec != "rle2":
+                raise OracleError(
+                    f"format-{FORMAT_COMPRESSED} oracle META names chunk "
+                    f"codec {self._chunk_codec!r}; this build only decodes "
+                    "'rle2'")
+        elif self._chunk_codec is not None:
+            raise OracleError(
+                f"format-{FORMAT} oracle META unexpectedly names a chunk "
+                f"codec ({self._chunk_codec!r}) — artifact inconsistent")
         if int(meta.get("version", -1)) != version:
             raise OracleError(
                 f"sealed dir v{version:06d} carries META version "
@@ -493,10 +527,10 @@ class DistanceOracle:
             except (OSError, ValueError, KeyError, TypeError):
                 raise OracleError(
                     f"corrupt oracle manifest {mpath}") from None
-            if manifest.get("format") != FORMAT:
+            if manifest.get("format") not in SUPPORTED_FORMATS:
                 raise OracleError(
-                    f"oracle manifest format {manifest.get('format')!r} != "
-                    f"supported {FORMAT}")
+                    f"oracle manifest format {manifest.get('format')!r} is "
+                    f"not one of the supported formats {SUPPORTED_FORMATS}")
         if version is None:
             if manifest is not None:
                 version = int(manifest["version"])
@@ -522,12 +556,26 @@ class DistanceOracle:
         return min(self.chunk_elems, self.n_states - c * self.chunk_elems)
 
     def _load_chunk(self, c: int) -> np.ndarray:
-        path = os.path.join(self._vdir, f"b{c:06d}.npy")
-        try:
-            packed = np.ascontiguousarray(np.load(path, mmap_mode="r"))
-        except (OSError, ValueError) as e:
-            raise OracleError(f"unreadable oracle chunk {path}: {e}"
-                              ) from None
+        if self._chunk_codec == "rle2":
+            path = os.path.join(self._vdir, f"b{c:06d}.rmz")
+            try:
+                with open(path, "rb") as f:
+                    buf = f.read()
+                packed = _codec.decode_rle2(buf, tag="oracle")
+            except OSError as e:
+                raise OracleError(f"unreadable oracle chunk {path}: {e}"
+                                  ) from None
+            except _codec.CodecError as e:
+                raise OracleError(
+                    f"oracle chunk {path} fails to decode ({e}) — "
+                    "tampered or torn; refusing to serve from it") from None
+        else:
+            path = os.path.join(self._vdir, f"b{c:06d}.npy")
+            try:
+                packed = np.ascontiguousarray(np.load(path, mmap_mode="r"))
+            except (OSError, ValueError) as e:
+                raise OracleError(f"unreadable oracle chunk {path}: {e}"
+                                  ) from None
         rows = -(-self._chunk_rows(c) // VALS_PER_BYTE)
         if packed.dtype != np.uint8 or packed.shape != (rows,):
             raise OracleError(

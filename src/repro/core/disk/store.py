@@ -28,6 +28,18 @@ chunk files past the manifest's ``n_chunks`` are invisible on reopen and
 will be overwritten. Producers call flush() at their durability points
 (end of an operation); mid-stream crash-recovery is explicitly not a
 goal of this scratch tier.
+
+Compressed stores (docs/compression.md)
+---------------------------------------
+``codec="keys"`` stores chunks varint-delta-compressed (disk/codec.py)
+instead of raw ``.npy`` — each chunk's rows must be internally sorted
+(run producers guarantee this; the encoder raises ``CodecError``
+otherwise).  The codec is a *store* property persisted in the manifest,
+so a reopened or checkpoint-restored store keeps its own format and a
+run set may mix compressed and uncompressed runs freely — ``load_chunk``
+decodes transparently.  Rows without a lossless uint64 key packing
+(width > 2, or non-4-byte-unsigned dtypes) silently degrade to raw —
+the when-not-to-compress rule.
 """
 from __future__ import annotations
 
@@ -38,7 +50,13 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from . import codec as _codec
 from . import faults
+
+
+def _write_bytes(path: str, buf: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(buf)
 
 
 def _lex_extreme_key(rows: np.ndarray, mode: str) -> bytes:
@@ -67,7 +85,8 @@ def row_keys(rows: np.ndarray) -> np.ndarray:
 
 class ChunkStore:
     def __init__(self, path: str, width: int, dtype="uint32",
-                 chunk_rows: int = 1 << 16, fresh: bool = False):
+                 chunk_rows: int = 1 << 16, fresh: bool = False,
+                 codec: Optional[str] = None):
         self.path = path
         self.width = width
         self.dtype = np.dtype(dtype)
@@ -77,6 +96,12 @@ class ChunkStore:
         os.makedirs(path, exist_ok=True)
         self._meta_path = os.path.join(path, "meta.json")
         self.sorted = False
+        assert codec in (None, "keys"), f"unknown store codec {codec!r}"
+        if codec == "keys" and not (
+                self.dtype.kind == "u" and self.dtype.itemsize == 4
+                and width <= _codec.max_packable_width()):
+            codec = None               # no lossless packing: raw fallback
+        self.codec = codec
         # Per-chunk (min_key, max_key) byte pairs; None entries for dtypes
         # without a defined byte-key order (anything but 4-byte unsigned).
         self._chunk_ranges: List[Optional[Tuple[bytes, bytes]]] = []
@@ -88,6 +113,17 @@ class ChunkStore:
             self.total_rows = meta["total_rows"]
             self.chunk_rows = meta["chunk_rows"]
             self.sorted = bool(meta.get("sorted", False))
+            # The manifest's codec is authoritative for existing chunks
+            # (a checkpoint-restored run keeps its own format regardless
+            # of what the resuming search would create fresh).  An
+            # unknown name is a format-version mismatch — fail loudly
+            # before a chunk is misread, not with a numpy parse error.
+            self.codec = meta.get("codec")
+            if self.codec not in (None, "keys"):
+                raise _codec.CodecError(
+                    f"store manifest {self._meta_path} names chunk codec "
+                    f"{self.codec!r}; this build only decodes 'keys' — "
+                    "artifact written by a newer format version?")
             self._chunk_ranges = [
                 (bytes.fromhex(r[0]), bytes.fromhex(r[1])) if r else None
                 for r in meta.get("chunk_ranges", [None] * self.n_chunks)]
@@ -130,9 +166,15 @@ class ChunkStore:
         buf = np.concatenate(self._buf, axis=0) if len(self._buf) > 1 else self._buf[0]
         chunk, rest = buf[:nrows], buf[nrows:]
         # Whole-file rewrite → idempotent → safe under transient retry.
-        faults.retry_io(
-            "chunk_flush",
-            lambda: np.save(self._chunk_path(self.n_chunks), chunk))
+        if self.codec == "keys":
+            enc = _codec.encode_keys(np.asarray(chunk), tag="extsort")
+            faults.retry_io(
+                "chunk_flush",
+                lambda: _write_bytes(self._chunk_path(self.n_chunks), enc))
+        else:
+            faults.retry_io(
+                "chunk_flush",
+                lambda: np.save(self._chunk_path(self.n_chunks), chunk))
         if self._keyed():
             self._chunk_ranges.append((_lex_extreme_key(chunk, "min"),
                                        _lex_extreme_key(chunk, "max")))
@@ -151,14 +193,17 @@ class ChunkStore:
         def _do() -> None:
             tmp = self._meta_path + ".tmp"
             with open(tmp, "w") as f:
-                json.dump({"width": self.width, "dtype": self.dtype.name,
-                           "chunk_rows": self.chunk_rows,
-                           "n_chunks": self.n_chunks,
-                           "total_rows": self.total_rows,
-                           "sorted": self.sorted,
-                           "chunk_ranges": [
-                               [r[0].hex(), r[1].hex()] if r else None
-                               for r in self._chunk_ranges]}, f)
+                meta = {"width": self.width, "dtype": self.dtype.name,
+                        "chunk_rows": self.chunk_rows,
+                        "n_chunks": self.n_chunks,
+                        "total_rows": self.total_rows,
+                        "sorted": self.sorted,
+                        "chunk_ranges": [
+                            [r[0].hex(), r[1].hex()] if r else None
+                            for r in self._chunk_ranges]}
+                if self.codec:      # absent == raw: old manifests unchanged
+                    meta["codec"] = self.codec
+                json.dump(meta, f)
             os.replace(tmp, self._meta_path)       # atomic
         faults.retry_io("meta_write", _do)
         self._meta_dirty = False
@@ -210,10 +255,23 @@ class ChunkStore:
 
     # -------------------------------------------------------------- read
     def _chunk_path(self, i: int) -> str:
-        return os.path.join(self.path, f"c{i:06d}.npy")
+        ext = "rmz" if self.codec else "npy"
+        return os.path.join(self.path, f"c{i:06d}.{ext}")
 
     def load_chunk(self, i: int) -> np.ndarray:
+        if self.codec == "keys":
+            with open(self._chunk_path(i), "rb") as f:
+                return _codec.decode_keys(f.read(), tag="extsort")
         return np.load(self._chunk_path(i), mmap_mode="r")
+
+    def key_reader(self, i: int) -> Optional["_codec.CompressedKeyReader"]:
+        """Skip-indexed lazy reader for a compressed chunk (None for raw
+        stores — callers fall back to :meth:`load_chunk`).  Lets probes
+        decode only the blocks a query window intersects."""
+        if self.codec != "keys":
+            return None
+        with open(self._chunk_path(i), "rb") as f:
+            return _codec.CompressedKeyReader(f.read(), tag="extsort")
 
     def chunk_range(self, i: int) -> Optional[Tuple[bytes, bytes]]:
         """(min_key, max_key) of chunk i, or None if the dtype is unkeyed."""

@@ -57,6 +57,7 @@ import numpy as np
 
 from .. import obs
 from . import faults
+from . import codec as _codec
 from .buckets import (TRANSPORT_STATS, BucketSender, BucketWriter,
                       _bucket_name, _done_name, cleanup_strays,
                       iter_incoming)
@@ -114,12 +115,17 @@ class Transport:
 
     def __init__(self, root: str, me: int, nshards: int,
                  abort: Optional[threading.Event] = None,
-                 timeout: float = 600.0):
+                 timeout: float = 600.0, wire_compress: bool = False):
         self.root = root
         self.me = int(me)
         self.nshards = int(nshards)
         self.abort = abort
         self.timeout = timeout
+        # Mailbox wires only: zlib-frame sealed payloads at publish.
+        # Receivers ALWAYS auto-detect (wire_decode passes plain payloads
+        # through), so the flag is a sender-side choice and mixed
+        # sender/receiver configurations interoperate.
+        self.wire_compress = bool(wire_compress)
 
     # ------------------------------------------------------------- sending
     def sender(self, spec: dict) -> BucketSender:
@@ -359,9 +365,14 @@ def _mailbox_recv(box: _Mailbox, kind: str, spec: dict, epoch: int, dst: int,
                     box.cond.wait(_POLL)
             for s, payloads in got:
                 for data in payloads:
+                    # Wire bytes are what traveled (possibly compressed);
+                    # wire_decode auto-detects and books the raw/stored
+                    # ratio in the codec ledger under tag "transport".
+                    wire_len = len(data)
+                    data = _codec.wire_decode(data)
                     raw = np.frombuffer(data, dtype=dt)
                     assert raw.size % width == 0, "torn bucket payload"
-                    TRANSPORT_STATS[f"{kind}_bytes_in"] += len(data)
+                    TRANSPORT_STATS[f"{kind}_bytes_in"] += wire_len
                     TRANSPORT_STATS[f"{kind}_buckets_in"] += 1
                     yield s, raw.reshape(-1, width)
             deadline = time.monotonic() + timeout
@@ -386,11 +397,13 @@ class _LoopbackSender(BucketSender):
 
     def __init__(self, store: LoopbackStore, name: str, src: int,
                  nshards: int, width: int, dtype="int64",
-                 capacity: Optional[int] = None, buf_rows: int = 1 << 15):
+                 capacity: Optional[int] = None, buf_rows: int = 1 << 15,
+                 wire_compress: bool = False):
         super().__init__(src, nshards, width, dtype=dtype,
                          capacity=capacity, buf_rows=buf_rows)
         self._store = store
         self._name = name
+        self._wire_compress = wire_compress
         self._pend: List[bytearray] = [bytearray() for _ in range(nshards)]
 
     def _append(self, dst: int, data: bytes) -> None:
@@ -405,7 +418,9 @@ class _LoopbackSender(BucketSender):
     def _publish(self, epoch: int, publish_done: bool) -> None:
         # The sealed flag IS the completion marker on this wire, published
         # in both modes (a mailbox receiver cannot scan for absence).
-        payloads = {d: bytes(b) for d, b in enumerate(self._pend) if b}
+        payloads = {d: (_codec.wire_encode(bytes(b)) if self._wire_compress
+                        else bytes(b))
+                    for d, b in enumerate(self._pend) if b}
 
         def _do():
             self._store.publish(self._name, epoch, self.src, payloads,
@@ -424,8 +439,10 @@ class LoopbackTransport(Transport):
     kind = "loopback"
 
     def __init__(self, root, me, nshards, store: LoopbackStore,
-                 abort=None, timeout: float = 600.0):
-        super().__init__(root, me, nshards, abort=abort, timeout=timeout)
+                 abort=None, timeout: float = 600.0,
+                 wire_compress: bool = False):
+        super().__init__(root, me, nshards, abort=abort, timeout=timeout,
+                         wire_compress=wire_compress)
         self.store = store
 
     def sender(self, spec: dict) -> _LoopbackSender:
@@ -433,7 +450,8 @@ class LoopbackTransport(Transport):
                                nshards=self.nshards,
                                width=spec["rec_width"],
                                dtype=spec["rec_dtype"],
-                               capacity=spec.get("capacity"))
+                               capacity=spec.get("capacity"),
+                               wire_compress=self.wire_compress)
 
     def recv(self, spec, epoch, srcs=None, *, live=False, ordered=True,
              timeout=None):
@@ -590,6 +608,8 @@ class _TcpSender(BucketSender):
             if os.path.exists(tmp):
                 with open(tmp, "rb") as f:
                     payload = f.read()
+            if payload and self._transport.wire_compress:
+                payload = _codec.wire_encode(payload)
 
             def _send(d=d, payload=payload, epoch=epoch):
                 with socket.create_connection(
@@ -614,8 +634,10 @@ class TcpTransport(Transport):
     kind = "tcp"
 
     def __init__(self, root, me, nshards, host: str = "127.0.0.1",
-                 abort=None, timeout: float = 600.0):
-        super().__init__(root, me, nshards, abort=abort, timeout=timeout)
+                 abort=None, timeout: float = 600.0,
+                 wire_compress: bool = False):
+        super().__init__(root, me, nshards, abort=abort, timeout=timeout,
+                         wire_compress=wire_compress)
         self.host = host
         self.peers: Optional[Dict[int, tuple]] = None
         # Node-local spool for pre-seal spills: under THIS shard's private
@@ -671,12 +693,18 @@ def make_transport(tspec: dict, me: int, nshards: int, root: str,
     """Build one shard's transport from its picklable spec
     (``{"kind": ..., "host": ...}`` — what crosses the spawn queue)."""
     kind = tspec.get("kind", "fs")
+    wire_compress = bool(tspec.get("wire_compress", False))
     if kind == "fs":
+        if wire_compress:
+            raise ValueError(
+                "wire_compress=True needs a mailbox wire (tcp/loopback) — "
+                "the fs bucket layout is a byte-compatibility contract")
         return FsTransport(root, me, nshards, abort=abort, timeout=timeout)
     if kind == "tcp":
         return TcpTransport(root, me, nshards,
                             host=tspec.get("host", "127.0.0.1"),
-                            abort=abort, timeout=timeout)
+                            abort=abort, timeout=timeout,
+                            wire_compress=wire_compress)
     if kind == "loopback":
         if store is None:
             raise ValueError(
@@ -684,6 +712,7 @@ def make_transport(tspec: dict, me: int, nshards: int, root: str,
                 "store — it only works with mode='inline' (spawn workers "
                 "live in other processes)")
         return LoopbackTransport(root, me, nshards, store, abort=abort,
-                                 timeout=timeout)
+                                 timeout=timeout,
+                                 wire_compress=wire_compress)
     raise ValueError(
         f"unknown transport kind {kind!r} (choose from {TRANSPORT_KINDS})")

@@ -1,0 +1,522 @@
+"""Compressed runs + bytes-budget v2, pinned differentially (disk/codec.py).
+
+Four contracts, per docs/compression.md:
+
+* Codec correctness — varint-delta ``keys`` chunks and ``rle2`` 2-bit
+  chunks round-trip exactly (property-based via the hypothesis shim,
+  plus deterministic edge cases), the skip index agrees with a plain
+  binary search, and every adversarial input — truncation, bit flips,
+  overlong varints, unknown codec ids — raises a loud
+  :class:`CodecError`, never wrong data.
+* Differential equivalence — compressed ≡ uncompressed on pancake
+  n ≤ 7 for BOTH engines × nshards {1, 2} × {spawn, inline}: identical
+  level counts and identical sort/merge/pass budgets (codec I/O is
+  booked separately, like ``ckpt_*``).  Kill-and-resume crosses the
+  compressed/uncompressed boundary in BOTH directions.
+* Backward compatibility — the committed pre-compression fixture
+  (sealed FORMAT-1 oracle artifact + mid-search checkpoint, generated
+  by the pre-codec tree) opens byte-identically; a format-version
+  mismatch is a loud structured error, not a KeyError.
+* Bytes actually drop — sorted-engine stored bytes per level at
+  pancake n = 7 shrink ≥ 2x with compression on (the acceptance pin).
+"""
+import hashlib
+import json
+import math
+import os
+import shutil
+import sys
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import ranking as R
+from repro.core.disk import (ChunkStore, CodecError, DistanceOracle,
+                             OracleError, breadth_first_search, codec,
+                             implicit_bfs)
+from repro.core.disk import bitarray as DBA
+from repro.core.disk import extsort
+from repro.core.disk.bitarray import DiskBitArray
+from repro.core.disk.config import CheckpointConfig, ClusterConfig
+
+sys.path.append(os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "examples"))
+from pancake_bfs import GenNextNp, start_code          # noqa: E402
+from pancake_bits import NeighborsNp                   # noqa: E402
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "pre_compression")
+
+N = 5
+TOTAL = math.factorial(N)
+START_ROWS = np.array([[start_code(N)]], np.uint32)
+START_RANK = int(R.rank_np(np.arange(N)[None, :])[0])
+
+
+# ============================================================ codec unit
+
+class TestKeysRoundTrip:
+    @pytest.mark.parametrize("n", [0, 1, 2, 7, codec.BLOCK_ROWS,
+                                   codec.BLOCK_ROWS + 1,
+                                   3 * codec.BLOCK_ROWS + 17])
+    def test_width1_round_trip(self, n):
+        rng = np.random.default_rng(n)
+        rows = np.sort(rng.integers(0, 1 << 32, size=n,
+                                    dtype=np.uint64)).astype(np.uint32)
+        rows = rows.reshape(-1, 1)
+        buf = codec.encode_keys(rows)
+        assert (codec.decode_keys(buf) == rows).all()
+
+    def test_width2_preserves_lex_order(self):
+        rng = np.random.default_rng(7)
+        rows = rng.integers(0, 1 << 32, size=(4096, 2), dtype=np.uint64)
+        rows = rows.astype(np.uint32)
+        order = np.lexsort((rows[:, 1], rows[:, 0]))
+        rows = rows[order]
+        assert (codec.decode_keys(codec.encode_keys(rows)) == rows).all()
+
+    def test_duplicates_survive(self):
+        rows = np.array([[3], [3], [3], [9], [9]], np.uint32)
+        assert (codec.decode_keys(codec.encode_keys(rows)) == rows).all()
+
+    def test_extreme_keys(self):
+        rows = np.array([[0, 0], [0, 1], [0xFFFFFFFF, 0xFFFFFFFF]],
+                        np.uint32)
+        assert (codec.decode_keys(codec.encode_keys(rows)) == rows).all()
+
+    def test_unsorted_input_raises(self):
+        rows = np.array([[5], [4]], np.uint32)
+        with pytest.raises(CodecError, match="not sorted"):
+            codec.encode_keys(rows)
+
+    def test_width3_has_no_packing(self):
+        with pytest.raises(CodecError, match="width"):
+            codec.encode_keys(np.zeros((4, 3), np.uint32))
+
+
+class TestRle2RoundTrip:
+    @pytest.mark.parametrize("packed", [
+        np.zeros(0, np.uint8),
+        np.zeros(1, np.uint8),
+        np.full(10_000, 0xFF, np.uint8),
+        np.arange(256, dtype=np.uint8),
+        np.repeat(np.array([0, 0xFF, 0, 0x55], np.uint8), [5000, 3, 1, 900]),
+    ])
+    def test_round_trip(self, packed):
+        assert (codec.decode_rle2(codec.encode_rle2(packed)) == packed).all()
+
+    def test_sparse_array_compresses_hard(self):
+        packed = np.zeros(1 << 16, np.uint8)
+        packed[123] = 0x40
+        buf = codec.encode_rle2(packed)
+        assert len(buf) < 64
+        assert (codec.decode_rle2(buf) == packed).all()
+
+
+class TestSkipIndex:
+    def _reader(self, keys):
+        rows = np.asarray(keys, np.uint64).astype(np.uint32).reshape(-1, 1)
+        return codec.CompressedKeyReader(
+            codec.encode_keys(rows, block_rows=16)), rows[:, 0]
+
+    def test_block_span_matches_binary_search(self):
+        rng = np.random.default_rng(3)
+        keys = np.sort(rng.integers(0, 1 << 20, size=500, dtype=np.uint64))
+        rdr, flat = self._reader(keys)
+        for lo, hi in [(0, 1 << 20), (5, 5), (100, 5000),
+                       (int(flat[0]), int(flat[0])),
+                       (int(flat[-1]), 1 << 20), (1 << 21, 1 << 22)]:
+            got = rdr.keys_between(lo, hi)
+            # Every key inside [lo, hi] must appear in the decoded span.
+            want = flat[(flat >= lo) & (flat <= hi)]
+            inside = got[(got >= lo) & (got <= hi)]
+            assert (inside == want.astype(np.uint64)).all(), (lo, hi)
+
+    def test_narrow_probe_skips_blocks(self):
+        rdr, _ = self._reader(np.arange(0, 4096, dtype=np.uint64))
+        before = codec.STATS["blocks_decoded"]
+        rdr.keys_between(17, 30)        # inside block 1 of 256
+        assert codec.STATS["blocks_decoded"] - before == 1
+
+    def test_all_rows_equals_input(self):
+        keys = np.sort(np.random.default_rng(9).integers(
+            0, 1 << 30, size=1000, dtype=np.uint64))
+        rdr, flat = self._reader(keys)
+        assert (rdr.all_keys() == flat.astype(np.uint64)).all()
+
+
+class TestAdversarial:
+    """Corrupt data always raises CodecError — never returns wrong rows."""
+
+    def _enc(self):
+        rows = np.arange(10_000, dtype=np.uint32).reshape(-1, 1)
+        return bytearray(codec.encode_keys(rows))
+
+    def test_truncated_stream(self):
+        buf = self._enc()
+        for cut in (3, 8, len(buf) // 2, len(buf) - 1):
+            with pytest.raises(CodecError):
+                codec.decode_keys(bytes(buf[:cut]))
+
+    def test_every_region_bit_flip_fails_loudly(self):
+        buf = self._enc()
+        # Flip a bit in each structural region: magic, codec id, header,
+        # skip index, payload, crc trailer.
+        for pos in (0, 4, 7, 40, len(buf) // 2, len(buf) - 2):
+            bad = bytearray(buf)
+            bad[pos] ^= 0x10
+            with pytest.raises(CodecError):
+                codec.decode_keys(bytes(bad))
+
+    def test_wrong_codec_id(self):
+        rows = np.arange(16, dtype=np.uint32).reshape(-1, 1)
+        buf = codec.encode_keys(rows)
+        with pytest.raises(CodecError, match="codec id"):
+            codec.decode_rle2(buf)
+
+    def test_overlong_varint_rejected(self):
+        # 11 continuation bytes: longer than any uint64 encoding.
+        stream = np.array([0x80] * 11 + [0x01], np.uint8)
+        with pytest.raises(CodecError, match="[Oo]verlong"):
+            codec._varint_decode(stream)
+
+    def test_redundant_zero_terminal_rejected(self):
+        # 0x80 0x00 re-encodes 0 in two bytes — non-canonical.
+        with pytest.raises(CodecError, match="overlong"):
+            codec._varint_decode(np.array([0x80, 0x00], np.uint8))
+
+    def test_uint64_overflow_rejected(self):
+        stream = np.array([0xFF] * 9 + [0x02], np.uint8)
+        with pytest.raises(CodecError, match="overflow"):
+            codec._varint_decode(stream)
+
+    def test_truncated_varint_rejected(self):
+        with pytest.raises(CodecError, match="truncated"):
+            codec._varint_decode(np.array([0x80], np.uint8))
+
+    def test_rle2_bit_flip(self):
+        buf = bytearray(codec.encode_rle2(np.full(4096, 0xFF, np.uint8)))
+        buf[len(buf) // 2] ^= 0x04
+        with pytest.raises(CodecError):
+            codec.decode_rle2(bytes(buf))
+
+    def test_wire_corrupt(self):
+        framed = bytearray(codec.wire_encode(b"x" * 1000))
+        framed[10] ^= 0xFF
+        with pytest.raises(CodecError, match="wire"):
+            codec.wire_decode(bytes(framed))
+
+    def test_wire_passthrough(self):
+        assert codec.wire_decode(b"plain payload") == b"plain payload"
+
+    def test_unknown_store_codec_fails_loudly(self, tmp_path):
+        st_ = ChunkStore(str(tmp_path / "s"), 1, codec="keys")
+        st_.append(np.arange(8, dtype=np.uint32).reshape(-1, 1))
+        st_.flush(mark_sorted=True)
+        meta = json.load(open(st_._meta_path))
+        meta["codec"] = "zstd-future"
+        json.dump(meta, open(st_._meta_path, "w"))
+        with pytest.raises(CodecError, match="format version"):
+            ChunkStore(str(tmp_path / "s"), 1)
+
+
+# =================================================== property-based (shim)
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=(1 << 64) - 1),
+                max_size=300))
+def test_prop_keys_round_trip_u64(vals):
+    keys = np.sort(np.array(vals, np.uint64))
+    rows = codec.u64_to_rows(keys, 2)
+    assert (codec.decode_keys(codec.encode_keys(rows)) == rows).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=255), max_size=400))
+def test_prop_rle2_round_trip(byte_vals):
+    packed = np.array(byte_vals, np.uint8)
+    assert (codec.decode_rle2(codec.encode_rle2(packed)) == packed).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=(1 << 32) - 1),
+                min_size=1, max_size=300),
+       st.integers(min_value=0, max_value=(1 << 32) - 1),
+       st.integers(min_value=0, max_value=(1 << 32) - 1))
+def test_prop_skip_index_consistent(vals, a, b):
+    lo, hi = min(a, b), max(a, b)
+    flat = np.sort(np.array(vals, np.uint64))
+    rdr = codec.CompressedKeyReader(
+        codec.encode_keys(flat.astype(np.uint32).reshape(-1, 1),
+                          block_rows=8))
+    got = rdr.keys_between(lo, hi)
+    want = flat[(flat >= lo) & (flat <= hi)]
+    inside = got[(got >= lo) & (got <= hi)]
+    assert (inside == want).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.binary(max_size=300))
+def test_prop_garbage_never_decodes_silently(blob):
+    """Arbitrary bytes either raise CodecError or (vanishingly unlikely)
+    carry a valid crc32 container — they never crash with a non-codec
+    error or return silently wrong shapes."""
+    for dec in (codec.decode_keys, codec.decode_rle2):
+        try:
+            dec(blob)
+        except CodecError:
+            pass
+
+
+# ============================================= differential BFS equivalence
+
+def run_sorted(wd, nshards=1, mode="inline", compress=False, **kw):
+    cc = (ClusterConfig(nshards=nshards, mode=mode) if nshards > 1
+          else None)
+    sizes, handle = breadth_first_search(
+        str(wd), START_ROWS, GenNextNp(N), width=1, chunk_rows=1 << 8,
+        cluster=cc, compress=compress, **kw)
+    handle.destroy()
+    return sizes
+
+
+def run_implicit(wd, nshards=1, mode="inline", compress=False, **kw):
+    cc = (ClusterConfig(nshards=nshards, mode=mode) if nshards > 1
+          else None)
+    sizes, bits = implicit_bfs(
+        str(wd), TOTAL, [START_RANK], NeighborsNp(N), chunk_elems=1 << 6,
+        cluster=cc, compress=compress, **kw)
+    bits.destroy()
+    return sizes
+
+
+ENGINES = {"sorted": run_sorted, "implicit": run_implicit}
+
+# The pass/row budgets that must be codec-blind.  Byte counters (which
+# legitimately shrink with compression) are deliberately absent.
+BUDGET_KEYS = {
+    "sorted": ("sort_passes", "rows_sorted", "merge_passes",
+               "sorts_skipped", "chunks_probed", "chunks_pruned"),
+    "implicit": ("rw_passes", "read_passes", "piggybacked_stages"),
+}
+
+
+@pytest.fixture(scope="module")
+def want():
+    import tempfile
+    with tempfile.TemporaryDirectory() as wd:
+        s = run_sorted(os.path.join(wd, "s"))
+        i = run_implicit(os.path.join(wd, "i"))
+    assert s == i and sum(s) == TOTAL
+    return s
+
+
+class TestDifferentialEquivalence:
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    @pytest.mark.parametrize("nshards,mode", [(1, "inline"), (2, "inline"),
+                                              (1, "spawn"), (2, "spawn")])
+    def test_compressed_equals_uncompressed(self, tmp_path, want, engine,
+                                            nshards, mode):
+        run = ENGINES[engine]
+
+        def measure(sub, compress):
+            extsort.reset_stats()
+            DBA.reset_stats()
+            sizes = run(tmp_path / sub, nshards=nshards, mode=mode,
+                        compress=compress)
+            return sizes, dict(extsort.STATS), dict(DBA.STATS)
+
+        s_raw, ext_raw, _ = measure("raw", False)
+        s_cmp, ext_cmp, _ = measure("cmp", True)
+        assert s_raw == s_cmp == want
+        for key in BUDGET_KEYS[engine]:
+            assert ext_raw[key] == ext_cmp[key], key
+
+    def test_implicit_array_pass_budget_codec_blind(self, tmp_path):
+        """sync/scan pass counts (not bytes) identical either way."""
+        DBA.reset_stats()
+        run_implicit(tmp_path / "raw", compress=False)
+        raw = dict(DBA.STATS)
+        DBA.reset_stats()
+        run_implicit(tmp_path / "cmp", compress=True)
+        cmp_ = dict(DBA.STATS)
+        for key in ("sync_passes", "scan_passes", "ops_applied"):
+            assert raw[key] == cmp_[key], key
+
+    @pytest.mark.parametrize("engine", ["sorted", "implicit"])
+    @pytest.mark.parametrize("first,second", [(False, True), (True, False)])
+    def test_kill_resume_crosses_codec_boundary(self, tmp_path, want,
+                                                engine, first, second):
+        """Checkpoint written by one format, resumed by the other —
+        both directions, level counts identical to uninterrupted."""
+        run = ENGINES[engine]
+        ckdir = str(tmp_path / "ck")
+        partial = run(tmp_path / "w1", compress=first,
+                      checkpoint=CheckpointConfig(dir=ckdir, every=1),
+                      max_levels=2)
+        assert partial == want[:3]
+        got = run(tmp_path / "w2", compress=second,
+                  checkpoint=CheckpointConfig(dir=ckdir, resume=True))
+        assert got == want
+
+    def test_sharded_kill_resume_crosses_boundary(self, tmp_path, want):
+        ckdir = str(tmp_path / "ck")
+        run_sorted(tmp_path / "w1", nshards=2, compress=False,
+                   checkpoint=CheckpointConfig(dir=ckdir, every=1),
+                   max_levels=2)
+        got = run_sorted(tmp_path / "w2", nshards=2, compress=True,
+                         checkpoint=CheckpointConfig(dir=ckdir, resume=True))
+        assert got == want
+
+
+class TestBytesActuallyDrop:
+    def test_sorted_n7_bytes_per_level_halve(self, tmp_path):
+        """The acceptance pin: pancake n=7 sorted-engine stored bytes
+        drop >= 2x with compression on (same levels, same budgets)."""
+        n = 7
+        start = np.array([[start_code(n)]], np.uint32)
+
+        def stored_bytes(sub, compress):
+            codec.reset_stats()
+            store_dir = tmp_path / sub
+            sizes, handle = breadth_first_search(
+                str(store_dir), start, GenNextNp(n), width=1,
+                chunk_rows=1 << 8, compress=compress)
+            total = 0
+            for root, _d, files in os.walk(store_dir):
+                for fn in files:
+                    if fn.endswith((".npy", ".rmz")):
+                        total += os.path.getsize(os.path.join(root, fn))
+            handle.destroy()
+            return sizes, total
+
+        sizes_raw, raw = stored_bytes("raw", False)
+        sizes_cmp, cmp_ = stored_bytes("cmp", True)
+        assert sizes_raw == sizes_cmp and sum(sizes_raw) == math.factorial(n)
+        ratio = raw / cmp_
+        assert ratio >= 2.0, f"compression ratio {ratio:.2f} < 2x"
+        # And the codec ledger agrees: raw >= 2x stored for extsort writes.
+        led_raw = codec.STATS.get("extsort_raw_bytes", 0)
+        led_st = codec.STATS.get("extsort_stored_bytes", 0)
+        assert led_raw >= 2 * led_st > 0
+
+    def test_rle2_snapshot_bytes_drop(self, tmp_path):
+        def chunk_bytes(root):
+            return sum(os.path.getsize(os.path.join(r, f))
+                       for r, _d, fs in os.walk(root) for f in fs
+                       if f.endswith((".npy", ".rmz")))
+
+        bits = DiskBitArray(str(tmp_path / "b"), 1 << 14, compress=True)
+        raw_bits = DiskBitArray(str(tmp_path / "r"), 1 << 14)
+        sz = chunk_bytes(tmp_path / "b")
+        raw_sz = chunk_bytes(tmp_path / "r")
+        assert 0 < sz * 10 < raw_sz  # all-UNSEEN: RLE collapses to ~nothing
+        bits.destroy()
+        raw_bits.destroy()
+
+
+# ================================================= backward-compat fixture
+
+def _fixture_sha():
+    with open(os.path.join(FIXTURE, "expected_sha256.json")) as f:
+        return json.load(f)
+
+
+def _walk_sha(root):
+    out = {}
+    for r, _d, files in os.walk(root):
+        for fn in sorted(files):
+            p = os.path.join(r, fn)
+            rel = os.path.relpath(p, root)
+            if rel == "expected_sha256.json":
+                continue
+            with open(p, "rb") as f:
+                out[rel] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+class Pancake4Gen:
+    """Raw-permutation pancake expansion, width 4 (the fixture's coding)."""
+
+    def __call__(self, rows):
+        rows = np.asarray(rows, np.uint32)
+        out = []
+        for r in rows:
+            for k in range(2, 5):
+                s = r.copy()
+                s[:k] = s[:k][::-1]
+                out.append(s)
+        return np.asarray(out, np.uint32)
+
+
+def _gen4_idx(idx):
+    import itertools
+    perms = np.array(list(itertools.permutations(range(4))), np.uint32)
+    rank = {tuple(p): i for i, p in enumerate(perms)}
+    idx = np.asarray(idx, np.int64)
+    out = np.empty((len(idx), 3), np.int64)
+    for i, r in enumerate(perms[idx]):
+        for j, k in enumerate(range(2, 5)):
+            s = r.copy()
+            s[:k] = s[:k][::-1]
+            out[i, j] = rank[tuple(s)]
+    return out
+
+
+class TestBackwardCompat:
+    def test_fixture_is_byte_identical(self):
+        """The committed artifact matches the sha manifest sealed at
+        generation time — git hasn't mangled it, and nothing in the
+        current tree rewrote it."""
+        assert _walk_sha(FIXTURE) == _fixture_sha()
+
+    def test_format1_oracle_opens_and_serves(self):
+        with DistanceOracle(os.path.join(FIXTURE, "oracle"),
+                            gen_neighbors=_gen4_idx) as oracle:
+            assert oracle.meta["format"] == 1
+            assert "chunk_codec" not in oracle.meta
+            q = np.arange(24, dtype=np.int64)
+            dist = oracle.distance(q)
+            assert dist.min() == 0 and int(dist[0]) == 0
+            counts = np.bincount(dist)
+            assert counts.tolist() == oracle.level_sizes
+        # Opening is read-only: every fixture byte unchanged.
+        assert _walk_sha(FIXTURE) == _fixture_sha()
+
+    def test_pre_compression_checkpoint_resumes_compressed(self, tmp_path):
+        """The fixture's mid-search FORMAT-raw checkpoint resumes under
+        compress=True — the cross-version boundary of docs/compression.md."""
+        ckdir = str(tmp_path / "ck")
+        shutil.copytree(os.path.join(FIXTURE, "ckpt"), ckdir)
+        start = np.arange(4, dtype=np.uint32).reshape(1, -1)
+        sizes, visited = breadth_first_search(
+            str(tmp_path / "w"), start, Pancake4Gen(), width=4,
+            compress=True,
+            checkpoint=CheckpointConfig(dir=ckdir, resume=True))
+        got = visited.read_all()
+        visited.destroy()
+        assert sum(sizes) == 24 and got.shape == (24, 4)
+        assert sizes[:3] == [1, 3, 6]      # the fixture's sealed prefix
+
+    def test_oracle_format_mismatch_is_structured(self, tmp_path):
+        src = os.path.join(FIXTURE, "oracle")
+        dst = str(tmp_path / "oracle")
+        shutil.copytree(src, dst)
+        man = json.load(open(os.path.join(dst, "ORACLE")))
+        man["format"] = 99
+        json.dump(man, open(os.path.join(dst, "ORACLE"), "w"))
+        with pytest.raises(OracleError, match="supported formats"):
+            DistanceOracle(dst)
+
+    def test_oracle_meta_format_mismatch_is_structured(self, tmp_path):
+        src = os.path.join(FIXTURE, "oracle")
+        dst = str(tmp_path / "oracle")
+        shutil.copytree(src, dst)
+        os.remove(os.path.join(dst, "ORACLE"))    # force crash-adoption
+        mp = os.path.join(dst, "v000001", "META.json")
+        meta = json.load(open(mp))
+        meta["format"] = 99
+        json.dump(meta, open(mp, "w"))
+        with pytest.raises(OracleError, match="supported formats"):
+            DistanceOracle(dst)
